@@ -1,0 +1,299 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows plus per-section summaries.
+
+  fig7_version_evolution : Hive v1-mode vs v3-mode over 13 SSB queries (§7.1)
+  table1_llap            : LLAP cache on/off total response time (§7.2)
+  fig8_federation        : MV native vs MV-in-Druid with pushdown (§7.3)
+  acid_at_par            : §8 claim — post-compaction ACID reads at par
+  q88_shared_work        : §7.1 claim — shared work optimizer speedup
+  kernel_micro           : Pallas kernels (interpret mode) vs jnp oracles
+  roofline_summary       : aggregates experiments/dryrun artifacts (§Roofline)
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def _rounded(rows):
+    """Row-set comparison tolerant of float accumulation order."""
+    return sorted(
+        tuple(round(x, 4) if isinstance(x, float) else x for x in r)
+        for r in rows
+    )
+
+
+def _fresh_ssb(scale=60_000, **session_cfg):
+    from benchmarks.ssb import load_ssb
+    from repro.core.session import Warehouse
+
+    wh = Warehouse(tempfile.mkdtemp(prefix="bench_wh_"))
+    load_ssb(wh, scale_rows=scale)
+    return wh
+
+
+V1_MODE = dict(  # Hive v1.2-ish: rule-based physical tweaks only
+    cbo=False, join_reorder=False, transitive_inference=False,
+    mv_rewriting=False, semijoin_reduction=False, shared_work=False,
+    result_cache=False, llap=False, reopt_mode="off",
+    broadcast_threshold_rows=0.0,
+)
+V3_MODE = dict(result_cache=False)  # everything else on (cache timed separately)
+
+
+def fig7_version_evolution():
+    from benchmarks.ssb import SSB_QUERIES
+
+    wh = _fresh_ssb()
+    t_v1, t_v3 = {}, {}
+    s1 = wh.session(**V1_MODE)
+    s3 = wh.session(**V3_MODE)
+    for name, sql in SSB_QUERIES.items():
+        r3 = s3.execute(sql)  # warm LLAP first (paper reports warm cache)
+        t0 = time.perf_counter()
+        r3 = s3.execute(sql)
+        t_v3[name] = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        r1 = s1.execute(sql)
+        t_v1[name] = time.perf_counter() - t0
+        assert _rounded(r1.rows) == _rounded(r3.rows), name
+        emit(f"fig7.{name}.v1", t_v1[name] * 1e6)
+        emit(f"fig7.{name}.v3", t_v3[name] * 1e6,
+             f"speedup={t_v1[name] / t_v3[name]:.2f}x")
+    total1, total3 = sum(t_v1.values()), sum(t_v3.values())
+    emit("fig7.total.v1", total1 * 1e6)
+    emit("fig7.total.v3", total3 * 1e6, f"speedup={total1 / total3:.2f}x")
+    return total1 / total3
+
+
+def table1_llap():
+    from benchmarks.ssb import SSB_QUERIES
+
+    wh = _fresh_ssb()
+    s_cont = wh.session(llap=False, result_cache=False)
+    s_llap = wh.session(llap=True, result_cache=False)
+    # containers: every query pays cold I/O; LLAP: warm decoded-chunk cache
+    t_c = 0.0
+    for sql in SSB_QUERIES.values():
+        t0 = time.perf_counter()
+        s_cont.execute(sql)
+        t_c += time.perf_counter() - t0
+    for sql in SSB_QUERIES.values():
+        s_llap.execute(sql)  # populate cache
+    t_l = 0.0
+    for sql in SSB_QUERIES.values():
+        t0 = time.perf_counter()
+        s_llap.execute(sql)
+        t_l += time.perf_counter() - t0
+    emit("table1.container_total", t_c * 1e6)
+    emit("table1.llap_total", t_l * 1e6, f"speedup={t_c / t_l:.2f}x")
+    c = wh.llap.counters
+    emit("table1.llap_cache_hits", c["cache_hits"],
+         f"misses={c['cache_misses']},stripes_skipped={c['stripes_skipped']}")
+    return t_c / t_l
+
+
+def fig8_federation():
+    from repro.core.acid import AcidTable
+
+    wh = _fresh_ssb(scale=60_000)
+    s = wh.session(result_cache=False)
+    # denormalized MV (the hortonworks SSB/Druid setup)
+    s.execute("""CREATE MATERIALIZED VIEW ssb_flat AS
+        SELECT d_year, c_region, s_region, p_category,
+               SUM(lo_revenue) AS sum_rev, SUM(lo_quantity) AS sum_qty
+        FROM lineorder, date_dim, customer, supplier, part
+        WHERE lo_orderdate = d_datekey AND lo_custkey = c_custkey
+          AND lo_suppkey = s_suppkey AND lo_partkey = p_partkey
+        GROUP BY d_year, c_region, s_region, p_category""")
+    queries = [
+        ("f8.q1", "SELECT d_year, SUM(sum_rev) r FROM ssb_flat"
+                  " WHERE c_region = 'ASIA' GROUP BY d_year ORDER BY d_year"),
+        ("f8.q2", "SELECT c_region, SUM(sum_rev) r FROM ssb_flat"
+                  " GROUP BY c_region ORDER BY r DESC LIMIT 3"),
+        ("f8.q3", "SELECT p_category, SUM(sum_qty) q FROM ssb_flat"
+                  " WHERE d_year >= 1995 GROUP BY p_category"
+                  " ORDER BY q DESC LIMIT 5"),
+    ]
+    native = {}
+    for name, sql in queries:
+        s.execute(sql)
+        t0 = time.perf_counter()
+        r = s.execute(sql)
+        native[name] = (time.perf_counter() - t0, _rounded(r.rows))
+        emit(f"{name}.native_mv", native[name][0] * 1e6)
+
+    # same MV contents stored in Druid; queries push down via Calcite (§6.2)
+    mv_desc = wh.hms.get_table("ssb_flat")
+    batch = AcidTable(mv_desc, wh.hms).read_all(
+        wh.hms.writeid_list("ssb_flat", wh.hms.get_snapshot()))
+    dr = wh.handlers.get("druid")
+    dr.store.create_datasource("ssb_flat_druid", batch)
+    s.execute("CREATE EXTERNAL TABLE ssb_flat_d STORED BY 'druid'"
+              " TBLPROPERTIES ('druid.datasource' = 'ssb_flat_druid')")
+    speedups = []
+    for name, sql in queries:
+        dsql = sql.replace("ssb_flat", "ssb_flat_d")
+        s.execute(dsql)
+        t0 = time.perf_counter()
+        r = s.execute(dsql)
+        dt = time.perf_counter() - t0
+        assert _rounded(r.rows) == native[name][1], name
+        speedups.append(native[name][0] / dt)
+        emit(f"{name}.druid_pushdown", dt * 1e6,
+             f"speedup={native[name][0] / dt:.2f}x,"
+             f"pushed={r.info.get('federated_pushdown')}")
+    return float(np.mean(speedups))
+
+
+def acid_at_par():
+    from repro.core.acid import AcidTable
+    from repro.core.compaction import compact_partition
+    from repro.core.session import Warehouse
+
+    wh = Warehouse(tempfile.mkdtemp(prefix="bench_acid_"))
+    s = wh.session(compaction_enabled=False, result_cache=False)
+    s.execute("CREATE TABLE t (k INT, v DOUBLE)")
+    rng = np.random.default_rng(0)
+    for i in range(30):  # many small transactions -> many delta dirs
+        vals = ", ".join(
+            f"({int(k)}, {float(v):.3f})"
+            for k, v in zip(rng.integers(0, 10_000, 2000),
+                            rng.uniform(0, 1, 2000)))
+        s.execute(f"INSERT INTO t VALUES {vals}")
+    s.execute("DELETE FROM t WHERE k < 500")
+    sql = "SELECT COUNT(*), SUM(v) FROM t WHERE k > 2000"
+
+    t0 = time.perf_counter()
+    for _ in range(3):
+        s.execute(sql)
+    pre = (time.perf_counter() - t0) / 3
+    tbl = AcidTable(wh.hms.get_table("t"), wh.hms)
+    compact_partition(tbl, tbl.desc.location, "major", wh.hms)
+    t0 = time.perf_counter()
+    for _ in range(3):
+        s.execute(sql)
+    post = (time.perf_counter() - t0) / 3
+    emit("acid.read_pre_compaction", pre * 1e6)
+    emit("acid.read_post_compaction", post * 1e6,
+         f"merge_on_read_overhead={pre / post:.2f}x")
+    return pre / post
+
+
+def q88_shared_work():
+    wh = _fresh_ssb()
+    # one query computing the same fact-dim subexpression several times (q88 style)
+    sql = """SELECT a.r1, b.r2, c.r3 FROM
+      (SELECT SUM(lo_revenue) r1 FROM lineorder, date_dim
+       WHERE lo_orderdate = d_datekey AND d_year = 1993) a,
+      (SELECT SUM(lo_revenue) r2 FROM lineorder, date_dim
+       WHERE lo_orderdate = d_datekey AND d_year = 1993) b,
+      (SELECT SUM(lo_revenue) r3 FROM lineorder, date_dim
+       WHERE lo_orderdate = d_datekey AND d_year = 1993) c"""
+    s_off = wh.session(shared_work=False, result_cache=False)
+    s_on = wh.session(shared_work=True, result_cache=False)
+    s_off.execute(sql)
+    s_on.execute(sql)
+    t0 = time.perf_counter()
+    r_off = s_off.execute(sql)
+    t_off = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    r_on = s_on.execute(sql)
+    t_on = time.perf_counter() - t0
+    assert r_off.rows == r_on.rows
+    emit("q88.shared_work_off", t_off * 1e6)
+    emit("q88.shared_work_on", t_on * 1e6, f"speedup={t_off / t_on:.2f}x")
+    return t_off / t_on
+
+
+def kernel_micro():
+    import jax.numpy as jnp
+
+    from repro.kernels.filter_eval.ops import filter_eval
+    from repro.kernels.hash_group.ops import hash_group
+    from repro.kernels.ssd_scan.ops import ssd_scan
+
+    rng = np.random.default_rng(0)
+    cols = [jnp.asarray(rng.uniform(0, 100, 16_384).astype(np.float32))
+            for _ in range(2)]
+    filter_eval(cols, (2, 1), (30.0, 70.0)).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(5):
+        filter_eval(cols, (2, 1), (30.0, 70.0)).block_until_ready()
+    emit("kernel.filter_eval", (time.perf_counter() - t0) / 5 * 1e6,
+         "interpret-mode (TPU target)")
+
+    codes = jnp.asarray(rng.integers(0, 128, 16_384).astype(np.int32))
+    vals = jnp.asarray(rng.uniform(0, 1, 16_384).astype(np.float32))
+    hash_group(codes, vals, 128)[0].block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(5):
+        hash_group(codes, vals, 128)[0].block_until_ready()
+    emit("kernel.hash_group", (time.perf_counter() - t0) / 5 * 1e6,
+         "one-hot MXU group-by")
+
+    x = jnp.asarray(rng.normal(size=(1, 512, 2, 16)).astype(np.float32)) * 0.1
+    dA = -jnp.abs(jnp.asarray(rng.normal(size=(1, 512, 2)).astype(np.float32))) * 0.1
+    Bm = jnp.asarray(rng.normal(size=(1, 512, 8)).astype(np.float32))
+    Cm = jnp.asarray(rng.normal(size=(1, 512, 8)).astype(np.float32))
+    ssd_scan(x, dA, Bm, Cm, chunk=64)[0].block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(3):
+        ssd_scan(x, dA, Bm, Cm, chunk=64)[0].block_until_ready()
+    emit("kernel.ssd_scan", (time.perf_counter() - t0) / 3 * 1e6,
+         "chunked SSD (interpret)")
+
+
+def roofline_summary():
+    d = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+    if not os.path.isdir(d):
+        print("roofline_summary: run `python -m repro.launch.dryrun --all"
+              " --both-meshes` first")
+        return
+    for name in sorted(os.listdir(d)):
+        if not name.endswith(".json") or "debug" in name:
+            continue
+        with open(os.path.join(d, name)) as f:
+            c = json.load(f)
+        rf = c["roofline"]
+        dom = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        frac = rf["compute_s"] / dom if dom else 0.0
+        emit(
+            f"roofline.{c['arch']}.{c['shape']}.{c['mesh']}",
+            dom * 1e6,
+            f"bound={rf['bottleneck']},compute_s={rf['compute_s']:.4f},"
+            f"memory_s={rf['memory_s']:.4f},collective_s={rf['collective_s']:.4f},"
+            f"roofline_frac={frac:.3f},MF/HF={rf['flops_ratio']:.3f}",
+        )
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    v1v3 = fig7_version_evolution()
+    llap = table1_llap()
+    fed = fig8_federation()
+    acid = acid_at_par()
+    sw = q88_shared_work()
+    kernel_micro()
+    roofline_summary()
+    print()
+    print(f"# paper-claims summary: v3-vs-v1 speedup {v1v3:.2f}x (paper: 4.6x avg),"
+          f" LLAP {llap:.2f}x (paper: 2.7x), federation {fed:.2f}x (paper: 1.6x),"
+          f" ACID merge-on-read overhead {acid:.2f}x (paper: ~at par post-compaction),"
+          f" shared-work {sw:.2f}x (paper q88: 2.7x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Storage-handler interface (paper §6.1).
+
+A handler consists of (i) an *input format* — how to read (and split) data
+from the external engine, (ii) an *output format* — how to write to it,
+(iii) a *SerDe* translating between Hive's internal columnar representation
+and the engine's, and (iv) a *metastore hook* receiving notifications for
+transactions against HMS (table creation, row inserts, ...).
+
+The minimum usable handler implements the input format + deserializer; a
+handler that supports Calcite-generated pushdown additionally accepts a
+``pushed_query`` (engine-native query object) in its input format and may
+split it into parallel sub-queries (paper §6.2).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..metastore import TableDesc
+from ..runtime.vector import VectorBatch
+
+
+class SerDe:
+    """Serializer/deserializer between Tahoe columns and engine rows."""
+
+    def serialize(self, batch: VectorBatch) -> List[dict]:
+        names = batch.column_names
+        return [dict(zip(names, row)) for row in batch.to_rows()]
+
+    def deserialize(self, rows: List[dict], dtypes: Optional[Dict[str, str]] = None) -> VectorBatch:
+        if not rows:
+            return VectorBatch({})
+        cols = {k: np.array([r[k] for r in rows]) for k in rows[0]}
+        return VectorBatch(cols)
+
+
+class StorageHandler:
+    """Base class; subclasses register under a handler name."""
+
+    name: str = "base"
+    serde: SerDe = SerDe()
+    supports_pushdown: bool = False
+
+    # ---- input format -------------------------------------------------------
+    def splits(self, table: TableDesc, pushed_query: Optional[dict]) -> List[object]:
+        """Work units for parallel reads; default: one split."""
+        return [None]
+
+    def read_split(self, table: TableDesc, split: object,
+                   pushed_query: Optional[dict]) -> VectorBatch:
+        raise NotImplementedError
+
+    def read(self, table: TableDesc, pushed_query: Optional[dict] = None) -> VectorBatch:
+        parts = [
+            self.read_split(table, s, pushed_query)
+            for s in self.splits(table, pushed_query)
+        ]
+        parts = [p for p in parts if p.num_rows or len(parts) == 1]
+        return VectorBatch.concat(parts) if parts else VectorBatch({})
+
+    # ---- output format -------------------------------------------------------
+    def write(self, table: TableDesc, batch: VectorBatch) -> None:
+        raise NotImplementedError(f"{self.name} handler is read-only")
+
+    # ---- schema inference (CREATE EXTERNAL TABLE without column list) --------
+    def infer_schema(self, props: Dict[str, str]) -> Optional[List[tuple]]:
+        return None
+
+    # ---- pushdown (paper §6.2) -------------------------------------------------
+    def try_pushdown(self, plan, table: TableDesc) -> Optional[dict]:
+        """Translate a plan subtree rooted over this table's scan into an
+        engine-native query; None if unsupported."""
+        return None
+
+    # ---- metastore hook --------------------------------------------------------
+    def metastore_hook(self):
+        return None
+
+
+class HandlerRegistry:
+    def __init__(self):
+        self._handlers: Dict[str, StorageHandler] = {}
+
+    def register(self, handler: StorageHandler, hms=None) -> None:
+        self._handlers[handler.name] = handler
+        hook = handler.metastore_hook()
+        if hook is not None and hms is not None:
+            hms.register_hook(hook)
+
+    def get(self, name: str) -> Optional[StorageHandler]:
+        # allow full class-style names like the paper's
+        # 'org.apache.hadoop.hive.druid.DruidStorageHandler'
+        if name in self._handlers:
+            return self._handlers[name]
+        for key, h in self._handlers.items():
+            if key in name.lower():
+                return h
+        return None
+
+    def as_dict(self) -> Dict[str, StorageHandler]:
+        return dict(self._handlers)

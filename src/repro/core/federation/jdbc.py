@@ -1,0 +1,224 @@
+"""JDBC storage handler (paper §6.2 "multiple engines with JDBC support").
+
+Calcite can generate SQL in many dialects; here the external RDBMS is an
+embedded sqlite3 database and the handler translates plan subtrees into SQL
+text pushed down over the "JDBC" connection.
+"""
+from __future__ import annotations
+
+import sqlite3
+import threading
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..metastore import TableDesc
+from ..optimizer import plan as P
+from ..runtime.vector import VectorBatch
+from ..sql import ast as A
+from .handler import StorageHandler
+
+
+class JdbcHandler(StorageHandler):
+    name = "jdbc"
+    supports_pushdown = True
+
+    def __init__(self, db_path: str = ":memory:"):
+        self.conn = sqlite3.connect(db_path, check_same_thread=False)
+        self._lock = threading.Lock()
+        self.queries_served: List[str] = []
+
+    # ---- external-side table management (for tests/benchmarks) ----------------
+    def load_table(self, name: str, batch: VectorBatch) -> None:
+        cols = batch.column_names
+        decls = ", ".join(f'"{c}" {_sqlite_type(batch.cols[c])}' for c in cols)
+        with self._lock:
+            self.conn.execute(f'DROP TABLE IF EXISTS "{name}"')
+            self.conn.execute(f'CREATE TABLE "{name}" ({decls})')
+            rows = batch.to_rows()
+            ph = ",".join("?" * len(cols))
+            self.conn.executemany(f'INSERT INTO "{name}" VALUES ({ph})',
+                                  [tuple(_py(v) for v in r) for r in rows])
+            self.conn.commit()
+
+    # ---- input format -----------------------------------------------------------
+    def read_split(self, table: TableDesc, split, pushed_query) -> VectorBatch:
+        remote = table.props.get("jdbc.table", table.name)
+        sql = pushed_query["sql"] if pushed_query else f'SELECT * FROM "{remote}"'
+        with self._lock:
+            cur = self.conn.execute(sql)
+            names = [d[0] for d in cur.description]
+            rows = cur.fetchall()
+        self.queries_served.append(sql)
+        if not rows:
+            return VectorBatch({n: np.empty(0) for n in names})
+        cols = {n: np.array([r[i] for r in rows]) for i, n in enumerate(names)}
+        return VectorBatch(cols)
+
+    def write(self, table: TableDesc, batch: VectorBatch) -> None:
+        remote = table.props.get("jdbc.table", table.name)
+        with self._lock:
+            existing = self.conn.execute(
+                "SELECT name FROM sqlite_master WHERE type='table' AND name=?",
+                (remote,),
+            ).fetchone()
+        if existing is None:
+            self.load_table(remote, batch)
+        else:
+            cols = batch.column_names
+            ph = ",".join("?" * len(cols))
+            with self._lock:
+                self.conn.executemany(
+                    f'INSERT INTO "{remote}" VALUES ({ph})',
+                    [tuple(_py(v) for v in r) for r in batch.to_rows()],
+                )
+                self.conn.commit()
+
+    def infer_schema(self, props: Dict[str, str]):
+        remote = props.get("jdbc.table")
+        if not remote:
+            return None
+        with self._lock:
+            rows = self.conn.execute(f'PRAGMA table_info("{remote}")').fetchall()
+        if not rows:
+            return None
+        m = {"INTEGER": "BIGINT", "REAL": "DOUBLE", "TEXT": "STRING"}
+        return [(r[1], m.get((r[2] or "TEXT").upper(), "STRING")) for r in rows]
+
+    # ---- SQL generation pushdown (paper §6.2 footnote 4) ---------------------------
+    def try_pushdown(self, plan: P.PlanNode, table: TableDesc) -> Optional[dict]:
+        node = plan
+        limit = None
+        order = []
+        if isinstance(node, P.Limit):
+            limit = node.n
+            node = node.input
+        if isinstance(node, P.Sort):
+            order = node.keys
+            node = node.input
+        agg = None
+        if isinstance(node, P.Aggregate) and not node.grouping_sets:
+            agg = node
+            node = node.input
+        projs = None
+        if isinstance(node, P.Project):
+            if not all(isinstance(e, A.Col) for e, _ in node.exprs):
+                return None
+            projs = node.exprs
+            node = node.input
+        filt = None
+        if isinstance(node, P.Filter):
+            filt = node.predicate
+            node = node.input
+        if not isinstance(node, P.FederatedScan) or node.table.name != table.name \
+           or node.pushed_query is not None:
+            return None
+        alias = node.alias
+        remote = table.props.get("jdbc.table", table.name)
+
+        def raw(q: str) -> str:
+            if projs is not None:
+                for e, n in projs:
+                    if n == q and isinstance(e, A.Col) and e.qualified != q:
+                        return raw(e.qualified)
+            return q.split(".", 1)[1] if q.startswith(alias + ".") else q
+
+        out_names: List[str] = []
+        if agg is not None:
+            sel = []
+            for k in agg.group_keys:
+                sel.append(f'"{raw(k)}"')
+                out_names.append(k)
+            for s in agg.aggs:
+                if s.distinct:
+                    return None
+                arg = f'"{raw(s.arg.qualified)}"' if s.arg is not None else "*"
+                sel.append(f"{s.fn.upper()}({arg})")
+                out_names.append(s.out_name)
+            group = ", ".join(f'"{raw(k)}"' for k in agg.group_keys)
+            sql = f'SELECT {", ".join(sel)} FROM "{remote}"'
+            if filt is not None:
+                w = _expr_to_sql(filt, raw)
+                if w is None:
+                    return None
+                sql += f" WHERE {w}"
+            if group:
+                sql += f" GROUP BY {group}"
+        else:
+            cols = [n for n in (projs and [n for _, n in projs] or node.output_names())]
+            sel = ", ".join(f'"{raw(c)}"' for c in cols)
+            out_names = cols
+            sql = f'SELECT {sel} FROM "{remote}"'
+            if filt is not None:
+                w = _expr_to_sql(filt, raw)
+                if w is None:
+                    return None
+                sql += f" WHERE {w}"
+        if order:
+            try:
+                terms = []
+                for k, d in order:
+                    idx = out_names.index(k) + 1
+                    terms.append(f"{idx} {'DESC' if d else 'ASC'}")
+                sql += " ORDER BY " + ", ".join(terms)
+            except ValueError:
+                return None
+        if limit is not None:
+            sql += f" LIMIT {limit}"
+        return {"sql": sql, "outputNames": out_names}
+
+
+def _expr_to_sql(e: A.Expr, raw) -> Optional[str]:
+    if isinstance(e, A.Col):
+        return f'"{raw(e.qualified)}"'
+    if isinstance(e, A.Lit):
+        if isinstance(e.value, str):
+            return "'" + e.value.replace("'", "''") + "'"
+        if e.value is None:
+            return "NULL"
+        if isinstance(e.value, bool):
+            return "1" if e.value else "0"
+        return repr(e.value)
+    if isinstance(e, A.BinOp):
+        l, r = _expr_to_sql(e.left, raw), _expr_to_sql(e.right, raw)
+        if l is None or r is None:
+            return None
+        op = {"AND": "AND", "OR": "OR", "=": "=", "!=": "<>", "LIKE": "LIKE"}.get(
+            e.op, e.op
+        )
+        return f"({l} {op} {r})"
+    if isinstance(e, A.UnOp):
+        v = _expr_to_sql(e.operand, raw)
+        return None if v is None else (f"(NOT {v})" if e.op == "NOT" else f"(-{v})")
+    if isinstance(e, A.Between):
+        v = _expr_to_sql(e.expr, raw)
+        lo = _expr_to_sql(e.low, raw)
+        hi = _expr_to_sql(e.high, raw)
+        if None in (v, lo, hi):
+            return None
+        neg = "NOT " if e.negated else ""
+        return f"({v} {neg}BETWEEN {lo} AND {hi})"
+    if isinstance(e, A.InList):
+        v = _expr_to_sql(e.expr, raw)
+        vals = [_expr_to_sql(x, raw) for x in e.values]
+        if v is None or None in vals:
+            return None
+        neg = "NOT " if e.negated else ""
+        return f"({v} {neg}IN ({', '.join(vals)}))"
+    return None
+
+
+def _sqlite_type(arr: np.ndarray) -> str:
+    return {"i": "INTEGER", "u": "INTEGER", "f": "REAL", "b": "INTEGER"}.get(
+        arr.dtype.kind, "TEXT"
+    )
+
+
+def _py(v):
+    if isinstance(v, (np.integer,)):
+        return int(v)
+    if isinstance(v, (np.floating,)):
+        return float(v)
+    if isinstance(v, np.str_):
+        return str(v)
+    return v

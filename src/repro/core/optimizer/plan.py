@@ -1,0 +1,368 @@
+"""Logical/physical plan algebra (paper §2 Fig. 2, §4).
+
+One algebra serves both roles (Calcite-style): the optimizer rewrites these
+nodes, then the task compiler (core/runtime/dag.py) breaks the tree into a
+DAG of executable tasks at exchange boundaries.
+
+Column naming convention: every node's ``output_names`` is a list of unique
+strings; bound `Col` expressions reference them by qualified name
+(``alias.column``) and projections introduce new names.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..metastore import TableDesc
+from ..sql import ast as A
+
+
+class PlanNode:
+    inputs: List["PlanNode"] = []
+
+    def output_names(self) -> List[str]:
+        raise NotImplementedError
+
+    def key(self) -> str:
+        """Structural identity — drives shared-work merging and result cache."""
+        raise NotImplementedError
+
+    def digest(self) -> str:
+        return hashlib.blake2b(self.key().encode(), digest_size=8).hexdigest()
+
+    def pretty(self, indent: int = 0) -> str:
+        head = " " * indent + self.describe()
+        return "\n".join([head] + [c.pretty(indent + 2) for c in self.inputs])
+
+    def describe(self) -> str:
+        return type(self).__name__
+
+
+@dataclass
+class RuntimeFilterSpec:
+    """Dynamic semijoin reducer (paper §4.6) attached to a Scan.
+
+    ``producer`` is a plan subtree emitting the filter column; at runtime the
+    DAG executes it first and ships {bloom, min/max, value set} to the scan.
+    """
+
+    producer: PlanNode
+    producer_column: str
+    target_column: str  # raw column name in the scanned table
+    kind: str  # 'partition' (dynamic partition pruning) or 'index' (bloom+minmax)
+
+    def key(self) -> str:
+        return f"rf({self.producer.key()},{self.producer_column},{self.target_column},{self.kind})"
+
+
+class Scan(PlanNode):
+    def __init__(
+        self,
+        table: TableDesc,
+        alias: str,
+        columns: Optional[List[str]] = None,  # raw column names to read
+        pushed_filter: Optional[A.Expr] = None,  # over raw (unqualified) cols
+        partition_filter: Optional[A.Expr] = None,
+        runtime_filters: Optional[List[RuntimeFilterSpec]] = None,
+        min_writeid: Optional[int] = None,  # incremental MV rebuild reads (§4.4)
+    ):
+        self.table = table
+        self.alias = alias
+        self.columns = columns or [c for c, _ in table.schema]
+        self.pushed_filter = pushed_filter
+        self.partition_filter = partition_filter
+        self.runtime_filters = runtime_filters or []
+        self.min_writeid = min_writeid
+        self.inputs = []
+
+    def output_names(self) -> List[str]:
+        return [f"{self.alias}.{c}" for c in self.columns]
+
+    def key(self) -> str:
+        pf = self.pushed_filter.key() if self.pushed_filter else ""
+        pp = self.partition_filter.key() if self.partition_filter else ""
+        rf = ",".join(r.key() for r in self.runtime_filters)
+        mw = f",minw={self.min_writeid}" if self.min_writeid else ""
+        return f"scan({self.table.name} as {self.alias},[{','.join(self.columns)}],{pf},{pp},{rf}{mw})"
+
+    def describe(self) -> str:
+        extra = []
+        if self.pushed_filter:
+            extra.append(f"filter={self.pushed_filter.key()}")
+        if self.partition_filter:
+            extra.append(f"partitions={self.partition_filter.key()}")
+        if self.runtime_filters:
+            extra.append(f"runtime_filters={len(self.runtime_filters)}")
+        return f"Scan[{self.table.name} as {self.alias}]" + (
+            " (" + ", ".join(extra) + ")" if extra else ""
+        )
+
+
+class FederatedScan(PlanNode):
+    """Scan against a storage handler, optionally with pushed computation
+    (paper §6.2): ``pushed_query`` is the handler-native query (e.g. Druid
+    JSON); ``pushed_plan_key`` keeps optimizer identity."""
+
+    def __init__(self, table: TableDesc, alias: str, columns: List[str],
+                 pushed_query: Optional[dict] = None,
+                 output_cols: Optional[List[str]] = None):
+        self.table = table
+        self.alias = alias
+        self.columns = columns
+        self.pushed_query = pushed_query
+        self._output_cols = output_cols
+        self.inputs = []
+
+    def output_names(self) -> List[str]:
+        if self._output_cols is not None:
+            return list(self._output_cols)
+        return [f"{self.alias}.{c}" for c in self.columns]
+
+    def key(self) -> str:
+        import json
+
+        pq = json.dumps(self.pushed_query, sort_keys=True) if self.pushed_query else ""
+        return f"fedscan({self.table.name} as {self.alias},{pq})"
+
+    def describe(self) -> str:
+        return f"FederatedScan[{self.table.name} via {self.table.handler}]" + (
+            f" pushed={self.pushed_query.get('queryType')}" if self.pushed_query else ""
+        )
+
+
+class Filter(PlanNode):
+    def __init__(self, input: PlanNode, predicate: A.Expr):
+        self.inputs = [input]
+        self.predicate = predicate
+
+    @property
+    def input(self):
+        return self.inputs[0]
+
+    def output_names(self):
+        return self.input.output_names()
+
+    def key(self):
+        return f"filter({self.predicate.key()},{self.input.key()})"
+
+    def describe(self):
+        return f"Filter[{self.predicate.key()}]"
+
+
+class Project(PlanNode):
+    def __init__(self, input: PlanNode, exprs: List[Tuple[A.Expr, str]]):
+        self.inputs = [input]
+        self.exprs = exprs  # (expr, output_name)
+
+    @property
+    def input(self):
+        return self.inputs[0]
+
+    def output_names(self):
+        return [n for _, n in self.exprs]
+
+    def key(self):
+        es = ",".join(f"{e.key()} as {n}" for e, n in self.exprs)
+        return f"project([{es}],{self.input.key()})"
+
+    def describe(self):
+        return f"Project[{', '.join(n for _, n in self.exprs)}]"
+
+
+class Join(PlanNode):
+    def __init__(
+        self,
+        left: PlanNode,
+        right: PlanNode,
+        kind: str,  # inner | left | semi | anti | cross
+        left_keys: List[str],
+        right_keys: List[str],
+        residual: Optional[A.Expr] = None,
+        strategy: Optional[str] = None,  # 'shuffle' | 'broadcast' (set by CBO)
+    ):
+        self.inputs = [left, right]
+        self.kind = kind
+        self.left_keys = left_keys
+        self.right_keys = right_keys
+        self.residual = residual
+        self.strategy = strategy
+
+    @property
+    def left(self):
+        return self.inputs[0]
+
+    @property
+    def right(self):
+        return self.inputs[1]
+
+    def output_names(self):
+        if self.kind in ("semi", "anti"):
+            return self.left.output_names()
+        return self.left.output_names() + self.right.output_names()
+
+    def key(self):
+        r = self.residual.key() if self.residual else ""
+        return (
+            f"join({self.kind},{self.left_keys},{self.right_keys},{r},"
+            f"{self.left.key()},{self.right.key()})"
+        )
+
+    def describe(self):
+        strat = f" [{self.strategy}]" if self.strategy else ""
+        return f"Join[{self.kind}{strat} {self.left_keys}={self.right_keys}" + (
+            f" residual={self.residual.key()}" if self.residual else ""
+        ) + "]"
+
+
+@dataclass
+class AggSpec:
+    fn: str  # sum | count | min | max | avg
+    arg: Optional[A.Expr]  # None for count(*)
+    distinct: bool
+    out_name: str
+
+    def key(self) -> str:
+        a = self.arg.key() if self.arg else "*"
+        return f"{self.fn}({'D' if self.distinct else ''}{a})->{self.out_name}"
+
+
+class Aggregate(PlanNode):
+    def __init__(
+        self,
+        input: PlanNode,
+        group_keys: List[str],  # input column names
+        aggs: List[AggSpec],
+        grouping_sets: Optional[List[List[str]]] = None,
+    ):
+        self.inputs = [input]
+        self.group_keys = group_keys
+        self.aggs = aggs
+        self.grouping_sets = grouping_sets
+
+    @property
+    def input(self):
+        return self.inputs[0]
+
+    def output_names(self):
+        return list(self.group_keys) + [a.out_name for a in self.aggs]
+
+    def key(self):
+        gs = f",{self.grouping_sets}" if self.grouping_sets else ""
+        return (
+            f"agg([{','.join(self.group_keys)}],"
+            f"[{','.join(a.key() for a in self.aggs)}]{gs},{self.input.key()})"
+        )
+
+    def describe(self):
+        return f"Aggregate[keys={self.group_keys} aggs={[a.key() for a in self.aggs]}]"
+
+
+class WindowOp(PlanNode):
+    def __init__(self, input: PlanNode, funcs: List[Tuple[A.WindowFunc, str]]):
+        self.inputs = [input]
+        self.funcs = funcs
+
+    @property
+    def input(self):
+        return self.inputs[0]
+
+    def output_names(self):
+        return self.input.output_names() + [n for _, n in self.funcs]
+
+    def key(self):
+        fs = ",".join(f"{w.key()} as {n}" for w, n in self.funcs)
+        return f"window([{fs}],{self.input.key()})"
+
+    def describe(self):
+        return f"Window[{', '.join(n for _, n in self.funcs)}]"
+
+
+class Sort(PlanNode):
+    def __init__(self, input: PlanNode, keys: List[Tuple[str, bool]]):
+        self.inputs = [input]
+        self.keys = keys  # (column name, descending)
+
+    @property
+    def input(self):
+        return self.inputs[0]
+
+    def output_names(self):
+        return self.input.output_names()
+
+    def key(self):
+        return f"sort({self.keys},{self.input.key()})"
+
+    def describe(self):
+        return f"Sort[{self.keys}]"
+
+
+class Limit(PlanNode):
+    def __init__(self, input: PlanNode, n: int):
+        self.inputs = [input]
+        self.n = n
+
+    @property
+    def input(self):
+        return self.inputs[0]
+
+    def output_names(self):
+        return self.input.output_names()
+
+    def key(self):
+        return f"limit({self.n},{self.input.key()})"
+
+    def describe(self):
+        return f"Limit[{self.n}]"
+
+
+class Union(PlanNode):
+    def __init__(self, inputs: List[PlanNode], all: bool = True):
+        self.inputs = list(inputs)
+        self.all = all
+
+    def output_names(self):
+        return self.inputs[0].output_names()
+
+    def key(self):
+        return f"union({self.all},[{','.join(i.key() for i in self.inputs)}])"
+
+    def describe(self):
+        return f"Union[{'ALL' if self.all else 'DISTINCT'}]"
+
+
+class ValuesNode(PlanNode):
+    def __init__(self, names: List[str], rows: List[list]):
+        self.names = names
+        self.rows = rows
+        self.inputs = []
+
+    def output_names(self):
+        return list(self.names)
+
+    def key(self):
+        return f"values({self.names},{self.rows})"
+
+    def describe(self):
+        return f"Values[{len(self.rows)} rows]"
+
+
+# ---------------------------------------------------------------------------
+# tree utilities
+# ---------------------------------------------------------------------------
+
+def walk_plan(node: PlanNode):
+    yield node
+    for i in node.inputs:
+        yield from walk_plan(i)
+    if isinstance(node, Scan):
+        for rf in node.runtime_filters:
+            yield from walk_plan(rf.producer)
+
+
+def find_scans(node: PlanNode) -> List[Scan]:
+    return [n for n in walk_plan(node) if isinstance(n, Scan)]
+
+
+def replace_child(parent: PlanNode, old: PlanNode, new: PlanNode) -> None:
+    parent.inputs = [new if c is old else c for c in parent.inputs]

@@ -1,0 +1,273 @@
+"""Tez-style DAG task compiler & scheduler (paper §2, §5).
+
+The task compiler breaks the physical operator tree into a DAG of executable
+tasks: pipelineable unary operators (filter/project/limit) fuse into their
+producer vertex; blocking operators (join, aggregate, sort, union, window)
+start new vertices.  Edges carry the data-movement type the engine would use
+(FORWARD / BROADCAST / SHUFFLE), which is what the distributed shard_map
+runtime maps onto jax.lax collectives.
+
+Scheduling runs vertices in dependency order on either throwaway "container"
+threads or the persistent LLAP executor pool (§5.1), with optional
+speculative re-execution of stragglers (the classic MapReduce/Tez
+mitigation; here a code path exercised in tests via an injectable delay).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Set
+
+import numpy as np
+
+from ..optimizer import plan as P
+from .exec import ExecContext, Executor
+from .vector import VectorBatch
+
+FORWARD, BROADCAST, SHUFFLE = "FORWARD", "BROADCAST", "SHUFFLE"
+
+
+class MaterializedNode(P.PlanNode):
+    """Vertex-input placeholder; filled with the upstream vertex's output."""
+
+    _counter = [0]
+
+    def __init__(self, names: List[str], tag: str):
+        self.names = names
+        self.tag = tag
+        self.batch: Optional[VectorBatch] = None
+        self.inputs = []
+
+    def output_names(self):
+        return list(self.names)
+
+    def key(self):
+        return f"materialized({self.tag})"
+
+    def describe(self):
+        return f"MaterializedEdge[{self.tag}]"
+
+
+@dataclass
+class Vertex:
+    vid: str
+    plan: P.PlanNode
+    deps: List[str] = field(default_factory=list)
+    edge_types: Dict[str, str] = field(default_factory=dict)  # dep vid -> type
+    feeds: Dict[str, MaterializedNode] = field(default_factory=dict)
+
+
+@dataclass
+class TaskDAG:
+    vertices: Dict[str, Vertex]
+    root: str
+
+    def topo_order(self) -> List[str]:
+        out, seen = [], set()
+
+        def visit(v):
+            if v in seen:
+                return
+            seen.add(v)
+            for d in self.vertices[v].deps:
+                visit(d)
+            out.append(v)
+
+        visit(self.root)
+        return out
+
+    def edge_summary(self) -> Dict[str, int]:
+        counts = {FORWARD: 0, BROADCAST: 0, SHUFFLE: 0}
+        for v in self.vertices.values():
+            for t in v.edge_types.values():
+                counts[t] += 1
+        return counts
+
+
+_BLOCKING = (P.Join, P.Aggregate, P.Sort, P.Union, P.WindowOp)
+
+
+def compile_dag(plan: P.PlanNode) -> TaskDAG:
+    """Break the operator tree into vertices.
+
+    Plans can be DAGs (shared-work reuse, semijoin producers referencing the
+    dimension subtree), so vertex construction is memoized per node object
+    and boundary placeholders are filled by tag at run time.
+    """
+    vertices: Dict[str, Vertex] = {}
+    built: Dict[int, str] = {}
+    counter = [0]
+
+    def new_vid() -> str:
+        counter[0] += 1
+        return f"v{counter[0]}"
+
+    def _edge_type(parent: P.PlanNode, input_idx: int) -> str:
+        if isinstance(parent, P.Join):
+            if parent.strategy == "broadcast" and input_idx == 1:
+                return BROADCAST
+            return SHUFFLE if parent.strategy == "shuffle" else FORWARD
+        if isinstance(parent, (P.Aggregate, P.Sort, P.WindowOp)):
+            return SHUFFLE
+        return FORWARD
+
+    def build(node: P.PlanNode) -> str:
+        if id(node) in built:
+            return built[id(node)]
+        vid = new_vid()
+        built[id(node)] = vid
+        vertex = Vertex(vid, node)
+        vertices[vid] = vertex
+        split(node, vertex, set())
+        # dependencies: every placeholder reachable in this vertex's subtree
+        deps = {}
+        for mn in _walk_materialized(node):
+            deps[mn.tag] = True
+        for rf_dep in vertex.feeds:
+            deps[rf_dep] = True
+        vertex.deps = list(deps)
+        return vid
+
+    def split(node: P.PlanNode, vertex: Vertex, visited) -> None:
+        if id(node) in visited or isinstance(node, MaterializedNode):
+            return
+        visited.add(id(node))
+        if isinstance(node, P.Scan):
+            # runtime-filter producers become upstream BROADCAST vertices
+            for rf in node.runtime_filters:
+                dep = build(rf.producer)
+                vertex.edge_types[dep] = BROADCAST
+                vertex.feeds[dep] = None  # dependency only; executed inline
+            return
+        for i, child in enumerate(node.inputs):
+            if isinstance(child, MaterializedNode):
+                vertex.edge_types.setdefault(child.tag, _edge_type(node, i))
+                continue
+            if isinstance(child, _BLOCKING) or isinstance(node, P.Join):
+                dep = build(child)
+                placeholder = MaterializedNode(child.output_names(), dep)
+                node.inputs[i] = placeholder
+                vertex.edge_types[dep] = _edge_type(node, i)
+            else:
+                split(child, vertex, visited)
+
+    root = build(plan)
+    return TaskDAG(vertices, root)
+
+
+def _walk_materialized(node: P.PlanNode, seen=None):
+    seen = seen if seen is not None else set()
+    if id(node) in seen:
+        return
+    seen.add(id(node))
+    if isinstance(node, MaterializedNode):
+        yield node
+        return
+    for c in node.inputs:
+        yield from _walk_materialized(c, seen)
+    if isinstance(node, P.Scan):
+        for rf in node.runtime_filters:
+            yield from _walk_materialized(rf.producer, seen)
+
+
+@dataclass
+class VertexMetrics:
+    vid: str
+    rows: int
+    seconds: float
+    speculated: bool = False
+
+
+class DAGScheduler:
+    def __init__(
+        self,
+        pool: Optional[ThreadPoolExecutor] = None,
+        speculative: bool = False,
+        straggler_factor: float = 4.0,
+        injected_delays: Optional[Dict[str, float]] = None,  # test hook
+    ):
+        self.pool = pool
+        self.speculative = speculative
+        self.straggler_factor = straggler_factor
+        self.injected_delays = injected_delays or {}
+        self.metrics: List[VertexMetrics] = []
+
+    def execute(self, dag: TaskDAG, ctx: ExecContext,
+                on_vertex_done: Optional[Callable] = None) -> VectorBatch:
+        own_pool = False
+        pool = self.pool
+        if pool is None:
+            pool = ThreadPoolExecutor(max_workers=4, thread_name_prefix="container")
+            own_pool = True
+        try:
+            results: Dict[str, VectorBatch] = {}
+            done: Set[str] = set()
+            order = dag.topo_order()
+            pending: Dict[str, Future] = {}
+            durations: List[float] = []
+            lock = threading.Lock()
+
+            def run_vertex(vid: str) -> VectorBatch:
+                if vid in self.injected_delays:
+                    time.sleep(self.injected_delays[vid])
+                v = dag.vertices[vid]
+                for mn in _walk_materialized(v.plan):
+                    mn.batch = results[mn.tag]
+                t0 = time.perf_counter()
+                ex = _VertexExecutor(ctx)
+                out = ex.execute(v.plan)
+                dt = time.perf_counter() - t0
+                with lock:
+                    durations.append(dt)
+                    self.metrics.append(VertexMetrics(vid, out.num_rows, dt))
+                return out
+
+            remaining = list(order)
+            while remaining or pending:
+                # launch every vertex whose deps are satisfied
+                for vid in list(remaining):
+                    v = dag.vertices[vid]
+                    if all(d in done for d in v.deps):
+                        pending[vid] = pool.submit(run_vertex, vid)
+                        remaining.remove(vid)
+                if not pending:
+                    raise RuntimeError("DAG deadlock (cyclic dependencies?)")
+                completed, _ = wait(list(pending.values()), return_when=FIRST_COMPLETED,
+                                    timeout=self._speculation_timeout(durations))
+                if not completed and self.speculative:
+                    # straggler: speculatively clone the slowest pending vertex
+                    vid = next(iter(pending))
+                    self.injected_delays.pop(vid, None)
+                    spec = pool.submit(run_vertex, vid)
+                    old = pending[vid]
+                    pending[vid] = spec
+                    old.cancel()
+                    with lock:
+                        self.metrics.append(VertexMetrics(vid, -1, 0.0, True))
+                    continue
+                for vid in list(pending):
+                    fut = pending[vid]
+                    if fut.done():
+                        results[vid] = fut.result()
+                        done.add(vid)
+                        del pending[vid]
+                        if on_vertex_done is not None:
+                            on_vertex_done(vid, results[vid])
+            return results[dag.root]
+        finally:
+            if own_pool:
+                pool.shutdown(wait=False)
+
+    def _speculation_timeout(self, durations: List[float]) -> Optional[float]:
+        if not self.speculative or not durations:
+            return None
+        med = sorted(durations)[len(durations) // 2]
+        return max(med * self.straggler_factor, 0.05)
+
+
+class _VertexExecutor(Executor):
+    def _exec_materializednode(self, node: MaterializedNode) -> VectorBatch:
+        assert node.batch is not None, f"edge {node.tag} not materialized"
+        return node.batch

@@ -1,0 +1,788 @@
+"""Vectorized plan execution (paper §5, [39]).
+
+A pipelined interpreter over `VectorBatch`es.  Every operator is vectorized:
+expressions evaluate to whole numpy column vectors; joins/aggregations use
+factorized key codes.  When the session enables the JAX path
+(``vectorized_jax``), predicate evaluation and grouped aggregation are routed
+through the jitted kernels in ``repro.kernels`` (Pallas on TPU, interpret
+mode on CPU).
+
+The executor also:
+  * records per-operator actual cardinalities (for §4.2 re-optimization),
+  * honors shared-work results (§4.5) via a per-query subplan cache,
+  * enforces a broadcast-join memory budget, raising ``MemoryPressureError``
+    to exercise the re-optimization path (§4.2).
+"""
+from __future__ import annotations
+
+import re as _re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..acid import AcidTable
+from ..bloomfilter import BloomFilter
+from ..metastore import Metastore, Snapshot, WriteIdList
+from ..optimizer import plan as P
+from ..sql import ast as A
+from ..storage import SargPredicate
+from .vector import ROWID_COL, WRITEID_COL, VectorBatch
+
+
+class ExecError(Exception):
+    pass
+
+
+class MemoryPressureError(ExecError):
+    """Simulates the runtime errors (§4.2) that trigger re-optimization."""
+
+
+class ExecContext:
+    def __init__(
+        self,
+        hms: Metastore,
+        snapshot: Snapshot,
+        config: Optional[dict] = None,
+        io=None,
+        handlers=None,
+    ):
+        self.hms = hms
+        self.snapshot = snapshot
+        self.config = config or {}
+        self.io = io
+        self.handlers = handlers or {}
+        self.op_stats: Dict[str, int] = {}  # plan key digest -> actual rows
+        self.shared_keys: set = set()  # filled by shared-work optimizer (§4.5)
+        self.subplan_cache: Dict[str, VectorBatch] = {}
+        self.runtime_filter_cache: Dict[str, dict] = {}
+        self._widlists: Dict[str, WriteIdList] = {}
+
+    def widlist(self, table: str) -> WriteIdList:
+        if table not in self._widlists:
+            self._widlists[table] = self.hms.writeid_list(table, self.snapshot)
+        return self._widlists[table]
+
+    def record(self, node: P.PlanNode, rows: int) -> None:
+        self.op_stats[node.digest()] = rows
+
+
+# ===========================================================================
+# expression evaluation
+# ===========================================================================
+_NULL_STR = ""
+
+
+def _lookup(batch: VectorBatch, col: A.Col) -> np.ndarray:
+    key = col.qualified
+    if key in batch.cols:
+        return batch.cols[key]
+    if col.table is None:
+        # unqualified: match unique suffix
+        hits = [k for k in batch.cols if k == col.name or k.endswith("." + col.name)]
+        if len(hits) == 1:
+            return batch.cols[hits[0]]
+        if len(hits) > 1:
+            raise ExecError(f"ambiguous column {col.name}: {hits}")
+    raise ExecError(f"column {key} not found in {list(batch.cols)[:12]}...")
+
+
+def _broadcast(value, n: int) -> np.ndarray:
+    if value is None:
+        return np.full(n, np.nan)
+    if isinstance(value, bool):
+        return np.full(n, value, dtype=bool)
+    if isinstance(value, int):
+        return np.full(n, value, dtype=np.int64)
+    if isinstance(value, float):
+        return np.full(n, value, dtype=np.float64)
+    return np.full(n, value, dtype=f"U{max(len(str(value)), 1)}")
+
+
+def _is_null_mask(v: np.ndarray) -> np.ndarray:
+    if v.dtype.kind == "f":
+        return np.isnan(v)
+    if v.dtype.kind in ("U", "S"):
+        return v == _NULL_STR if False else np.zeros(len(v), dtype=bool)
+    return np.zeros(len(v), dtype=bool)
+
+
+def _like_to_regex(pattern: str) -> str:
+    out = []
+    for ch in pattern:
+        if ch == "%":
+            out.append(".*")
+        elif ch == "_":
+            out.append(".")
+        else:
+            out.append(_re.escape(ch))
+    return "^" + "".join(out) + "$"
+
+
+_SCALAR_FUNCS = {}
+
+
+def scalar_fn(name):
+    def deco(f):
+        _SCALAR_FUNCS[name] = f
+        return f
+    return deco
+
+
+@scalar_fn("abs")
+def _f_abs(args):
+    return np.abs(args[0])
+
+
+@scalar_fn("floor")
+def _f_floor(args):
+    return np.floor(args[0])
+
+
+@scalar_fn("ceil")
+def _f_ceil(args):
+    return np.ceil(args[0])
+
+
+@scalar_fn("round")
+def _f_round(args):
+    d = int(args[1][0]) if len(args) > 1 else 0
+    return np.round(args[0], d)
+
+
+@scalar_fn("lower")
+def _f_lower(args):
+    return np.char.lower(args[0].astype(str))
+
+
+@scalar_fn("upper")
+def _f_upper(args):
+    return np.char.upper(args[0].astype(str))
+
+
+@scalar_fn("length")
+def _f_length(args):
+    return np.char.str_len(args[0].astype(str)).astype(np.int64)
+
+
+@scalar_fn("substr")
+def _f_substr(args):
+    start = int(args[1][0]) - 1
+    ln = int(args[2][0]) if len(args) > 2 else None
+    s = args[0].astype(str)
+    return np.array([x[start:start + ln] if ln else x[start:] for x in s])
+
+
+@scalar_fn("coalesce")
+def _f_coalesce(args):
+    out = args[0].copy()
+    for nxt in args[1:]:
+        m = _is_null_mask(out) | (np.isnan(out) if out.dtype.kind == "f" else False)
+        out = np.where(m, nxt, out)
+    return out
+
+
+@scalar_fn("extract")
+def _f_extract(args):  # extract(year, datestr) simplified
+    part = args[0]
+    vals = args[1].astype(str)
+    idx = {"year": slice(0, 4), "month": slice(5, 7), "day": slice(8, 10)}[str(part[0]).lower()]
+    return np.array([int(v[idx]) if len(v) >= 10 else -1 for v in vals], dtype=np.int64)
+
+
+@scalar_fn("year")
+def _f_year(args):
+    return np.array([int(str(v)[:4]) if len(str(v)) >= 4 else -1 for v in args[0]],
+                    dtype=np.int64)
+
+
+def eval_expr(e: A.Expr, batch: VectorBatch, ctx: Optional[ExecContext] = None) -> np.ndarray:
+    n = batch.num_rows
+    if isinstance(e, A.Col):
+        return _lookup(batch, e)
+    if isinstance(e, A.Lit):
+        return _broadcast(e.value, n)
+    if isinstance(e, A.BinOp):
+        if e.op == "AND":
+            l = eval_expr(e.left, batch, ctx).astype(bool)
+            if not l.any():
+                return l
+            r = eval_expr(e.right, batch, ctx).astype(bool)
+            return l & r
+        if e.op == "OR":
+            l = eval_expr(e.left, batch, ctx).astype(bool)
+            r = eval_expr(e.right, batch, ctx).astype(bool)
+            return l | r
+        l = eval_expr(e.left, batch, ctx)
+        r = eval_expr(e.right, batch, ctx)
+        if e.op == "LIKE":
+            rx = _re.compile(_like_to_regex(str(r[0]) if len(r) else ""))
+            return np.array([bool(rx.match(str(x))) for x in l])
+        if e.op == "||":
+            return np.char.add(l.astype(str), r.astype(str))
+        if l.dtype.kind in ("U", "S") or r.dtype.kind in ("U", "S"):
+            l, r = l.astype(str), r.astype(str)
+        ops = {
+            "+": np.add, "-": np.subtract, "*": np.multiply,
+            "%": np.mod,
+            "=": np.equal, "!=": np.not_equal,
+            "<": np.less, "<=": np.less_equal,
+            ">": np.greater, ">=": np.greater_equal,
+        }
+        if e.op == "/":
+            with np.errstate(divide="ignore", invalid="ignore"):
+                return np.divide(l.astype(np.float64), r.astype(np.float64))
+        return ops[e.op](l, r)
+    if isinstance(e, A.UnOp):
+        v = eval_expr(e.operand, batch, ctx)
+        return ~v.astype(bool) if e.op == "NOT" else -v
+    if isinstance(e, A.Func):
+        if e.name in _SCALAR_FUNCS:
+            args = [eval_expr(a, batch, ctx) for a in e.args]
+            return _SCALAR_FUNCS[e.name](args)
+        raise ExecError(f"unknown scalar function {e.name}")
+    if isinstance(e, A.Case):
+        result = None
+        assigned = np.zeros(n, dtype=bool)
+        for cond, val in e.whens:
+            m = eval_expr(cond, batch, ctx).astype(bool) & ~assigned
+            v = eval_expr(val, batch, ctx)
+            if result is None:
+                result = np.zeros(n, dtype=v.dtype) if v.dtype.kind != "U" else np.full(n, "", dtype=f"U64")
+                if v.dtype.kind == "f" or result.dtype.kind == "f":
+                    result = result.astype(np.float64) + np.nan
+            result = np.where(m, v, result)
+            assigned |= m
+        if e.otherwise is not None:
+            v = eval_expr(e.otherwise, batch, ctx)
+            result = np.where(~assigned, v, result)
+        return result
+    if isinstance(e, A.InList):
+        v = eval_expr(e.expr, batch, ctx)
+        vals = [x.value for x in e.values]  # type: ignore
+        if v.dtype.kind in ("U", "S"):
+            vals = [str(x) for x in vals]
+        m = np.isin(v, np.array(vals))
+        return ~m if e.negated else m
+    if isinstance(e, A.Between):
+        v = eval_expr(e.expr, batch, ctx)
+        lo = eval_expr(e.low, batch, ctx)
+        hi = eval_expr(e.high, batch, ctx)
+        m = (v >= lo) & (v <= hi)
+        return ~m if e.negated else m
+    if isinstance(e, A.IsNull):
+        v = eval_expr(e.expr, batch, ctx)
+        m = _is_null_mask(v)
+        return ~m if e.negated else m
+    if isinstance(e, A.Cast):
+        v = eval_expr(e.expr, batch, ctx)
+        t = e.to_type.upper()
+        if t.startswith(("INT", "BIGINT")):
+            return v.astype(np.float64).astype(np.int64) if v.dtype.kind != "U" else np.array([int(float(x)) for x in v], dtype=np.int64)
+        if t.startswith(("DOUBLE", "FLOAT", "DECIMAL", "REAL")):
+            return v.astype(np.float64)
+        return v.astype(str)
+    raise ExecError(f"cannot evaluate {type(e).__name__}")
+
+
+# ===========================================================================
+# factorized keys (shared by join/aggregate/window)
+# ===========================================================================
+def _factorize_pair(l: np.ndarray, r: np.ndarray) -> Tuple[np.ndarray, np.ndarray, int]:
+    if l.dtype.kind in ("U", "S") or r.dtype.kind in ("U", "S"):
+        l, r = l.astype(str), r.astype(str)
+    elif l.dtype != r.dtype:
+        l, r = l.astype(np.float64), r.astype(np.float64)
+    cat = np.concatenate([l, r])
+    uniq, codes = np.unique(cat, return_inverse=True)
+    return codes[: len(l)], codes[len(l):], len(uniq)
+
+
+def _combine_codes(pairs: List[Tuple[np.ndarray, np.ndarray, int]]):
+    lc = pairs[0][0].astype(np.int64)
+    rc = pairs[0][1].astype(np.int64)
+    for codes_l, codes_r, k in pairs[1:]:
+        lc = lc * k + codes_l
+        rc = rc * k + codes_r
+    return lc, rc
+
+
+def _group_codes(batch: VectorBatch, keys: Sequence[str]) -> Tuple[np.ndarray, np.ndarray]:
+    """Return (codes, first_occurrence_index) for composite group keys."""
+    if not keys:
+        return np.zeros(batch.num_rows, dtype=np.int64), np.array([0] if batch.num_rows else [], dtype=np.int64)
+    cols = [batch.cols[k] for k in keys]
+    if len(cols) == 1:
+        uniq, first, codes = np.unique(cols[0], return_index=True, return_inverse=True)
+        return codes.astype(np.int64), first
+    rec = np.rec.fromarrays(cols)
+    uniq, first, codes = np.unique(rec, return_index=True, return_inverse=True)
+    return codes.astype(np.int64), first
+
+
+# ===========================================================================
+# operators
+# ===========================================================================
+class Executor:
+    def __init__(self, ctx: ExecContext):
+        self.ctx = ctx
+
+    def execute(self, node: P.PlanNode) -> VectorBatch:
+        key = node.key()
+        if key in self.ctx.subplan_cache:  # shared-work reuse (§4.5)
+            return self.ctx.subplan_cache[key]
+        method = getattr(self, "_exec_" + type(node).__name__.lower())
+        out = method(node)
+        self.ctx.record(node, out.num_rows)
+        if key in self.ctx.shared_keys:
+            self.ctx.subplan_cache[key] = out
+        return out
+
+    # ---- scans -------------------------------------------------------------
+    def _exec_scan(self, node: P.Scan) -> VectorBatch:
+        desc = node.table
+        tbl = AcidTable(desc, self.ctx.hms)
+        wid = self.ctx.widlist(desc.name)
+
+        # sargable predicate extraction from the pushed filter (§5.1)
+        sargs = _extract_sargs(node.pushed_filter) if node.pushed_filter else []
+
+        # dynamic semijoin reducers (§4.6): evaluate producers, build filters
+        runtime_blooms: Dict[str, BloomFilter] = {}
+        part_value_sets: Dict[str, np.ndarray] = {}
+        for rf in node.runtime_filters:
+            res = self._runtime_filter_values(rf)
+            if rf.kind == "partition":
+                part_value_sets[rf.target_column] = res["values"]
+            else:
+                runtime_blooms[rf.target_column] = res["bloom"]
+                sargs.append(SargPredicate(rf.target_column, ">=", res["min"]))
+                sargs.append(SargPredicate(rf.target_column, "<=", res["max"]))
+
+        pcols = desc.partition_cols
+
+        def part_filter(pvals: tuple) -> bool:
+            if node.partition_filter is not None:
+                b = VectorBatch({
+                    f"{node.alias}.{c}": _broadcast(v, 1)
+                    for c, v in zip(pcols, pvals)
+                })
+                if not bool(eval_expr(node.partition_filter, b, self.ctx)[0]):
+                    return False
+            for col, values in part_value_sets.items():
+                if col in pcols:
+                    v = pvals[pcols.index(col)]
+                    if v not in values:
+                        return False  # dynamic partition pruning (§4.6)
+            return True
+
+        want = [c for c in node.columns]
+        keep_acid = self.ctx.config.get("keep_acid_cols", False)
+        batches = []
+        for pvals, b in tbl.scan(
+            wid,
+            columns=want,
+            sarg_preds=[s for s in sargs if s.column not in pcols],
+            runtime_blooms=runtime_blooms or None,
+            partition_filter=part_filter,
+            io=self.ctx.io,
+            keep_acid_cols=keep_acid or node.min_writeid is not None,
+        ):
+            if node.min_writeid is not None:
+                # incremental MV rebuild: only rows above the build snapshot (§4.4)
+                b = b.select(b.cols[WRITEID_COL] > node.min_writeid)
+                if not keep_acid:
+                    b = b.drop_acid_cols()
+            batches.append(b)
+        out = VectorBatch.concat(batches) if batches else tbl._empty_batch(want)
+        out = out.rename({c: f"{node.alias}.{c}" for c in out.column_names
+                          if not c.startswith("__")})
+        if node.pushed_filter is not None and out.num_rows:
+            mask = eval_expr(
+                _qualify(node.pushed_filter, node.alias), out, self.ctx
+            ).astype(bool)
+            out = out.select(mask)
+        return out
+
+    def _runtime_filter_values(self, rf: P.RuntimeFilterSpec) -> dict:
+        ck = rf.key()
+        if ck in self.ctx.runtime_filter_cache:
+            return self.ctx.runtime_filter_cache[ck]
+        producer_out = self.execute(rf.producer)
+        vals = producer_out.cols[rf.producer_column]
+        vals = np.unique(vals)
+        res = {"values": vals}
+        if rf.kind == "index":
+            bf = BloomFilter.for_expected(len(vals))
+            if len(vals):
+                bf.add(vals)
+            res["bloom"] = bf
+            res["min"] = vals.min().item() if len(vals) else 0
+            res["max"] = vals.max().item() if len(vals) else 0
+        self.ctx.runtime_filter_cache[ck] = res
+        return res
+
+    def _exec_federatedscan(self, node: P.FederatedScan) -> VectorBatch:
+        handler = self.ctx.handlers.get(node.table.handler)
+        if handler is None:
+            raise ExecError(f"no storage handler registered: {node.table.handler}")
+        batch = handler.read(node.table, node.pushed_query)
+        if node.pushed_query:
+            # handler output columns are already the pushed query's outputs
+            mapping = dict(zip(batch.column_names, node.output_names()))
+        else:
+            mapping = {c: f"{node.alias}.{c}" for c in batch.column_names}
+        return batch.rename(mapping)
+
+    # ---- relational ops ------------------------------------------------------
+    def _exec_filter(self, node: P.Filter) -> VectorBatch:
+        b = self.execute(node.input)
+        if b.num_rows == 0:
+            return b
+        mask = eval_expr(node.predicate, b, self.ctx).astype(bool)
+        return b.select(mask)
+
+    def _exec_project(self, node: P.Project) -> VectorBatch:
+        b = self.execute(node.input)
+        return VectorBatch({n: eval_expr(e, b, self.ctx) for e, n in node.exprs})
+
+    def _exec_valuesnode(self, node: P.ValuesNode) -> VectorBatch:
+        one = VectorBatch({"__dummy__": np.zeros(1)})
+        cols: Dict[str, list] = {n: [] for n in node.names}
+        for row in node.rows:
+            for n, e in zip(node.names, row):
+                cols[n].append(eval_expr(e, one, self.ctx)[0])
+        return VectorBatch({n: np.array(v) for n, v in cols.items()})
+
+    def _exec_union(self, node: P.Union) -> VectorBatch:
+        outs = [self.execute(i) for i in node.inputs]
+        names = node.output_names()
+        aligned = []
+        for o in outs:
+            aligned.append(VectorBatch(dict(zip(names, (o.cols[c] for c in o.column_names)))))
+        out = VectorBatch.concat(aligned)
+        if not node.all:
+            codes, first = _group_codes(out, names)
+            out = out.take(np.sort(first))
+        return out
+
+    def _exec_limit(self, node: P.Limit) -> VectorBatch:
+        b = self.execute(node.input)
+        return b.slice(0, node.n)
+
+    def _exec_sort(self, node: P.Sort) -> VectorBatch:
+        b = self.execute(node.input)
+        return b.sort_by([k for k, _ in node.keys], [d for _, d in node.keys])
+
+    # ---- join ----------------------------------------------------------------
+    def _exec_join(self, node: P.Join) -> VectorBatch:
+        lb = self.execute(node.left)
+        rb = self.execute(node.right)
+        if node.strategy == "broadcast":
+            limit = self.ctx.config.get("mapjoin_max_rows", 10_000_000)
+            if rb.num_rows > limit:
+                raise MemoryPressureError(
+                    f"broadcast build side {rb.num_rows} rows exceeds {limit}"
+                )
+        if node.kind == "cross":
+            li = np.repeat(np.arange(lb.num_rows), rb.num_rows)
+            ri = np.tile(np.arange(rb.num_rows), lb.num_rows)
+            out = _concat_sides(lb.take(li), rb.take(ri))
+            if node.residual is not None and out.num_rows:
+                out = out.select(eval_expr(node.residual, out, self.ctx).astype(bool))
+            return out
+
+        pairs = [
+            _factorize_pair(lb.cols[lk], rb.cols[rk])
+            for lk, rk in zip(node.left_keys, node.right_keys)
+        ]
+        lc, rc = _combine_codes(pairs)
+
+        order = np.argsort(rc, kind="stable")
+        rc_sorted = rc[order]
+        lo = np.searchsorted(rc_sorted, lc, side="left")
+        hi = np.searchsorted(rc_sorted, lc, side="right")
+        counts = hi - lo
+
+        if node.kind == "semi" or node.kind == "anti":
+            mask = counts > 0 if node.kind == "semi" else counts == 0
+            if node.residual is not None and node.kind == "semi":
+                li, ri = _expand_matches(lo, counts, order)
+                joined = _concat_sides(lb.take(li), rb.take(ri))
+                ok = eval_expr(node.residual, joined, self.ctx).astype(bool)
+                good_left = np.unique(li[ok])
+                mask = np.zeros(lb.num_rows, dtype=bool)
+                mask[good_left] = True
+            out = lb.select(mask)
+            return out
+
+        li, ri = _expand_matches(lo, counts, order)
+        joined = _concat_sides(lb.take(li), rb.take(ri))
+        if node.residual is not None and joined.num_rows:
+            ok = eval_expr(node.residual, joined, self.ctx).astype(bool)
+            joined = joined.select(ok)
+            li = li[ok]
+
+        if node.kind == "inner":
+            return joined
+        if node.kind in ("left", "full"):
+            matched = np.zeros(lb.num_rows, dtype=bool)
+            if len(li):
+                matched[li] = True
+            unmatched = lb.select(~matched)
+            null_right = _null_batch(rb, unmatched.num_rows)
+            left_part = VectorBatch.concat(
+                [joined, _concat_sides(unmatched, null_right)]
+            )
+            if node.kind == "left":
+                return left_part
+            rmatched = np.zeros(rb.num_rows, dtype=bool)
+            if len(ri):
+                ok_ri = ri if node.residual is None else ri  # residual applied above
+                rmatched[ok_ri] = True
+            runmatched = rb.select(~rmatched)
+            null_left = _null_batch(lb, runmatched.num_rows)
+            return VectorBatch.concat([left_part, _concat_sides(null_left, runmatched)])
+        raise ExecError(f"join kind {node.kind} unsupported")
+
+    # ---- aggregate -------------------------------------------------------------
+    def _exec_aggregate(self, node: P.Aggregate) -> VectorBatch:
+        b = self.execute(node.input)
+        if node.grouping_sets is not None:
+            parts = []
+            for keyset in node.grouping_sets:
+                sub = self._aggregate_once(b, keyset, node.aggs)
+                # missing keys -> NULL columns, aligned to full output
+                for k in node.group_keys:
+                    if k not in keyset:
+                        proto = b.cols[k]
+                        sub = sub.with_column(k, _null_like(proto, sub.num_rows))
+                parts.append(sub.project(node.output_names()))
+            return VectorBatch.concat(parts)
+        return self._aggregate_once(b, node.group_keys, node.aggs).project(
+            node.output_names()
+        )
+
+    def _aggregate_once(self, b: VectorBatch, keys: List[str], aggs) -> VectorBatch:
+        codes, first = _group_codes(b, keys)
+        ng = len(first) if keys else (1 if True else 0)
+        if not keys:
+            ng = 1
+        out: Dict[str, np.ndarray] = {}
+        for k in keys:
+            out[k] = b.cols[k][np.sort(first)]
+        order_of_first = np.argsort(first) if keys else np.array([0])
+        # map group code -> dense output row (groups ordered by first occurrence)
+        remap = np.empty(ng, dtype=np.int64)
+        remap[order_of_first] = np.arange(ng)
+        codes2 = remap[codes] if b.num_rows else codes
+
+        for spec in aggs:
+            vals = eval_expr(spec.arg, b, self.ctx) if spec.arg is not None else None
+            out[spec.out_name] = _agg_column(spec, vals, codes2, ng)
+        if not keys and b.num_rows == 0:
+            # global aggregate over empty input yields a single row
+            for spec in aggs:
+                out[spec.out_name] = _agg_column(spec, np.empty(0), np.empty(0, np.int64), 1)
+        return VectorBatch(out)
+
+    # ---- window functions --------------------------------------------------------
+    def _exec_windowop(self, node: P.WindowOp) -> VectorBatch:
+        b = self.execute(node.input)
+        out = b
+        for wf, name in node.funcs:
+            out = out.with_column(name, _eval_window(wf, b, self.ctx))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+def _expand_matches(lo, counts, order):
+    total = int(counts.sum())
+    if total == 0:
+        return np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64)
+    li = np.repeat(np.arange(len(lo)), counts)
+    offsets = np.cumsum(counts) - counts
+    within = np.arange(total) - np.repeat(offsets, counts)
+    ri = order[np.repeat(lo, counts) + within]
+    return li, ri
+
+
+def _concat_sides(lb: VectorBatch, rb: VectorBatch) -> VectorBatch:
+    cols = dict(lb.cols)
+    for k, v in rb.cols.items():
+        if k in cols:
+            k = k + "__r"
+        cols[k] = v
+    return VectorBatch(cols)
+
+
+def _null_like(proto: np.ndarray, n: int) -> np.ndarray:
+    if proto.dtype.kind in ("U", "S"):
+        return np.full(n, _NULL_STR, dtype=proto.dtype if proto.dtype.itemsize else "U8")
+    return np.full(n, np.nan, dtype=np.float64)
+
+
+def _null_batch(proto: VectorBatch, n: int) -> VectorBatch:
+    return VectorBatch({k: _null_like(v, n) for k, v in proto.cols.items()})
+
+
+def _agg_column(spec, vals, codes, ng) -> np.ndarray:
+    if spec.fn == "count":
+        if vals is None:
+            return np.bincount(codes, minlength=ng).astype(np.int64)
+        valid = ~_is_null_mask(vals)
+        if vals.dtype.kind == "f":
+            valid &= ~np.isnan(vals)
+        if spec.distinct:
+            key = codes * (1 << 32)
+            _, u_codes = np.unique(vals[valid], return_inverse=True)
+            pairs = np.unique(codes[valid] * np.int64(1 << 32) + u_codes)
+            grp = (pairs >> 32).astype(np.int64)
+            return np.bincount(grp, minlength=ng).astype(np.int64)
+        return np.bincount(codes[valid], minlength=ng).astype(np.int64)
+    if vals is None:
+        raise ExecError(f"{spec.fn} requires an argument")
+    numeric = vals.dtype.kind in ("i", "u", "f", "b")
+    if spec.fn == "sum":
+        v = vals.astype(np.float64)
+        nanmask = np.isnan(v)
+        sums = np.bincount(codes[~nanmask], weights=v[~nanmask],
+                           minlength=ng).astype(np.float64)
+        counts = np.bincount(codes[~nanmask], minlength=ng)
+        sums[counts == 0] = np.nan  # SUM over empty/NULL group is NULL
+        if vals.dtype.kind in ("i", "u") and not np.isnan(sums).any():
+            return sums.astype(np.int64)
+        return sums
+    if spec.fn in ("min", "max"):
+        if numeric:
+            init = np.full(ng, np.inf if spec.fn == "min" else -np.inf)
+            v = vals.astype(np.float64)
+            m = ~np.isnan(v)
+            (np.minimum if spec.fn == "min" else np.maximum).at(init, codes[m], v[m])
+            init[np.isinf(init)] = np.nan
+            if vals.dtype.kind in ("i", "u") and not np.isnan(init).any():
+                return init.astype(np.int64)
+            return init
+        out = np.full(ng, _NULL_STR, dtype=vals.dtype if vals.dtype.itemsize else "U32")
+        for g in range(ng):
+            sel = vals[codes == g]
+            if len(sel):
+                out[g] = sel.min() if spec.fn == "min" else sel.max()
+        return out
+    raise ExecError(f"unknown aggregate {spec.fn}")
+
+
+def _eval_window(wf: A.WindowFunc, b: VectorBatch, ctx) -> np.ndarray:
+    n = b.num_rows
+    if n == 0:
+        return np.empty(0, dtype=np.int64)
+    pcols = [eval_expr(e, b, ctx) for e in wf.partition_by]
+    if pcols:
+        rec = np.rec.fromarrays(pcols)
+        _, codes = np.unique(rec, return_inverse=True)
+    else:
+        codes = np.zeros(n, dtype=np.int64)
+    okeys = [(eval_expr(e, b, ctx), d) for e, d in wf.order_by]
+
+    # global order: partition first, then order keys
+    sort_arrays = [codes]
+    for v, d in okeys:
+        if v.dtype.kind in ("U", "S"):
+            _, vc = np.unique(v, return_inverse=True)
+            v = vc
+        sort_arrays.append(-v.astype(np.float64) if d else v.astype(np.float64))
+    order = np.lexsort(tuple(reversed(sort_arrays)))
+    inv = np.empty(n, dtype=np.int64)
+    inv[order] = np.arange(n)
+    sorted_codes = codes[order]
+    starts = np.r_[0, np.flatnonzero(np.diff(sorted_codes)) + 1]
+    part_start_for = np.repeat(starts, np.diff(np.r_[starts, n]))
+
+    name = wf.func.name
+    if name == "row_number":
+        rn = np.arange(n) - part_start_for + 1
+        return rn[inv]
+    if name in ("rank", "dense_rank"):
+        keyvals = np.stack([a[order].astype(np.float64) if a.dtype.kind != "U" else
+                            np.unique(a, return_inverse=True)[1][order].astype(np.float64)
+                            for a, _ in okeys]) if okeys else np.zeros((1, n))
+        same_as_prev = np.r_[False, (np.diff(keyvals, axis=1) == 0).all(axis=0)] & \
+            (np.r_[-1, sorted_codes[:-1]] == sorted_codes)
+        if name == "rank":
+            rn = np.arange(n) - part_start_for + 1
+            out = rn.copy()
+            for i in range(1, n):
+                if same_as_prev[i]:
+                    out[i] = out[i - 1]
+            return out[inv]
+        out = np.ones(n, dtype=np.int64)
+        for i in range(1, n):
+            if sorted_codes[i] != sorted_codes[i - 1]:
+                out[i] = 1
+            elif same_as_prev[i]:
+                out[i] = out[i - 1]
+            else:
+                out[i] = out[i - 1] + 1
+        return out[inv]
+    if name in ("lag", "lead"):
+        arg = eval_expr(wf.func.args[0], b, ctx)
+        k = int(wf.func.args[1].value) if len(wf.func.args) > 1 else 1
+        sa = arg[order]
+        out = _null_like(arg, n)
+        if name == "lag":
+            out[k:] = sa[:-k]
+            bad = np.arange(n) - part_start_for < k
+        else:
+            out[:-k] = sa[k:]
+            nxt = np.r_[starts[1:], n]
+            part_end_for = np.repeat(nxt, np.diff(np.r_[starts, n]))
+            bad = np.arange(n) + k >= part_end_for
+        out[bad] = np.nan if out.dtype.kind == "f" else out[bad]
+        return out[inv]
+    if name in ("sum", "count", "min", "max", "avg"):
+        arg = eval_expr(wf.func.args[0], b, ctx) if wf.func.args and not isinstance(wf.func.args[0], A.Star) else None
+        ng = int(codes.max()) + 1 if n else 0
+        from ..optimizer.plan import AggSpec
+
+        if name == "avg":
+            s = _agg_column(AggSpec("sum", None, False, "s"), arg, codes, ng) if arg is None else _agg_column(AggSpec("sum", A.Col("x"), False, "s"), arg, codes, ng)
+            c = _agg_column(AggSpec("count", A.Col("x") if arg is not None else None, False, "c"), arg, codes, ng)
+            vals = s / c
+        else:
+            vals = _agg_column(AggSpec(name, A.Col("x") if arg is not None else None, False, "v"), arg, codes, ng)
+        return vals[codes]
+    raise ExecError(f"unsupported window function {name}")
+
+
+def _extract_sargs(pred: A.Expr) -> List[SargPredicate]:
+    out = []
+    from ..sql.binder import split_conjuncts
+
+    for c in split_conjuncts(pred):
+        if isinstance(c, A.BinOp) and c.op in ("=", "<", "<=", ">", ">="):
+            if isinstance(c.left, A.Col) and isinstance(c.right, A.Lit):
+                out.append(SargPredicate(c.left.name, c.op, c.right.value))
+            elif isinstance(c.right, A.Col) and isinstance(c.left, A.Lit):
+                flip = {"<": ">", "<=": ">=", ">": "<", ">=": "<=", "=": "="}
+                out.append(SargPredicate(c.right.name, flip[c.op], c.left.value))
+        elif isinstance(c, A.Between) and not c.negated and isinstance(c.expr, A.Col):
+            if isinstance(c.low, A.Lit) and isinstance(c.high, A.Lit):
+                out.append(SargPredicate(c.expr.name, ">=", c.low.value))
+                out.append(SargPredicate(c.expr.name, "<=", c.high.value))
+        elif isinstance(c, A.InList) and not c.negated and isinstance(c.expr, A.Col):
+            vals = [v.value for v in c.values if isinstance(v, A.Lit)]
+            if vals:
+                out.append(SargPredicate(c.expr.name, "in", vals))
+    return out
+
+
+def _qualify(e: A.Expr, alias: str) -> A.Expr:
+    """Qualify raw column refs in a pushed filter with the scan alias."""
+    from ..sql.binder import _rebuild
+
+    if isinstance(e, A.Col) and e.table is None:
+        return A.Col(e.name, alias)
+    if isinstance(e, A.Col):
+        return e
+    return _rebuild(e, [_qualify(c, alias) for c in e.children()])

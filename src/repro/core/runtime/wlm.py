@@ -1,0 +1,235 @@
+"""Workload manager (paper §5.2).
+
+Administers access to LLAP resources through *resource plans*: pools with
+capacity fractions and admission parallelism, mappings that route queries to
+pools by user/application, and triggers that move or kill queries based on
+runtime metrics.  Only one plan is active at a time; plans persist in the
+metastore.  Idle pool capacity may be borrowed by queries from other pools
+until the owning pool claims it.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from ..metastore import Metastore
+
+
+class QueryKilledError(Exception):
+    pass
+
+
+@dataclass
+class PoolDef:
+    name: str
+    alloc_fraction: float
+    query_parallelism: int
+
+
+@dataclass
+class RuleDef:
+    name: str
+    metric: str  # e.g. total_runtime (ms), rows_produced
+    threshold: float
+    action: str  # 'move' | 'kill'
+    target_pool: Optional[str] = None
+    pools: List[str] = field(default_factory=list)  # pools the rule is attached to
+
+
+@dataclass
+class ResourcePlan:
+    name: str
+    pools: Dict[str, PoolDef] = field(default_factory=dict)
+    rules: Dict[str, RuleDef] = field(default_factory=dict)
+    mappings: List[tuple] = field(default_factory=list)  # (kind, entity, pool)
+    default_pool: Optional[str] = None
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "pools": {
+                k: {"alloc_fraction": p.alloc_fraction,
+                    "query_parallelism": p.query_parallelism}
+                for k, p in self.pools.items()
+            },
+            "rules": {
+                k: {"metric": r.metric, "threshold": r.threshold,
+                    "action": r.action, "target_pool": r.target_pool,
+                    "pools": r.pools}
+                for k, r in self.rules.items()
+            },
+            "mappings": self.mappings,
+            "default_pool": self.default_pool,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ResourcePlan":
+        plan = cls(d["name"])
+        for k, p in d.get("pools", {}).items():
+            plan.pools[k] = PoolDef(k, p["alloc_fraction"], p["query_parallelism"])
+        for k, r in d.get("rules", {}).items():
+            plan.rules[k] = RuleDef(k, r["metric"], r["threshold"], r["action"],
+                                    r.get("target_pool"), list(r.get("pools", [])))
+        plan.mappings = [tuple(m) for m in d.get("mappings", [])]
+        plan.default_pool = d.get("default_pool")
+        return plan
+
+
+@dataclass
+class QuerySlot:
+    query_id: str
+    pool: str
+    admitted_at: float = field(default_factory=time.time)
+    borrowed_from: Optional[str] = None
+    metrics: Dict[str, float] = field(default_factory=dict)
+    killed: bool = False
+    moves: List[str] = field(default_factory=list)
+
+
+class WorkloadManager:
+    def __init__(self, hms: Metastore, total_executors: int = 16):
+        self.hms = hms
+        self.total_executors = total_executors
+        self._lock = threading.RLock()
+        self._active: Optional[ResourcePlan] = None
+        self._running: Dict[str, QuerySlot] = {}
+        self._pool_load: Dict[str, int] = {}
+        plan_dict = hms.active_resource_plan()
+        if plan_dict:
+            self._active = ResourcePlan.from_dict(plan_dict)
+            self._pool_load = {p: 0 for p in self._active.pools}
+
+    # ------------------------------------------------------------- plan DDL
+    def create_plan(self, name: str) -> None:
+        self.hms.save_resource_plan(name, ResourcePlan(name).to_dict())
+
+    def _load(self, name: str) -> ResourcePlan:
+        d = self.hms.get_resource_plan(name)
+        if d is None:
+            raise KeyError(f"no resource plan {name}")
+        return ResourcePlan.from_dict(d)
+
+    def _store(self, plan: ResourcePlan) -> None:
+        self.hms.save_resource_plan(plan.name, plan.to_dict())
+        if self._active and self._active.name == plan.name:
+            self._active = plan
+            for p in plan.pools:
+                self._pool_load.setdefault(p, 0)
+
+    def create_pool(self, plan_name: str, pool: str, alloc_fraction: float,
+                    query_parallelism: int) -> None:
+        plan = self._load(plan_name)
+        plan.pools[pool] = PoolDef(pool, alloc_fraction, query_parallelism)
+        self._store(plan)
+
+    def create_rule(self, plan_name: str, rule: str, metric: str,
+                    threshold: float, action: str,
+                    target_pool: Optional[str]) -> None:
+        plan = self._load(plan_name)
+        plan.rules[rule] = RuleDef(rule, metric, threshold, action, target_pool)
+        self._store(plan)
+
+    def add_rule_to_pool(self, plan_name: str, rule: str, pool: str) -> None:
+        plan = self._load(plan_name)
+        plan.rules[rule].pools.append(pool)
+        self._store(plan)
+
+    def create_mapping(self, plan_name: str, kind: str, entity: str, pool: str) -> None:
+        plan = self._load(plan_name)
+        plan.mappings.append((kind, entity, pool))
+        self._store(plan)
+
+    def set_default_pool(self, plan_name: str, pool: str) -> None:
+        plan = self._load(plan_name)
+        plan.default_pool = pool
+        self._store(plan)
+
+    def activate(self, plan_name: str) -> None:
+        plan = self._load(plan_name)
+        self.hms.activate_resource_plan(plan_name)
+        with self._lock:
+            self._active = plan
+            self._pool_load = {p: 0 for p in plan.pools}
+
+    @property
+    def active_plan(self) -> Optional[ResourcePlan]:
+        return self._active
+
+    # ------------------------------------------------------------- admission
+    def route(self, user: Optional[str] = None, application: Optional[str] = None) -> Optional[str]:
+        plan = self._active
+        if plan is None:
+            return None
+        for kind, entity, pool in plan.mappings:
+            if kind == "application" and application == entity:
+                return pool
+            if kind == "user" and user == entity:
+                return pool
+        return plan.default_pool or (next(iter(plan.pools)) if plan.pools else None)
+
+    def admit(self, query_id: str, user=None, application=None) -> Optional[QuerySlot]:
+        with self._lock:
+            plan = self._active
+            if plan is None:
+                return None
+            pool = self.route(user, application)
+            if pool is None:
+                return None
+            slot = QuerySlot(query_id, pool)
+            if self._pool_load.get(pool, 0) >= plan.pools[pool].query_parallelism:
+                # pool saturated: borrow idle capacity from another pool (§5.2)
+                for other, pdef in plan.pools.items():
+                    if other != pool and self._pool_load.get(other, 0) < pdef.query_parallelism:
+                        slot.borrowed_from = other
+                        pool_to_charge = other
+                        break
+                else:
+                    raise QueryKilledError(
+                        f"pool {pool} at parallelism limit and no idle capacity"
+                    )
+            else:
+                pool_to_charge = pool
+            self._pool_load[pool_to_charge] = self._pool_load.get(pool_to_charge, 0) + 1
+            slot.metrics["charged_pool"] = pool_to_charge
+            self._running[query_id] = slot
+            return slot
+
+    def executors_for(self, slot: Optional[QuerySlot]) -> int:
+        if slot is None or self._active is None:
+            return self.total_executors
+        frac = self._active.pools[slot.pool].alloc_fraction
+        return max(1, int(self.total_executors * frac))
+
+    # ------------------------------------------------------------- triggers
+    def update_metrics(self, query_id: str, **metrics) -> None:
+        """Record metrics and fire any matching triggers (move/kill)."""
+        with self._lock:
+            slot = self._running.get(query_id)
+            plan = self._active
+            if slot is None or plan is None:
+                return
+            slot.metrics.update(metrics)
+            slot.metrics["total_runtime"] = (time.time() - slot.admitted_at) * 1000.0
+            for rule in plan.rules.values():
+                if rule.pools and slot.pool not in rule.pools:
+                    continue
+                value = slot.metrics.get(rule.metric)
+                if value is None or value <= rule.threshold:
+                    continue
+                if rule.action == "move" and rule.target_pool and slot.pool != rule.target_pool:
+                    slot.moves.append(f"{slot.pool}->{rule.target_pool}")
+                    slot.pool = rule.target_pool
+                elif rule.action == "kill":
+                    slot.killed = True
+        if slot.killed:
+            raise QueryKilledError(f"query {query_id} killed by trigger")
+
+    def release(self, query_id: str) -> None:
+        with self._lock:
+            slot = self._running.pop(query_id, None)
+            if slot is not None:
+                charged = slot.metrics.get("charged_pool", slot.pool)
+                if charged in self._pool_load and self._pool_load[charged] > 0:
+                    self._pool_load[charged] -= 1

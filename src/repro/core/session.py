@@ -1,0 +1,1038 @@
+"""HiveServer2 analogue: the query driver (paper §2, Figure 2).
+
+``Warehouse`` owns cluster-wide state (metastore, LLAP daemon, storage
+handlers, workload manager, query-result cache); ``Session`` executes SQL:
+
+    parse -> bind (logical plan) -> [result cache probe] -> [MV rewrite]
+         -> rule/cost optimization -> semijoin reducers -> shared-work marks
+         -> task-DAG compile -> scheduled execution (LLAP or containers)
+         -> [re-optimization on runtime errors] -> cache fill
+
+DML statements (INSERT/UPDATE/DELETE/MERGE) run under single-statement ACID
+transactions (§3.2); materialized views rebuild incrementally when possible
+(§4.4); resource-plan DDL administers the workload manager (§5.2).
+"""
+from __future__ import annotations
+
+import itertools
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .acid import AcidTable, PlainIO
+from .compaction import CompactionConfig, compact_partition, maybe_compact
+from .federation.druid import DruidHandler
+from .federation.handler import HandlerRegistry
+from .federation.jdbc import JdbcHandler
+from .metastore import Metastore, TxnAborted, WriteConflict
+from .optimizer import plan as P
+from .optimizer.mv_rewrite import MVRewriter
+from .optimizer.result_cache import QueryResultCache
+from .optimizer.rules import Optimizer, OptimizerConfig
+from .optimizer.semijoin import SemijoinConfig, insert_semijoin_reducers
+from .optimizer.shared_work import find_shared_subplans
+from .runtime.dag import DAGScheduler, compile_dag
+from .runtime.exec import (
+    ExecContext,
+    Executor,
+    MemoryPressureError,
+    eval_expr,
+)
+from .runtime.llap import LlapDaemon, LlapIO
+from .runtime.vector import ROWID_COL, WRITEID_COL, VectorBatch
+from .runtime.wlm import WorkloadManager
+from .sql import ast as A
+from .sql.binder import Binder, _classify_join_condition, conjoin
+from .sql.parser import parse, parse_many
+
+DEFAULT_CONFIG = {
+    # optimizer (§4)
+    "cbo": True,
+    "pushdown": True,
+    "join_reorder": True,
+    "transitive_inference": True,
+    "partition_pruning": True,
+    "prune_columns": True,
+    "broadcast_threshold_rows": 200_000.0,
+    "mv_rewriting": True,
+    "semijoin_reduction": True,
+    "shared_work": True,
+    "result_cache": True,
+    "reopt_mode": "reoptimize",  # off | overlay | reoptimize (§4.2)
+    "overlay": {"broadcast_threshold_rows": 0.0},
+    # runtime (§5)
+    "llap": True,
+    "speculative_execution": False,
+    "mapjoin_max_rows": 50_000_000,
+    "num_containers": 4,
+    # ACID (§3)
+    "compaction_enabled": True,
+    "compaction_minor_threshold": 10,
+    "compaction_major_ratio": 0.2,
+    # identity for workload management (§5.2)
+    "user": None,
+    "application": None,
+}
+
+
+class QueryResult:
+    def __init__(self, batch: VectorBatch, info: Optional[dict] = None):
+        self.batch = batch
+        self.info = info or {}
+
+    @property
+    def rows(self) -> List[tuple]:
+        return self.batch.to_rows()
+
+    @property
+    def num_rows(self) -> int:
+        return self.batch.num_rows
+
+    def __repr__(self):
+        return f"QueryResult({self.num_rows} rows, info={self.info})"
+
+
+class Warehouse:
+    """Cluster-scoped state (one per deployment)."""
+
+    def __init__(self, warehouse_dir: str, llap_cache_bytes: int = 256 << 20,
+                 llap_executors: int = 4):
+        self.dir = warehouse_dir
+        os.makedirs(warehouse_dir, exist_ok=True)
+        self.hms = Metastore(warehouse_dir)
+        self.llap = LlapDaemon(cache_bytes=llap_cache_bytes,
+                               num_executors=llap_executors)
+        self.handlers = HandlerRegistry()
+        self.handlers.register(DruidHandler(), self.hms)
+        self.handlers.register(JdbcHandler(), self.hms)
+        self.result_cache = QueryResultCache()
+        self.wlm = WorkloadManager(self.hms, total_executors=llap_executors)
+        self._qid = itertools.count()
+
+    def session(self, **config) -> "Session":
+        return Session(self, {**DEFAULT_CONFIG, **config})
+
+
+class Session:
+    def __init__(self, wh: Warehouse, config: dict):
+        self.wh = wh
+        self.hms = wh.hms
+        self.config = config
+        self.last_info: dict = {}
+
+    # ==================================================================
+    # public API
+    # ==================================================================
+    def execute(self, sql: str) -> QueryResult:
+        stmt = parse(sql)
+        return self.execute_stmt(stmt, sql)
+
+    def execute_script(self, sql: str) -> List[QueryResult]:
+        return [self.execute_stmt(s, "") for s in parse_many(sql)]
+
+    def explain(self, sql: str) -> str:
+        stmt = parse(sql)
+        if isinstance(stmt, A.Explain):
+            stmt = stmt.stmt
+        plan, info = self._plan_query(stmt)
+        pretty = plan.pretty()  # before DAG compilation mutates the tree
+        dag = compile_dag(plan)
+        lines = [pretty, "", f"DAG edges: {dag.edge_summary()}"]
+        for k, v in info.items():
+            lines.append(f"{k}: {v}")
+        return "\n".join(lines)
+
+    # ==================================================================
+    # statement dispatch
+    # ==================================================================
+    def execute_stmt(self, stmt, sql_text: str = "") -> QueryResult:
+        if isinstance(stmt, A.Explain):
+            inner = stmt.stmt
+            if isinstance(inner, (A.Select, A.SetOp)):
+                return QueryResult(
+                    VectorBatch({"plan": np.array(self.explain_stmt(inner).split("\n"))})
+                )
+            raise ValueError("EXPLAIN supports queries only")
+        if isinstance(stmt, (A.Select, A.SetOp)):
+            return self._run_query(stmt, sql_text)
+        if isinstance(stmt, A.CreateTable):
+            return self._create_table(stmt)
+        if isinstance(stmt, A.CreateMaterializedView):
+            return self._create_mv(stmt)
+        if isinstance(stmt, A.DropTable):
+            if stmt.if_exists and not self.hms.table_exists(stmt.name):
+                return QueryResult(VectorBatch({}))
+            self.hms.drop_table(stmt.name)
+            self.wh.result_cache.invalidate_all()
+            return QueryResult(VectorBatch({}))
+        if isinstance(stmt, A.Insert):
+            return self._insert(stmt)
+        if isinstance(stmt, A.Update):
+            return self._update(stmt)
+        if isinstance(stmt, A.Delete):
+            return self._delete(stmt)
+        if isinstance(stmt, A.Merge):
+            return self._merge(stmt)
+        if isinstance(stmt, A.RebuildMaterializedView):
+            return self._rebuild_mv(stmt.name)
+        if isinstance(stmt, A.CreateResourcePlan):
+            self.wh.wlm.create_plan(stmt.name)
+            return QueryResult(VectorBatch({}))
+        if isinstance(stmt, A.CreatePool):
+            self.wh.wlm.create_pool(stmt.plan, stmt.pool, stmt.alloc_fraction,
+                                    stmt.query_parallelism)
+            return QueryResult(VectorBatch({}))
+        if isinstance(stmt, A.CreateWMRule):
+            self.wh.wlm.create_rule(stmt.plan, stmt.rule, stmt.metric,
+                                    stmt.threshold, stmt.action, stmt.target_pool)
+            return QueryResult(VectorBatch({}))
+        if isinstance(stmt, A.AddWMRuleToPool):
+            plan_name = stmt.plan or self._only_plan()
+            self.wh.wlm.add_rule_to_pool(plan_name, stmt.rule, stmt.pool)
+            return QueryResult(VectorBatch({}))
+        if isinstance(stmt, A.CreateWMMapping):
+            self.wh.wlm.create_mapping(stmt.plan, stmt.kind, stmt.entity, stmt.pool)
+            return QueryResult(VectorBatch({}))
+        if isinstance(stmt, A.AlterResourcePlan):
+            if stmt.default_pool:
+                self.wh.wlm.set_default_pool(stmt.plan, stmt.default_pool)
+            if stmt.enable_activate:
+                self.wh.wlm.activate(stmt.plan)
+            return QueryResult(VectorBatch({}))
+        raise ValueError(f"unsupported statement {type(stmt).__name__}")
+
+    def explain_stmt(self, stmt) -> str:
+        plan, info = self._plan_query(stmt)
+        pretty = plan.pretty()
+        dag = compile_dag(plan)
+        return pretty + f"\nDAG edges: {dag.edge_summary()}\ninfo: {info}"
+
+    def _only_plan(self) -> str:
+        if self.wh.wlm.active_plan:
+            return self.wh.wlm.active_plan.name
+        names = [r[0] for r in self.hms._q("SELECT name FROM resource_plans")]
+        if len(names) == 1:
+            return names[0]
+        raise ValueError("ADD RULE requires an active plan or plan qualifier")
+
+    # ==================================================================
+    # query path
+    # ==================================================================
+    def _plan_query(self, stmt, runtime_overrides: Optional[dict] = None,
+                    config: Optional[dict] = None) -> Tuple[P.PlanNode, dict]:
+        cfg = config or self.config
+        info: dict = {}
+        plan = Binder(self.hms).bind(stmt)
+
+        if cfg["mv_rewriting"]:
+            hit = MVRewriter(self.hms).try_rewrite(plan)
+            if hit is not None:
+                plan, mv_name, mode = hit
+                info["mv_used"] = mv_name
+                info["mv_mode"] = mode
+
+        opt = Optimizer(
+            self.hms,
+            OptimizerConfig(
+                cbo=cfg["cbo"],
+                pushdown=cfg["pushdown"],
+                prune_columns=cfg["prune_columns"],
+                join_reorder=cfg["join_reorder"],
+                transitive_inference=cfg["transitive_inference"],
+                broadcast_threshold_rows=cfg["broadcast_threshold_rows"],
+                partition_pruning=cfg["partition_pruning"],
+            ),
+            runtime_overrides=runtime_overrides,
+        )
+        plan = opt.optimize(plan)
+
+        if cfg["semijoin_reduction"]:
+            added = insert_semijoin_reducers(plan, opt.cost_model,
+                                             SemijoinConfig(enabled=True))
+            info["semijoin_reducers"] = added
+
+        # federation pushdown (§6.2): push maximal prefixes into handlers
+        pushed = self._push_federated(plan)
+        if pushed:
+            info["federated_pushdown"] = pushed
+            plan = pushed.get("__plan__", plan)
+            pushed.pop("__plan__", None)
+        return plan, info
+
+    def _push_federated(self, plan: P.PlanNode) -> Optional[dict]:
+        """Find FederatedScan nodes; ask handlers to absorb plan prefixes."""
+        out = {}
+
+        def try_at(node: P.PlanNode, parent: Optional[P.PlanNode], idx: int):
+            fed = _leaf_federated(node)
+            if fed is not None:
+                handler = self.wh.handlers.get(fed.table.handler)
+                if handler is not None and handler.supports_pushdown:
+                    q = handler.try_pushdown(node, fed.table)
+                    if q is not None:
+                        new_scan = P.FederatedScan(
+                            fed.table, fed.alias, fed.columns,
+                            pushed_query=q,
+                            output_cols=q.get("outputNames") or node.output_names(),
+                        )
+                        out[fed.table.name] = q.get("queryType") or "sql"
+                        if parent is None:
+                            out["__plan__"] = new_scan
+                        else:
+                            parent.inputs[idx] = new_scan
+                        return
+            for i, c in enumerate(node.inputs):
+                try_at(c, node, i)
+
+        try_at(plan, None, 0)
+        return out if out else None
+
+    def _run_query(self, stmt, sql_text: str) -> QueryResult:
+        t0 = time.perf_counter()
+        cfg = self.config
+        plan, info = self._plan_query(stmt)
+        cache_key = plan.key()
+        tables = [s.table.name for s in P.walk_plan(plan)
+                  if isinstance(s, (P.Scan, P.FederatedScan))]
+
+        cacheable = cfg["result_cache"] and _is_cacheable(stmt) and tables
+        filling = False
+        if cacheable:
+            hit = self.wh.result_cache.lookup(cache_key, self.hms, tables)
+            if hit is not None:
+                info.update(cache_hit=True, seconds=time.perf_counter() - t0)
+                self.last_info = info
+                return QueryResult(hit, info)
+            filling = self.wh.result_cache.begin_pending(cache_key, self.hms, tables)
+            if not filling:
+                hit = self.wh.result_cache.lookup(cache_key, self.hms, tables)
+                if hit is not None:
+                    info.update(cache_hit=True, pending_wait=True,
+                                seconds=time.perf_counter() - t0)
+                    self.last_info = info
+                    return QueryResult(hit, info)
+
+        qid = f"q{next(self.wh._qid)}"
+        slot = None
+        try:
+            slot = self.wh.wlm.admit(qid, cfg.get("user"), cfg.get("application"))
+            if slot is not None:
+                info["wlm_pool"] = slot.pool
+            batch, exec_info = self._execute_plan(plan, stmt, cfg, qid)
+            info.update(exec_info)
+            if cacheable and filling:
+                self.wh.result_cache.fill(cache_key, batch)
+            info["cache_hit"] = False
+            info["seconds"] = time.perf_counter() - t0
+            self.last_info = info
+            return QueryResult(batch, info)
+        except Exception:
+            if cacheable and filling:
+                self.wh.result_cache.cancel_pending(cache_key)
+            raise
+        finally:
+            if slot is not None:
+                self.wh.wlm.release(qid)
+
+    def _execute_plan(self, plan, stmt, cfg, qid) -> Tuple[VectorBatch, dict]:
+        info: dict = {}
+        ctx = self._make_ctx(cfg)
+        if cfg["shared_work"]:
+            ctx.shared_keys = find_shared_subplans(plan)
+            info["shared_subplans"] = len(ctx.shared_keys)
+        dag = compile_dag(plan)
+        info["dag_edges"] = dag.edge_summary()
+        sched = DAGScheduler(
+            pool=self.wh.llap.executors if cfg["llap"] else None,
+            speculative=cfg["speculative_execution"],
+        )
+
+        def on_vertex(vid, batch):
+            try:
+                self.wh.wlm.update_metrics(qid, rows_produced=batch.num_rows)
+            except Exception:
+                raise
+
+        try:
+            batch = sched.execute(dag, ctx, on_vertex_done=on_vertex)
+            self._persist_runtime_stats(plan, ctx)
+            return batch, info
+        except MemoryPressureError as err:
+            mode = cfg["reopt_mode"]
+            if mode == "off":
+                raise
+            info["reexecuted"] = True
+            info["reopt_mode"] = mode
+            self._persist_runtime_stats(plan, ctx)
+            if mode == "overlay":
+                # §4.2 overlay: re-run every re-execution with config overrides
+                cfg2 = {**cfg, **cfg.get("overlay", {}), "reopt_mode": "off"}
+                plan2, _ = self._plan_query(stmt, config=cfg2)
+            else:
+                # §4.2 reoptimize: feed captured actual cardinalities back in;
+                # the failure also teaches the planner the broadcast budget
+                cfg2 = {
+                    **cfg,
+                    "reopt_mode": "off",
+                    "broadcast_threshold_rows": min(
+                        cfg["broadcast_threshold_rows"],
+                        float(cfg["mapjoin_max_rows"]),
+                    ),
+                }
+                plan2, _ = self._plan_query(
+                    stmt, runtime_overrides=dict(ctx.op_stats), config=cfg2
+                )
+            ctx2 = self._make_ctx(cfg2)
+            if cfg2["shared_work"]:
+                ctx2.shared_keys = find_shared_subplans(plan2)
+            dag2 = compile_dag(plan2)
+            batch = DAGScheduler(
+                pool=self.wh.llap.executors if cfg2["llap"] else None
+            ).execute(dag2, ctx2)
+            return batch, info
+
+    def _make_ctx(self, cfg) -> ExecContext:
+        return ExecContext(
+            self.hms,
+            self.hms.get_snapshot(),
+            config=cfg,
+            io=LlapIO(self.wh.llap) if cfg["llap"] else PlainIO(),
+            handlers=self.wh.handlers.as_dict(),
+        )
+
+    def _persist_runtime_stats(self, plan, ctx) -> None:
+        fp = plan.digest()
+        for op, rows in list(ctx.op_stats.items())[:64]:
+            self.hms.record_runtime_stats(fp, op, -1.0, float(rows))
+
+    # ==================================================================
+    # DDL
+    # ==================================================================
+    def _create_table(self, stmt: A.CreateTable) -> QueryResult:
+        handler_name = None
+        if stmt.stored_by:
+            h = self.wh.handlers.get(stmt.stored_by)
+            if h is None:
+                raise ValueError(f"unknown storage handler {stmt.stored_by}")
+            handler_name = h.name
+        schema = [(c.name, c.type) for c in stmt.columns]
+        if not schema and handler_name:
+            h = self.wh.handlers.get(handler_name)
+            inferred = h.infer_schema(stmt.props)
+            if inferred is None:
+                raise ValueError("cannot infer schema from external system")
+            schema = inferred
+        part_cols = [c.name for c in stmt.partition_by]
+        # Hive keeps partition columns out of the file schema but they are
+        # part of the table schema
+        for c in stmt.partition_by:
+            if c.name not in [n for n, _ in schema]:
+                schema.append((c.name, c.type))
+        self.hms.create_table(
+            stmt.name, schema, partition_cols=part_cols, props=stmt.props,
+            handler=handler_name,
+        )
+        return QueryResult(VectorBatch({}))
+
+    def _create_mv(self, stmt: A.CreateMaterializedView) -> QueryResult:
+        # 1. evaluate the definition
+        plan, _ = self._plan_query(stmt.query)
+        ctx = self._make_ctx(self.config)
+        batch = Executor(ctx).execute(plan)
+        names = plan.output_names()
+        out_cols = {}
+        for n in names:
+            base = n.split(".", 1)[1] if "." in n else n
+            out_cols[base] = batch.cols[n]
+        batch = VectorBatch(out_cols)
+        schema = [(c, _sql_type(batch.cols[c])) for c in batch.column_names]
+
+        source_tables = sorted(
+            {s.table.name for s in P.walk_plan(plan)
+             if isinstance(s, (P.Scan, P.FederatedScan))}
+        )
+        handler_name = None
+        if stmt.stored_by:
+            handler_name = self.wh.handlers.get(stmt.stored_by).name
+
+        desc = self.hms.create_table(
+            stmt.name, schema, props=stmt.props, handler=handler_name,
+            is_mv=True, mv_sql=_mv_sql_of(stmt),
+        )
+        if handler_name:
+            self.wh.handlers.get(handler_name).write(desc, batch)
+        else:
+            txn = self.hms.open_txn()
+            AcidTable(desc, self.hms).insert(txn, batch)
+            self.hms.commit_txn(txn)
+
+        snap = self.hms.get_snapshot()
+        build = {t: self.hms.writeid_list(t, snap).hwm for t in source_tables}
+        window = float(stmt.props.get("staleness_window", 0) or 0)
+        self.hms.register_mv(stmt.name, _mv_sql_of(stmt), source_tables, build,
+                             staleness_window=window)
+        return QueryResult(VectorBatch({}), {"mv": stmt.name, "rows": batch.num_rows})
+
+    def _rebuild_mv(self, name: str) -> QueryResult:
+        mvs = {m["name"]: m for m in self.hms.list_mvs()}
+        if name not in mvs:
+            raise KeyError(f"no materialized view {name}")
+        mv = mvs[name]
+        desc = self.hms.get_table(name)
+        snap = self.hms.get_snapshot()
+
+        # which sources changed, and did any change involve deletes?
+        changed, has_deletes = [], False
+        for t in mv["source_tables"]:
+            wl = self.hms.writeid_list(t, snap)
+            old = mv["build_snapshot"].get(t, 0)
+            if wl.hwm != old:
+                changed.append((t, old))
+                tdesc = self.hms.get_table(t)
+                from .acid import list_stores
+
+                locs = ([loc for _, loc in self.hms.list_partitions(t)]
+                        if tdesc.partition_cols else [tdesc.location])
+                for loc in locs:
+                    for s in list_stores(loc):
+                        if s.kind == "delete_delta" and s.max_writeid > old:
+                            has_deletes = True
+
+        mode = "noop"
+        stmt = parse(mv["sql"])
+        if not changed:
+            pass
+        elif has_deletes or len(changed) > 1:
+            # UPDATE/DELETE (or multi-table inserts) force a full rebuild (§4.4)
+            mode = "full"
+            self._replace_mv_contents(desc, stmt)
+        else:
+            # incremental: rewrite reads the MV + only the new data (§4.4);
+            # SPJA views MERGE the delta partials into existing groups
+            mode = "incremental"
+            table, old_wid = changed[0]
+            plan, _ = self._plan_query(stmt, config={**self.config,
+                                                     "mv_rewriting": False})
+            for s in P.walk_plan(plan):
+                if isinstance(s, P.Scan) and s.table.name == table:
+                    s.min_writeid = old_wid  # snapshot filter on WriteId (§4.4)
+            ctx = self._make_ctx(self.config)
+            delta = Executor(ctx).execute(plan)
+            self._merge_mv_delta(desc, stmt, delta, plan.output_names())
+
+        build = {t: self.hms.writeid_list(t, snap).hwm for t in mv["source_tables"]}
+        self.hms.update_mv_snapshot(name, build)
+        self.wh.result_cache.invalidate_all()
+        return QueryResult(VectorBatch({}), {"rebuild_mode": mode})
+
+    def _replace_mv_contents(self, desc, stmt) -> None:
+        plan, _ = self._plan_query(stmt, config={**self.config,
+                                                 "mv_rewriting": False})
+        ctx = self._make_ctx(self.config)
+        batch = Executor(ctx).execute(plan)
+        renamed = VectorBatch({
+            c: batch.cols[n]
+            for (c, _), n in zip(desc.schema, plan.output_names())
+        })
+        tbl = AcidTable(desc, self.hms)
+        txn = self.hms.open_txn()
+        wl = self.hms.writeid_list(desc.name, self.hms.get_snapshot())
+        targets = {}
+        for pvals, b in tbl.scan(wl, keep_acid_cols=True):
+            t = np.stack([b.cols[WRITEID_COL], b.cols[ROWID_COL]], axis=1)
+            targets[pvals] = t
+        if targets:
+            tbl.delete(txn, targets)
+        tbl.insert(txn, renamed, update_stats=False)
+        self.hms.commit_txn(txn)
+
+    def _merge_mv_delta(self, desc, stmt, delta: VectorBatch, out_names) -> None:
+        """MERGE the delta aggregation into the MV table (paper §4.4)."""
+        sel = stmt if isinstance(stmt, A.Select) else None
+        n_keys = len(sel.group_by) if sel and sel.group_by else 0
+        cols = [c for c, _ in desc.schema]
+        key_cols, agg_cols = cols[:n_keys], cols[n_keys:]
+        delta_renamed = VectorBatch({c: delta.cols[n] for c, n in zip(cols, out_names)})
+
+        tbl = AcidTable(desc, self.hms)
+        txn = self.hms.open_txn()
+        wl = self.hms.writeid_list(desc.name, self.hms.get_snapshot())
+        cur_parts = list(tbl.scan(wl, keep_acid_cols=True))
+        cur = VectorBatch.concat([b for _, b in cur_parts])
+
+        if n_keys == 0 or cur.num_rows == 0:
+            if cur.num_rows and n_keys == 0:
+                merged = {}
+                agg_fns = self._agg_fns_of(sel)
+                for c, fn in zip(cols, agg_fns):
+                    merged[c] = _fold_partial(fn, cur.cols[c], delta_renamed.cols[c])
+                targets = {(): np.stack([cur.cols[WRITEID_COL], cur.cols[ROWID_COL]], axis=1)}
+                tbl.delete(txn, targets)
+                tbl.insert(txn, VectorBatch(merged), update_stats=False)
+            else:
+                tbl.insert(txn, delta_renamed, update_stats=False)
+            self.hms.commit_txn(txn)
+            return
+
+        # match delta groups against current rows (WHEN MATCHED -> fold)
+        from .runtime.exec import _factorize_pair, _combine_codes
+
+        pairs = [_factorize_pair(cur.cols[k], delta_renamed.cols[k]) for k in key_cols]
+        cc, dc = _combine_codes(pairs)
+        matched_mask = np.isin(cc, dc)
+        # delete matched current rows; fold their aggs into the delta rows
+        agg_fns = self._agg_fns_of(sel)
+        d_index = {code: i for i, code in enumerate(dc)}
+        folded = {c: delta_renamed.cols[c].copy() for c in cols}
+        for i in np.flatnonzero(matched_mask):
+            j = d_index[cc[i]]
+            for c, fn in zip(agg_cols, agg_fns[n_keys:] if len(agg_fns) == len(cols) else agg_fns):
+                folded[c][j] = _fold_partial(fn, np.array([cur.cols[c][i]]),
+                                             np.array([folded[c][j]]))[0]
+        if matched_mask.any():
+            targets = {(): np.stack([
+                cur.cols[WRITEID_COL][matched_mask],
+                cur.cols[ROWID_COL][matched_mask],
+            ], axis=1)}
+            tbl.delete(txn, targets)
+        tbl.insert(txn, VectorBatch(folded), update_stats=False)
+        self.hms.commit_txn(txn)
+
+    @staticmethod
+    def _agg_fns_of(sel: Optional[A.Select]) -> List[str]:
+        if sel is None:
+            return []
+        fns = []
+        for e, _ in sel.projections:
+            aggs = [x for x in A.walk(e) if isinstance(x, A.Func) and x.name in A.AGG_FUNCS]
+            fns.append(aggs[0].name if aggs else "key")
+        return fns
+
+    # ==================================================================
+    # DML (§3.2: single-statement transactions, update = delete + insert)
+    # ==================================================================
+    def _post_write(self, table: str) -> None:
+        desc = self.hms.get_table(table)
+        if not desc.handler and self.config["compaction_enabled"]:
+            maybe_compact(
+                AcidTable(desc, self.hms), self.hms,
+                CompactionConfig(
+                    minor_delta_threshold=self.config["compaction_minor_threshold"],
+                    major_ratio_threshold=self.config["compaction_major_ratio"],
+                ),
+            )
+
+    def _insert(self, stmt: A.Insert) -> QueryResult:
+        desc = self.hms.get_table(stmt.table)
+        if isinstance(stmt.source, A.Values):
+            names = stmt.columns or [c for c, _ in desc.schema]
+            one = VectorBatch({"__d": np.zeros(1)})
+            cols = {n: [] for n in names}
+            for row in stmt.source.rows:
+                for n, e in zip(names, row):
+                    cols[n].append(eval_expr(e, one, None)[0])
+            batch = VectorBatch({n: np.array(v) for n, v in cols.items()})
+        else:
+            plan, _ = self._plan_query(stmt.source)
+            ctx = self._make_ctx(self.config)
+            out = Executor(ctx).execute(plan)
+            names = stmt.columns or [c for c, _ in desc.schema]
+            batch = VectorBatch(dict(zip(names, (out.cols[n] for n in plan.output_names()))))
+        batch = _coerce_schema(batch, desc)
+
+        if desc.handler:
+            self.wh.handlers.get(desc.handler).write(desc, batch)
+            return QueryResult(VectorBatch({}), {"inserted": batch.num_rows})
+        txn = self.hms.open_txn()
+        try:
+            AcidTable(desc, self.hms).insert(txn, batch)
+            self.hms.commit_txn(txn)
+        except Exception:
+            if self.hms.txn_state(txn) == "open":
+                self.hms.abort_txn(txn)
+            raise
+        self._post_write(stmt.table)
+        return QueryResult(VectorBatch({}), {"inserted": batch.num_rows, "txn": txn})
+
+    def _scan_with_acid(self, desc, where: Optional[A.Expr], alias: str):
+        """Yield (pvals, batch, mask) for DML target selection."""
+        tbl = AcidTable(desc, self.hms)
+        wl = self.hms.writeid_list(desc.name, self.hms.get_snapshot())
+        scope_cols = {f"{alias}.{c}": c for c, _ in desc.schema}
+        for pvals, b in tbl.scan(wl, keep_acid_cols=True,
+                                 io=LlapIO(self.wh.llap) if self.config["llap"] else None):
+            qb = b.rename({c: f"{alias}.{c}" for c in b.column_names
+                           if not c.startswith("__")})
+            if where is not None and qb.num_rows:
+                bound = Binder(self.hms)._bind_expr(
+                    where, _dml_scope(alias, [c for c, _ in desc.schema])
+                )
+                mask = eval_expr(bound, qb, None).astype(bool)
+            else:
+                mask = np.ones(qb.num_rows, dtype=bool)
+            yield pvals, qb, mask
+
+    def _delete(self, stmt: A.Delete) -> QueryResult:
+        desc = self.hms.get_table(stmt.table)
+        # DELETE ... WHERE col IN (subquery) takes the semi-join path
+        where = stmt.where
+        alias = stmt.table
+        txn = self.hms.open_txn()
+        deleted = 0
+        try:
+            targets = {}
+            if where is not None and _has_subquery(where):
+                sel = A.Select(projections=[(A.Star(), None)],
+                               from_=A.TableRef(stmt.table, alias), where=where)
+                plan = Binder(self.hms).bind(sel)
+                ctx = self._make_ctx({**self.config, "keep_acid_cols": True})
+                out = Executor(ctx).execute(plan)
+                wid_col = WRITEID_COL if WRITEID_COL in out.cols else f"{alias}.{WRITEID_COL}"
+                t = np.stack([out.cols[WRITEID_COL], out.cols[ROWID_COL]], axis=1)
+                targets[()] = t
+                deleted = len(t)
+            else:
+                for pvals, qb, mask in self._scan_with_acid(desc, where, alias):
+                    t = np.stack([qb.cols[WRITEID_COL][mask],
+                                  qb.cols[ROWID_COL][mask]], axis=1)
+                    if len(t):
+                        targets[pvals] = t
+                        deleted += len(t)
+            if targets:
+                AcidTable(desc, self.hms).delete(txn, targets)
+            self.hms.commit_txn(txn)
+        except (WriteConflict, TxnAborted):
+            raise
+        except Exception:
+            if self.hms.txn_state(txn) == "open":
+                self.hms.abort_txn(txn)
+            raise
+        self._post_write(stmt.table)
+        self.wh.result_cache.invalidate_all()
+        return QueryResult(VectorBatch({}), {"deleted": deleted, "txn": txn})
+
+    def _update(self, stmt: A.Update) -> QueryResult:
+        desc = self.hms.get_table(stmt.table)
+        alias = stmt.table
+        tbl = AcidTable(desc, self.hms)
+        txn = self.hms.open_txn()
+        updated = 0
+        try:
+            all_targets, new_parts = {}, []
+            scope = _dml_scope(alias, [c for c, _ in desc.schema])
+            binder = Binder(self.hms)
+            for pvals, qb, mask in self._scan_with_acid(desc, stmt.where, alias):
+                if not mask.any():
+                    continue
+                t = np.stack([qb.cols[WRITEID_COL][mask],
+                              qb.cols[ROWID_COL][mask]], axis=1)
+                all_targets[pvals] = t
+                sel = qb.select(mask)
+                cols = {}
+                for c, _ty in desc.schema:
+                    if c in desc.partition_cols:
+                        cols[c] = np.full(sel.num_rows, dict(zip(desc.partition_cols, pvals))[c])
+                    else:
+                        cols[c] = sel.cols[f"{alias}.{c}"]
+                for col, e in stmt.assignments:
+                    bound = binder._bind_expr(e, scope)
+                    cols[col] = eval_expr(bound, sel, None)
+                new_parts.append(VectorBatch(cols))
+                updated += sel.num_rows
+            if all_targets:
+                # update = delete + insert under one WriteId (§3.2)
+                tbl.delete(txn, all_targets)
+                for pvals in all_targets:
+                    self.hms.record_write_set(txn, desc.name, pvals, "update")
+                tbl.insert(txn, _coerce_schema(VectorBatch.concat(new_parts), desc))
+            self.hms.commit_txn(txn)
+        except (WriteConflict, TxnAborted):
+            raise
+        except Exception:
+            if self.hms.txn_state(txn) == "open":
+                self.hms.abort_txn(txn)
+            raise
+        self._post_write(stmt.table)
+        self.wh.result_cache.invalidate_all()
+        return QueryResult(VectorBatch({}), {"updated": updated, "txn": txn})
+
+    def _merge(self, stmt: A.Merge) -> QueryResult:
+        tgt_desc = self.hms.get_table(stmt.target.name)
+        t_alias = stmt.target.alias or stmt.target.name
+        tbl = AcidTable(tgt_desc, self.hms)
+
+        # source relation
+        binder = Binder(self.hms)
+        if isinstance(stmt.source, A.TableRef):
+            s_alias = stmt.source.alias or stmt.source.name
+            src_sel = A.Select(projections=[(A.Star(), None)],
+                               from_=A.TableRef(stmt.source.name, s_alias))
+        else:
+            s_alias = stmt.source.alias
+            src_sel = A.Select(projections=[(A.Star(), None)], from_=stmt.source)
+        src_plan = binder.bind(src_sel)
+        ctx = self._make_ctx(self.config)
+        src = Executor(ctx).execute(src_plan)
+        src = src.rename({n: (n if "." in n else f"{s_alias}.{n}")
+                          for n in src.column_names})
+
+        # target snapshot with ACID columns, qualified
+        wl = self.hms.writeid_list(tgt_desc.name, self.hms.get_snapshot())
+        tgt_parts = list(tbl.scan(wl, keep_acid_cols=True))
+        tgt = VectorBatch.concat([
+            b.rename({c: f"{t_alias}.{c}" for c in b.column_names
+                      if not c.startswith("__")})
+            for _, b in tgt_parts
+        ]) if tgt_parts else VectorBatch({})
+
+        merged_scope = _dml_scope2({t_alias: [c for c, _ in tgt_desc.schema],
+                                    s_alias: [n.split(".", 1)[1] for n in src.column_names]})
+        on = binder._bind_expr(stmt.on, merged_scope)
+        lkeys, rkeys, residual = _classify_join_condition(
+            on, set(tgt.column_names), set(src.column_names)
+        )
+        from .runtime.exec import _factorize_pair, _combine_codes, _expand_matches
+
+        pairs = [_factorize_pair(tgt.cols[lk], src.cols[rk])
+                 for lk, rk in zip(lkeys, rkeys)]
+        tc, sc = _combine_codes(pairs)
+        order = np.argsort(sc, kind="stable")
+        sc_sorted = sc[order]
+        lo = np.searchsorted(sc_sorted, tc, "left")
+        hi = np.searchsorted(sc_sorted, tc, "right")
+        counts = hi - lo
+        ti, si = _expand_matches(lo, counts, order)
+        joined = VectorBatch({**{k: tgt.cols[k][ti] for k in tgt.cols},
+                              **{k: src.cols[k][si] for k in src.cols}})
+        if residual is not None and joined.num_rows:
+            ok = eval_expr(residual, joined, None).astype(bool)
+            joined = joined.select(ok)
+
+        src_matched = np.zeros(src.num_rows, dtype=bool)
+        if len(si):
+            src_matched[si] = True
+        not_matched = src.select(~src_matched)
+
+        txn = self.hms.open_txn()
+        n_upd = n_del = n_ins = 0
+        try:
+            consumed = np.zeros(joined.num_rows, dtype=bool)
+            del_targets = []
+            ins_parts = []
+            for action in stmt.matched:
+                if action.condition is not None:
+                    cond = binder._bind_expr(action.condition, merged_scope)
+                    m = eval_expr(cond, joined, None).astype(bool) & ~consumed
+                else:
+                    m = ~consumed
+                if not m.any():
+                    continue
+                consumed |= m
+                sel = joined.select(m)
+                del_targets.append(np.stack([sel.cols[WRITEID_COL],
+                                             sel.cols[ROWID_COL]], axis=1))
+                if action.kind == "update":
+                    cols = {c: sel.cols[f"{t_alias}.{c}"] for c, _ in tgt_desc.schema}
+                    for col, e in action.assignments:
+                        bound = binder._bind_expr(e, merged_scope)
+                        cols[col] = eval_expr(bound, sel, None)
+                    ins_parts.append(VectorBatch(cols))
+                    n_upd += sel.num_rows
+                    self.hms.record_write_set(txn, tgt_desc.name, (), "update")
+                else:
+                    n_del += sel.num_rows
+                    self.hms.record_write_set(txn, tgt_desc.name, (), "delete")
+            for action in stmt.not_matched:
+                m = np.ones(not_matched.num_rows, dtype=bool)
+                if action.condition is not None:
+                    cond = binder._bind_expr(action.condition, merged_scope)
+                    m = eval_expr(cond, not_matched, None).astype(bool)
+                sel = not_matched.select(m)
+                names = action.columns or [c for c, _ in tgt_desc.schema]
+                cols = {}
+                for n, e in zip(names, action.values):
+                    bound = binder._bind_expr(e, merged_scope)
+                    cols[n] = eval_expr(bound, sel, None)
+                ins_parts.append(VectorBatch(cols))
+                n_ins += sel.num_rows
+            if del_targets:
+                tbl.delete(txn, {(): np.concatenate(del_targets)})
+            if ins_parts:
+                tbl.insert(txn, _coerce_schema(VectorBatch.concat(ins_parts), tgt_desc))
+            self.hms.commit_txn(txn)
+        except (WriteConflict, TxnAborted):
+            raise
+        except Exception:
+            if self.hms.txn_state(txn) == "open":
+                self.hms.abort_txn(txn)
+            raise
+        self._post_write(tgt_desc.name)
+        self.wh.result_cache.invalidate_all()
+        return QueryResult(VectorBatch({}),
+                           {"updated": n_upd, "deleted": n_del, "inserted": n_ins})
+
+
+# ---------------------------------------------------------------------------
+def _is_cacheable(stmt) -> bool:
+    """No non-deterministic or runtime-constant functions (§4.3)."""
+    bad = A.NON_DETERMINISTIC_FUNCS | A.RUNTIME_CONSTANT_FUNCS
+
+    def scan_sel(s) -> bool:
+        if isinstance(s, A.SetOp):
+            return scan_sel(s.left) and scan_sel(s.right)
+        if not isinstance(s, A.Select):
+            return True
+        exprs = [e for e, _ in s.projections]
+        exprs += [x for x in (s.where, s.having) if x is not None]
+        exprs += [e for e, _ in s.order_by] + list(s.group_by)
+        for e in exprs:
+            for node in A.walk(e):
+                if isinstance(node, A.Func) and node.name in bad:
+                    return False
+                if isinstance(node, A.SubqueryExpr) and not scan_sel(node.query):
+                    return False
+        if isinstance(s.from_, A.SubqueryRef) and not scan_sel(s.from_.query):
+            return False
+        return True
+
+    return scan_sel(stmt)
+
+
+def _has_subquery(e: A.Expr) -> bool:
+    return any(isinstance(x, A.SubqueryExpr) for x in A.walk(e))
+
+
+def _leaf_federated(node: P.PlanNode) -> Optional[P.FederatedScan]:
+    n = node
+    while n.inputs:
+        if len(n.inputs) != 1:
+            return None
+        n = n.inputs[0]
+    return n if isinstance(n, P.FederatedScan) else None
+
+
+def _dml_scope(alias: str, cols: List[str]):
+    from .sql.binder import Scope
+
+    return Scope({alias: cols})
+
+
+def _dml_scope2(tables: Dict[str, List[str]]):
+    from .sql.binder import Scope
+
+    return Scope(tables)
+
+
+def _sql_type(arr: np.ndarray) -> str:
+    return {"i": "BIGINT", "u": "BIGINT", "f": "DOUBLE", "b": "BOOLEAN"}.get(
+        arr.dtype.kind, "STRING"
+    )
+
+
+def _coerce_schema(batch: VectorBatch, desc) -> VectorBatch:
+    from .acid import _np_dtype
+
+    cols = {}
+    for c, ty in desc.schema:
+        if c in batch.cols:
+            want = _np_dtype(ty)
+            v = batch.cols[c]
+            if v.dtype != want:
+                if want.kind == "i" and v.dtype.kind == "f":
+                    v = v.astype(np.int64)
+                elif want.kind == "U" :
+                    v = v.astype(str)
+                else:
+                    v = v.astype(want)
+            cols[c] = v
+    return VectorBatch(cols)
+
+
+def _fold_partial(fn: str, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    if fn in ("sum", "count"):
+        return a + b
+    if fn == "min":
+        return np.minimum(a, b)
+    if fn == "max":
+        return np.maximum(a, b)
+    return b
+
+
+def _mv_sql_of(stmt: A.CreateMaterializedView) -> str:
+    # reconstruct definition text (the parser does not retain raw text)
+    return _select_to_sql(stmt.query)
+
+
+def _select_to_sql(s: A.Select) -> str:
+    parts = ["SELECT "]
+    parts.append(", ".join(
+        f"{_expr_sql(e)}" + (f" AS {a}" if a else "") for e, a in s.projections
+    ))
+    if s.from_ is not None:
+        parts.append(" FROM " + _from_sql(s.from_))
+    if s.where is not None:
+        parts.append(" WHERE " + _expr_sql(s.where))
+    if s.group_by:
+        parts.append(" GROUP BY " + ", ".join(_expr_sql(e) for e in s.group_by))
+    if s.having is not None:
+        parts.append(" HAVING " + _expr_sql(s.having))
+    if s.order_by:
+        parts.append(" ORDER BY " + ", ".join(
+            f"{_expr_sql(e)} {'DESC' if d else 'ASC'}" for e, d in s.order_by))
+    if s.limit is not None:
+        parts.append(f" LIMIT {s.limit}")
+    return "".join(parts)
+
+
+def _from_sql(f) -> str:
+    if isinstance(f, A.TableRef):
+        return f.name + (f" {f.alias}" if f.alias else "")
+    if isinstance(f, A.JoinRef):
+        if f.kind == "cross" and f.condition is None:
+            return f"{_from_sql(f.left)}, {_from_sql(f.right)}"
+        cond = f" ON {_expr_sql(f.condition)}" if f.condition is not None else ""
+        kind = {"inner": "JOIN", "left": "LEFT JOIN", "right": "RIGHT JOIN",
+                "full": "FULL JOIN", "cross": "CROSS JOIN"}[f.kind]
+        return f"{_from_sql(f.left)} {kind} {_from_sql(f.right)}{cond}"
+    if isinstance(f, A.SubqueryRef):
+        return f"({_select_to_sql(f.query)}) {f.alias}"
+    raise ValueError(type(f))
+
+
+def _expr_sql(e: A.Expr) -> str:
+    if isinstance(e, A.Col):
+        return e.qualified
+    if isinstance(e, A.Lit):
+        if isinstance(e.value, str):
+            return "'" + e.value.replace("'", "''") + "'"
+        return str(e.value)
+    if isinstance(e, A.BinOp):
+        return f"({_expr_sql(e.left)} {e.op} {_expr_sql(e.right)})"
+    if isinstance(e, A.UnOp):
+        return f"({e.op} {_expr_sql(e.operand)})"
+    if isinstance(e, A.Func):
+        d = "DISTINCT " if e.distinct else ""
+        args = ", ".join(_expr_sql(a) for a in e.args) if e.args else "*"
+        if not e.args:
+            args = "*" if e.name == "count" else ""
+        return f"{e.name}({d}{args})"
+    if isinstance(e, A.Star):
+        return "*"
+    if isinstance(e, A.Between):
+        n = "NOT " if e.negated else ""
+        return f"({_expr_sql(e.expr)} {n}BETWEEN {_expr_sql(e.low)} AND {_expr_sql(e.high)})"
+    if isinstance(e, A.InList):
+        n = "NOT " if e.negated else ""
+        return f"({_expr_sql(e.expr)} {n}IN ({', '.join(_expr_sql(v) for v in e.values)}))"
+    if isinstance(e, A.IsNull):
+        n = "NOT " if e.negated else ""
+        return f"({_expr_sql(e.expr)} IS {n}NULL)"
+    if isinstance(e, A.Case):
+        ws = " ".join(f"WHEN {_expr_sql(c)} THEN {_expr_sql(v)}" for c, v in e.whens)
+        el = f" ELSE {_expr_sql(e.otherwise)}" if e.otherwise is not None else ""
+        return f"CASE {ws}{el} END"
+    if isinstance(e, A.Cast):
+        return f"CAST({_expr_sql(e.expr)} AS {e.to_type})"
+    raise ValueError(f"cannot render {type(e).__name__}")

@@ -1,0 +1,167 @@
+"""Distributed relational operators via shard_map + jax.lax collectives.
+
+Hive's Tez edges map onto TPU-native collectives (DESIGN.md §2):
+
+  SHUFFLE (hash repartition)  -> jax.lax.all_to_all
+  BROADCAST (map join)        -> jax.lax.all_gather
+  partial aggregation         -> psum / segment-local partials + all_to_all
+
+These run the warehouse's vectorized operators data-parallel across the
+'data' mesh axis: each shard holds a horizontal slice of the table (the
+partition-directory layout maps 1:1 onto shards).  Keys are int64 codes
+(factorized composite keys) and payloads are float columns — matching the
+columnar batch layout after dictionary encoding.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+# ---------------------------------------------------------------------------
+# distributed hash aggregation: local partial agg -> all_to_all by key range
+# ---------------------------------------------------------------------------
+def make_distributed_group_sum(mesh: Mesh, num_groups: int, axis: str = "data"):
+    """Grouped SUM/COUNT over sharded (codes, values).
+
+    Phase 1 (map side): each shard aggregates its rows into a dense (G,)
+    partial — Hive's map-side partial aggregation.
+    Phase 2 (shuffle): G is range-partitioned across shards; partials move
+    with one all_to_all; each shard sums its range — the reduce side.
+    Output: fully-replicated (G,) sums/counts (all_gather at the end).
+    """
+    n_shards = mesh.shape[axis]
+    g_pad = ((num_groups + n_shards - 1) // n_shards) * n_shards
+
+    def kernel(codes, values):
+        # map-side partial aggregation (dense accumulate)
+        sums = jnp.zeros((g_pad,), jnp.float32).at[codes].add(
+            values.astype(jnp.float32))
+        counts = jnp.zeros((g_pad,), jnp.float32).at[codes].add(
+            (codes >= 0).astype(jnp.float32))
+        # shuffle: range-partition the group domain
+        sums = sums.reshape(n_shards, g_pad // n_shards)
+        counts = counts.reshape(n_shards, g_pad // n_shards)
+        sums = jax.lax.all_to_all(sums, axis, 0, 0, tiled=False)
+        counts = jax.lax.all_to_all(counts, axis, 0, 0, tiled=False)
+        # reduce side: sum partials for my key range
+        my_sums = jnp.sum(sums, axis=0)
+        my_counts = jnp.sum(counts, axis=0)
+        # final: replicate (BI-style small result)
+        all_sums = jax.lax.all_gather(my_sums, axis, axis=0, tiled=True)
+        all_counts = jax.lax.all_gather(my_counts, axis, axis=0, tiled=True)
+        return all_sums[:num_groups], all_counts[:num_groups]
+
+    spec_in = P(axis)
+    spec_out = P()
+    return jax.jit(shard_map(
+        kernel, mesh=mesh, in_specs=(spec_in, spec_in),
+        out_specs=(spec_out, spec_out), check_rep=False,
+    ))
+
+
+# ---------------------------------------------------------------------------
+# distributed hash join: all_to_all hash repartition, then local join
+# ---------------------------------------------------------------------------
+def make_shuffle_join(mesh: Mesh, rows_per_shard_out: int, axis: str = "data"):
+    """Inner equi-join of two sharded key/value relations.
+
+    Both sides hash-repartition on the join key with all_to_all so matching
+    keys land on the same shard (Tez SHUFFLE edge), then each shard runs the
+    vectorized local hash join.  Fixed output capacity per shard (static
+    shapes); overflow is reported so the planner can re-run with more
+    capacity (mirrors Hive's reoptimization on memory errors, §4.2).
+
+    Inputs: (l_keys, l_vals) and (r_keys, r_vals), each sharded over `axis`;
+    key = int64 >= 0; -1 marks padding.
+    Returns (out_keys, out_lv, out_rv, overflow_count) per shard.
+    """
+    n_shards = mesh.shape[axis]
+
+    def repartition(keys, vals):
+        n = keys.shape[0]
+        dest = jnp.where(keys >= 0, jnp.mod(keys, n_shards), -1).astype(jnp.int32)
+        cap = n  # per-destination capacity (uniform-hash assumption x1)
+        order = jnp.argsort(dest, stable=True)
+        keys_s, vals_s, dest_s = keys[order], vals[order], dest[order]
+        # position within destination bucket
+        pos = jnp.arange(n) - jnp.searchsorted(dest_s, dest_s, side="left")
+        buf_k = jnp.full((n_shards, cap), -1, keys.dtype)
+        buf_v = jnp.zeros((n_shards, cap), vals.dtype)
+        ok = (dest_s >= 0) & (pos < cap)
+        buf_k = buf_k.at[jnp.where(ok, dest_s, 0), jnp.where(ok, pos, 0)].set(
+            jnp.where(ok, keys_s, -1))
+        buf_v = buf_v.at[jnp.where(ok, dest_s, 0), jnp.where(ok, pos, 0)].set(
+            jnp.where(ok, vals_s, 0))
+        buf_k = jax.lax.all_to_all(buf_k, axis, 0, 0, tiled=False)
+        buf_v = jax.lax.all_to_all(buf_v, axis, 0, 0, tiled=False)
+        return buf_k.reshape(-1), buf_v.reshape(-1)
+
+    def local_join(lk, lv, rk, rv):
+        order = jnp.argsort(rk)
+        rk_s, rv_s = rk[order], rv[order]
+        lo = jnp.searchsorted(rk_s, lk, side="left")
+        hi = jnp.searchsorted(rk_s, lk, side="right")
+        counts = jnp.where(lk >= 0, hi - lo, 0)
+        total = jnp.sum(counts)
+        cap = rows_per_shard_out
+        starts = jnp.cumsum(counts) - counts
+        # expand matches into fixed-capacity output
+        out_k = jnp.full((cap,), -1, lk.dtype)
+        out_l = jnp.zeros((cap,), lv.dtype)
+        out_r = jnp.zeros((cap,), rv.dtype)
+        idx = jnp.arange(cap)
+        src_row = jnp.searchsorted(starts + counts, idx, side="right")
+        src_row = jnp.minimum(src_row, lk.shape[0] - 1)
+        within = idx - starts[src_row]
+        valid = (idx < total) & (within < counts[src_row])
+        r_idx = order[jnp.minimum(lo[src_row] + within, rk.shape[0] - 1)]
+        out_k = jnp.where(valid, lk[src_row], -1)
+        out_l = jnp.where(valid, lv[src_row], 0)
+        out_r = jnp.where(valid, rv_s[jnp.minimum(lo[src_row] + within,
+                                                  rk.shape[0] - 1)], 0)
+        overflow = jnp.maximum(total - cap, 0)
+        return out_k, out_l, out_r, overflow
+
+    def kernel(lk, lv, rk, rv):
+        lk2, lv2 = repartition(lk, lv)
+        rk2, rv2 = repartition(rk, rv)
+        out_k, out_l, out_r, ovf = local_join(lk2, lv2, rk2, rv2)
+        return out_k, out_l, out_r, jax.lax.psum(ovf, axis)
+
+    spec = P(axis)
+    return jax.jit(shard_map(
+        kernel, mesh=mesh, in_specs=(spec, spec, spec, spec),
+        out_specs=(spec, spec, spec, P()), check_rep=False,
+    ))
+
+
+# ---------------------------------------------------------------------------
+# broadcast (map) join: all_gather the small side
+# ---------------------------------------------------------------------------
+def make_broadcast_join(mesh: Mesh, axis: str = "data"):
+    """Inner equi-join where the (small) right side is replicated via
+    all_gather — Hive's map join / Tez BROADCAST edge."""
+
+    def kernel(lk, lv, rk, rv):
+        rk_all = jax.lax.all_gather(rk, axis, axis=0, tiled=True)
+        rv_all = jax.lax.all_gather(rv, axis, axis=0, tiled=True)
+        order = jnp.argsort(rk_all)
+        rk_s, rv_s = rk_all[order], rv_all[order]
+        lo = jnp.searchsorted(rk_s, lk, side="left")
+        found = (lo < rk_s.shape[0]) & (rk_s[jnp.minimum(lo, rk_s.shape[0] - 1)] == lk) & (lk >= 0)
+        rv_match = jnp.where(found, rv_s[jnp.minimum(lo, rk_s.shape[0] - 1)], 0)
+        return jnp.where(found, lk, -1), jnp.where(found, lv, 0), rv_match
+
+    spec = P(axis)
+    return jax.jit(shard_map(
+        kernel, mesh=mesh, in_specs=(spec, spec, spec, spec),
+        out_specs=(spec, spec, spec), check_rep=False,
+    ))

@@ -1,0 +1,30 @@
+"""jit'd public wrapper + host-side bridge for the bloom-probe kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.bloomfilter import BloomFilter, hash_values
+from .bloom import bloom_probe_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("num_hashes", "num_bits"))
+def bloom_probe(h1, h2, bits, num_hashes: int, num_bits: int):
+    return bloom_probe_pallas(h1, h2, bits, num_hashes, num_bits,
+                              interpret=not _on_tpu())
+
+
+def probe_bloom_filter(bf: BloomFilter, values: np.ndarray) -> np.ndarray:
+    """Probe a core.bloomfilter.BloomFilter via the TPU kernel path."""
+    h = hash_values(values)
+    h1 = jnp.asarray((h & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+    h2 = jnp.asarray((h >> np.uint64(32)).astype(np.uint32))
+    bits32 = jnp.asarray(bf.bits.view(np.uint32))
+    return np.asarray(bloom_probe(h1, h2, bits32, bf.num_hashes, bf.num_bits))

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the bloom probe (mirrors core.bloomfilter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bloom_probe_ref(h1, h2, bits, num_hashes: int, num_bits: int):
+    ok = jnp.ones(h1.shape, dtype=bool)
+    for k in range(num_hashes):
+        pos = (h1.astype(jnp.uint32) + jnp.uint32(k) * h2.astype(jnp.uint32)) \
+            & jnp.uint32(num_bits - 1)
+        word = bits[(pos >> jnp.uint32(5)).astype(jnp.int32)]
+        ok &= ((word >> (pos & jnp.uint32(31))) & jnp.uint32(1)).astype(bool)
+    return ok

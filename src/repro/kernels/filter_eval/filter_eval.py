@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: vectorized predicate evaluation (paper §5 / [39]).
+
+Evaluates a conjunction of up to K simple comparisons over K numeric
+columns in one fused pass: ``AND_k (col_k OP_k lit_k)``.  This is Hive's
+vectorized filter operator mapped onto the TPU VPU: columns stream through
+VMEM in (8x128)-aligned blocks and the comparison+AND chain never
+materializes intermediate masks in HBM.
+
+Op codes: 0 '<', 1 '<=', 2 '>', 3 '>=', 4 '==', 5 '!='.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024  # rows per program instance (8 sublanes x 128 lanes)
+
+
+def _cmp(x, op: int, lit: float):
+    if op == 0:
+        return x < lit
+    if op == 1:
+        return x <= lit
+    if op == 2:
+        return x > lit
+    if op == 3:
+        return x >= lit
+    if op == 4:
+        return x == lit
+    return x != lit
+
+
+def _filter_kernel(*refs, ops, lits):
+    col_refs = refs[:-1]
+    out_ref = refs[-1]
+    mask = jnp.ones(out_ref.shape, dtype=jnp.bool_)
+    for ref, op, lit in zip(col_refs, ops, lits):
+        mask &= _cmp(ref[...].astype(jnp.float32), op, lit)
+    out_ref[...] = mask
+
+
+def filter_eval_pallas(columns, ops, lits, interpret: bool = True):
+    """columns: list of (N,) float arrays; ops/lits: static tuples.
+
+    Returns (N,) bool mask for the conjunction.
+    """
+    assert len(columns) == len(ops) == len(lits) and columns
+    n = columns[0].shape[0]
+    block = min(BLOCK, n)
+    pad = (-n) % block
+    cols = [jnp.pad(c.astype(jnp.float32), (0, pad),
+                    constant_values=jnp.float32(0)) for c in columns]
+    grid = ((n + pad) // block,)
+    out = pl.pallas_call(
+        functools.partial(_filter_kernel, ops=tuple(ops), lits=tuple(lits)),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)) for _ in cols],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n + pad,), jnp.bool_),
+        interpret=interpret,
+    )(*cols)
+    return out[:n]

@@ -1,0 +1,18 @@
+"""jit'd public wrapper for the vectorized filter kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .filter_eval import filter_eval_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("ops", "lits"))
+def filter_eval(columns, ops: tuple, lits: tuple):
+    return filter_eval_pallas(list(columns), ops, lits,
+                              interpret=not _on_tpu())

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for vectorized predicate evaluation."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_OPS = {
+    0: lambda x, l: x < l,
+    1: lambda x, l: x <= l,
+    2: lambda x, l: x > l,
+    3: lambda x, l: x >= l,
+    4: lambda x, l: x == l,
+    5: lambda x, l: x != l,
+}
+
+
+def filter_eval_ref(columns, ops, lits):
+    mask = jnp.ones(columns[0].shape, dtype=bool)
+    for c, op, lit in zip(columns, ops, lits):
+        mask &= _OPS[op](c.astype(jnp.float32), jnp.float32(lit))
+    return mask

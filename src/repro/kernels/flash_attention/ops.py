@@ -1,0 +1,19 @@
+"""jit'd public wrapper for causal flash attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .flash_attention import flash_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128):
+    return flash_attention_pallas(q, k, v, causal=causal, block_q=block_q,
+                                  block_k=block_k, interpret=not _on_tpu())

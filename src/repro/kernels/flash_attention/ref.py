@@ -1,0 +1,19 @@
+"""Pure-jnp oracle: exact causal softmax attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import jax
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """q/k/v: (B, H, S, d)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(d)
+    if causal:
+        S = q.shape[2]
+        mask = jnp.tril(jnp.ones((S, S), dtype=bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32)).astype(q.dtype)

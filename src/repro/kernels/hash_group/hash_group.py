@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: grouped aggregation as one-hot x MXU matmul.
+
+Hive's hash aggregation has no efficient TPU analogue (no scatter units);
+the TPU-native re-think is: for a bounded group domain G, grouped SUM/COUNT
+is a dense matmul ``one_hot(codes)^T @ values`` — which the MXU executes at
+full rate.  The grid walks row blocks sequentially; the (G_block,) partial
+accumulators live in the output block (revisited per row-block), giving an
+HBM-resident accumulator only G floats wide.
+
+Shapes are padded to lane multiples (G to 128, rows to the block size).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 2048
+
+
+def _group_kernel(codes_ref, vals_ref, sums_ref, counts_ref, *, num_groups):
+    ri = pl.program_id(0)
+
+    @pl.when(ri == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    codes = codes_ref[...]  # (R,) int32; -1 = masked/padding
+    vals = vals_ref[...].astype(jnp.float32)  # (R,)
+    onehot = (codes[:, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (codes.shape[0], num_groups), 1)
+              ).astype(jnp.float32)  # (R, G)
+    sums_ref[...] += jnp.dot(vals[None, :], onehot,
+                             preferred_element_type=jnp.float32)[0]
+    counts_ref[...] += jnp.sum(onehot, axis=0)
+
+
+def hash_group_pallas(codes, values, num_groups: int, interpret: bool = True):
+    """codes: (N,) int32 in [0, num_groups); values: (N,) float.
+
+    Returns (sums (G,), counts (G,)) float32.
+    """
+    n = codes.shape[0]
+    g = ((num_groups + 127) // 128) * 128  # lane-align the group domain
+    block = min(ROW_BLOCK, max(((n + 7) // 8) * 8, 8))
+    pad = (-n) % block
+    codes_p = jnp.pad(codes.astype(jnp.int32), (0, pad), constant_values=-1)
+    vals_p = jnp.pad(values.astype(jnp.float32), (0, pad))
+    grid = ((n + pad) // block,)
+    sums, counts = pl.pallas_call(
+        functools.partial(_group_kernel, num_groups=g),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((g,), lambda i: (0,)),
+            pl.BlockSpec((g,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g,), jnp.float32),
+            jax.ShapeDtypeStruct((g,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(codes_p, vals_p)
+    return sums[:num_groups], counts[:num_groups]

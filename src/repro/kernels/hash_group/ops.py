@@ -1,0 +1,18 @@
+"""jit'd public wrapper for the grouped-aggregation kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .hash_group import hash_group_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("num_groups",))
+def hash_group(codes, values, num_groups: int):
+    return hash_group_pallas(codes, values, num_groups,
+                             interpret=not _on_tpu())

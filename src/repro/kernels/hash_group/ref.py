@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for grouped aggregation."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def hash_group_ref(codes, values, num_groups: int):
+    valid = codes >= 0
+    sums = jnp.zeros(num_groups, jnp.float32).at[
+        jnp.where(valid, codes, 0)].add(
+        jnp.where(valid, values.astype(jnp.float32), 0.0))
+    counts = jnp.zeros(num_groups, jnp.float32).at[
+        jnp.where(valid, codes, 0)].add(valid.astype(jnp.float32))
+    return sums, counts

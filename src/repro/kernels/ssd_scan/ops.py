@@ -1,0 +1,19 @@
+"""jit'd public wrapper for the SSD scan kernel (interpret-mode on CPU)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .ssd_scan import ssd_scan_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dA, Bm, Cm, chunk: int = 256):
+    """Mamba2 SSD scan; returns (y, None) mirroring ssd_reference's API."""
+    y = ssd_scan_pallas(x, dA, Bm, Cm, chunk, interpret=not _on_tpu())
+    return y, None

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the SSD chunk-scan kernel."""
+from __future__ import annotations
+
+from ...models.mamba2 import ssd_reference
+
+
+def ssd_scan_ref(x, dA, Bm, Cm, chunk: int):
+    y, _final = ssd_reference(x, dA, Bm, Cm, chunk)
+    return y

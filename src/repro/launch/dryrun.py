@@ -1,0 +1,284 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init).  For every cell this driver:
+
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. resolves parameter/optimizer/cache shardings via the divisibility-aware
+     planner,
+  3. ``jax.jit(step).lower(**ShapeDtypeStruct inputs).compile()`` — no
+     device allocation anywhere,
+  4. records memory_analysis(), cost_analysis(), and the collective-byte
+     account parsed from the optimized HLO into
+     ``experiments/dryrun/<arch>__<shape>__<mesh>.json``.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--debug-mesh]
+"""
+import argparse
+import functools
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import (
+    LM_SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    get_config,
+    load_all,
+    supported_shapes,
+)
+from ..models import model as M
+from ..train.optimizer import adamw_init, adamw_state_axes
+from ..train.steps import input_specs, make_prefill_step, make_serve_step, make_train_step
+from .hlo_analysis import analyze_hlo, roofline_terms
+from .mesh import make_debug_mesh, make_production_mesh, shard_ctx
+from .sharding import resolve_pspec, sharded_bytes_per_device, tree_shardings
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+# microbatch (gradient accumulation) counts per train cell — keeps the
+# per-microbatch logits buffer sharded-small (see DESIGN.md §4)
+TRAIN_MICROBATCHES = {"default": 8}
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh, specs):
+    """Input shardings: batch dims over (pod,data); cache seq-sharded when
+    batch does not divide the DP axes (long_500k, batch=1)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    B = shape.global_batch
+
+    def spec_for_batch_leaf(leaf):
+        pref = (tuple(dp),) + (None,) * (len(leaf.shape) - 1)
+        return resolve_pspec(pref, leaf.shape, mesh)
+
+    from jax.sharding import NamedSharding
+
+    if shape.kind in ("train", "prefill"):
+        return jax.tree.map(
+            lambda l: NamedSharding(mesh, spec_for_batch_leaf(l)), specs
+        )
+    # decode: tokens/pos + cache
+    dp_over_seq = B % dp_size != 0
+    cache_ax = M.cache_axes(cfg, B, dp_over_seq)
+    out = {}
+    out["inputs"] = NamedSharding(mesh, spec_for_batch_leaf(specs["inputs"]))
+    out["pos"] = NamedSharding(mesh, resolve_pspec((), (), mesh))
+    if dp_over_seq:
+        # seq-dim sharding for the KV cache: (periods, B, S, Hkv, hd)
+        def cache_spec(ax, leaf):
+            # replace the batch 'data' pref with seq 'data'
+            pref = list(ax)
+            return resolve_pspec(tuple(pref), leaf.shape, mesh, expand_data=True)
+        from .sharding import _is_axes_leaf
+        # move 'data' from batch dim to seq dim for attention caches
+        def retarget(ax):
+            ax = list(ax)
+            # attention cache leaves: (periods, B, S, H, hd): len 5
+            if len(ax) >= 4 and ax[1] == "data":
+                ax[1] = None
+                ax[2] = "data"
+            return tuple(ax)
+        cache_ax = jax.tree.map(retarget, cache_ax, is_leaf=_is_axes_leaf)
+    out["cache"] = tree_shardings(cache_ax, specs["cache"], mesh,
+                                  expand_data=True)
+    return out
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE); decode: D = new tokens only."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # one token per sequence
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, debug_mesh: bool,
+             out_dir: str = OUT_DIR, mb_override: Optional[int] = None,
+             attn_impl: str = "blocked", remat_mode: str = "per_period",
+             tag: str = "") -> Dict:
+    from ..models.layers import set_attention_impl
+    from ..models.model import set_remat_mode
+
+    set_attention_impl(attn_impl)
+    set_remat_mode(remat_mode)
+    cfg = get_config(arch)
+    shape = LM_SHAPES[shape_name]
+    mesh = (make_debug_mesh(multi_pod=multi_pod) if debug_mesh
+            else make_production_mesh(multi_pod=multi_pod))
+    ctx = shard_ctx(mesh)
+    chips = int(np.prod(list(mesh.shape.values())))
+    mesh_name = ("debug_" if debug_mesh else "") + \
+        ("2x16x16" if multi_pod and not debug_mesh else
+         "16x16" if not debug_mesh else "x".join(map(str, mesh.shape.values())))
+
+    t0 = time.time()
+    params_shapes = jax.eval_shape(
+        functools.partial(M.init_params, cfg), jax.random.PRNGKey(0))
+    axes = M.param_axes(cfg)
+    param_sh = tree_shardings(axes, params_shapes, mesh)
+    specs = input_specs(cfg, shape)
+
+    with mesh:
+        if shape.kind == "train":
+            mb = mb_override or TRAIN_MICROBATCHES.get(
+                (arch, shape_name), TRAIN_MICROBATCHES["default"])
+            opt_shapes = jax.eval_shape(adamw_init, params_shapes)
+            opt_sh = tree_shardings(adamw_state_axes(axes), opt_shapes, mesh)
+            step = make_train_step(cfg, ctx, microbatches=mb)
+            bsh = batch_shardings(cfg, shape, mesh, specs["batch"])
+            jitted = jax.jit(
+                step,
+                in_shardings=(param_sh, opt_sh, bsh),
+                out_shardings=(param_sh, opt_sh, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_shapes, opt_shapes, specs["batch"])
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg, ctx)
+            bsh = batch_shardings(cfg, shape, mesh, specs)
+            jitted = jax.jit(step, in_shardings=(param_sh, bsh["inputs"]))
+            lowered = jitted.lower(params_shapes, specs["inputs"])
+        else:  # decode
+            step = make_serve_step(cfg, ctx)
+            bsh = batch_shardings(cfg, shape, mesh, specs)
+            jitted = jax.jit(
+                step,
+                in_shardings=(param_sh, bsh["cache"], bsh["inputs"], bsh["pos"]),
+                out_shardings=(None, bsh["cache"]),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(params_shapes, specs["cache"],
+                                   specs["inputs"], specs["pos"])
+
+        compiled = lowered.compile()
+
+    compile_s = time.time() - t0
+    mem = compiled.memory_analysis()
+    mem_dict = {}
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                mem_dict[k] = int(v)
+    cost = compiled.cost_analysis() or {}
+
+    # trip-count-corrected accounting from the optimized per-device HLO
+    hlo_text = compiled.as_text()
+    hc = analyze_hlo(hlo_text)
+
+    rf = roofline_terms(
+        per_device_flops=hc.flops,
+        per_device_bytes=hc.bytes_accessed,
+        per_device_collective_bytes=hc.collective_bytes,
+        chips=chips,
+        model_flops=model_flops(cfg, shape),
+    )
+    param_bytes_dev = sharded_bytes_per_device(params_shapes, param_sh)
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "chips": chips,
+        "kind": shape.kind,
+        "compile_seconds": round(compile_s, 1),
+        "params_total": int(cfg.param_count()),
+        "params_active": int(cfg.active_param_count()),
+        "param_bytes_per_device": int(param_bytes_dev),
+        "memory_analysis": mem_dict,
+        "cost_analysis_raw": {k: float(v) for k, v in cost.items()
+                              if isinstance(v, (int, float))},
+        "hlo_corrected": {
+            "per_device_flops": hc.flops,
+            "per_device_bytes": hc.bytes_accessed,
+            "loop_trip_counts": hc.trip_counts,
+        },
+        "collectives": {
+            "per_device_bytes_by_type": {k: float(v)
+                                         for k, v in hc.collective_by_type.items()},
+            "op_count": hc.collective_count,
+        },
+        "roofline": rf.to_dict(),
+    }
+    result["attn_impl"] = attn_impl
+    result["remat_mode"] = remat_mode
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    fname = f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--debug-mesh", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--attn-impl", default="blocked",
+                    choices=["blocked", "online"])
+    ap.add_argument("--remat-mode", default="per_period",
+                    choices=["per_period", "sqrt"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out-dir", default=OUT_DIR)
+    args = ap.parse_args()
+
+    load_all()
+    cells = []
+    if args.all:
+        from ..configs.base import ARCH_IDS
+        for arch in ARCH_IDS:
+            for sh in supported_shapes(get_config(arch)):
+                cells.append((arch, sh))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    failures = 0
+    for arch, sh in cells:
+        for mp in meshes:
+            tag = f"{arch} x {sh} x {'2x16x16' if mp else '16x16'}"
+            try:
+                r = run_cell(arch, sh, mp, args.debug_mesh, args.out_dir,
+                             args.microbatches, attn_impl=args.attn_impl,
+                             remat_mode=args.remat_mode, tag=args.tag)
+                rf = r["roofline"]
+                print(f"OK   {tag}: compile={r['compile_seconds']}s "
+                      f"compute={rf['compute_s']:.4f}s memory={rf['memory_s']:.4f}s "
+                      f"coll={rf['collective_s']:.4f}s bound={rf['bottleneck']} "
+                      f"MF/HF={rf['flops_ratio']:.3f}", flush=True)
+            except Exception as e:
+                failures += 1
+                print(f"FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} dry-run cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.  The single-pod production mesh is 16x16
+(256 chips, TPU v5e pod); the multi-pod mesh adds a leading 'pod' axis
+(2 pods = 512 chips).  The 'pod' axis is pure data parallelism — only
+gradient all-reduce crosses the pod (ICI/DCN) boundary.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(*, multi_pod: bool = False):
+    """Small mesh for CI-sized dry-run smoke tests (8 host devices)."""
+    shape = (2, 2, 2) if multi_pod else (2, 4)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def shard_ctx(mesh):
+    from ..models.layers import ShardCtx
+
+    return ShardCtx(dp=dp_axes(mesh), tp="model", axis_sizes=dict(mesh.shape))

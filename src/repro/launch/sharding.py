@@ -1,0 +1,93 @@
+"""Divisibility-aware sharding resolver.
+
+Model code declares *preferred* mesh axes per tensor dimension (an "axes
+pytree" mirroring the param pytree).  This module resolves preferences to
+concrete NamedShardings against an actual mesh, dropping any axis that does
+not evenly divide its dimension (e.g. qwen3's 40 heads vs model=16 — the
+head sharding is dropped while d_ff=17408 shards cleanly) and never using a
+mesh axis twice in one spec.
+
+``expand_data=True`` maps the logical 'data' axis to ('pod','data') — used
+for batch/activation/cache trees on the multi-pod mesh, while parameters
+keep FSDP confined to one pod (gradients, not weights, cross the DCN).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and len(x) > 0 and all(
+        y is None or isinstance(y, str) or (
+            isinstance(y, tuple) and all(isinstance(z, str) for z in y)
+        )
+        for y in x
+    )
+
+
+def resolve_pspec(pref: Tuple, shape: Tuple[int, ...], mesh,
+                  expand_data: bool = False) -> P:
+    used = set()
+    resolved = []
+    pref = tuple(pref) + (None,) * (len(shape) - len(pref))
+    for dim, ax in zip(shape, pref):
+        if ax is None:
+            resolved.append(None)
+            continue
+        names = list(ax) if isinstance(ax, tuple) else [ax]
+        if expand_data and "data" in names and "pod" in mesh.shape:
+            names = ["pod" if n == "data" else n for n in names] + ["data"]
+            # ('pod','data') acts as the combined DP axis
+            seen = set()
+            names = [n for n in names if not (n in seen or seen.add(n))]
+        names = [n for n in names if n in mesh.shape and n not in used]
+        total = int(np.prod([mesh.shape[n] for n in names])) if names else 1
+        if names and dim % total == 0 and dim > 0:
+            resolved.append(tuple(names) if len(names) > 1 else names[0])
+            used.update(names)
+        else:
+            # try each axis individually before giving up
+            placed = False
+            for n in names:
+                if dim % mesh.shape[n] == 0:
+                    resolved.append(n)
+                    used.add(n)
+                    placed = True
+                    break
+            if not placed:
+                resolved.append(None)
+    return P(*resolved)
+
+
+def tree_shardings(axes_tree, shape_tree, mesh, expand_data: bool = False):
+    """NamedShardings for a pytree given its axes-preferences pytree."""
+
+    def mk(ax, leaf):
+        return NamedSharding(
+            mesh, resolve_pspec(ax, leaf.shape, mesh, expand_data=expand_data)
+        )
+
+    return jax.tree.map(mk, axes_tree, shape_tree, is_leaf=_is_axes_leaf)
+
+
+def sharded_bytes_per_device(shape_tree, sharding_tree) -> int:
+    """Analytic per-device bytes for a sharded pytree (dry-run reporting)."""
+    total = 0
+    for leaf, sh in zip(jax.tree.leaves(shape_tree), jax.tree.leaves(
+            sharding_tree, is_leaf=lambda x: isinstance(x, NamedSharding))):
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        div = 1
+        spec = sh.spec
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * len(leaf.shape)):
+            if ax is None:
+                continue
+            names = ax if isinstance(ax, tuple) else (ax,)
+            for nm in names:
+                div *= sh.mesh.shape[nm]
+        total += n * leaf.dtype.itemsize // max(div, 1)
+    return total

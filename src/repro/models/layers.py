@@ -1,0 +1,355 @@
+"""Core transformer layers: norms, RoPE, attention (GQA/MQA, qk-norm,
+sliding window), gated MLPs — pure JAX, shard-constraint aware.
+
+All functions take a `ShardCtx` that applies `with_sharding_constraint`s
+only when a mesh is active (dry-run / production) and silently no-ops in
+single-device smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Activation-sharding helper; axes=None disables constraints."""
+
+    dp: Tuple[str, ...] = ()  # data-parallel mesh axes ('pod','data') / ('data',)
+    tp: Optional[str] = None  # tensor-parallel axis ('model')
+    axis_sizes: Optional[Dict[str, int]] = None
+
+    def _fits(self, dim: int, axes) -> bool:
+        if axes is None or self.axis_sizes is None:
+            return True
+        names = axes if isinstance(axes, tuple) else (axes,)
+        total = 1
+        for n in names:
+            total *= self.axis_sizes.get(n, 1)
+        return dim % total == 0
+
+    def constrain(self, x: jnp.ndarray, spec: Tuple) -> jnp.ndarray:
+        if self.axis_sizes is None:
+            return x
+        resolved = []
+        for dim, axes in zip(x.shape, spec):
+            resolved.append(axes if axes and self._fits(dim, axes) else None)
+        try:
+            return jax.lax.with_sharding_constraint(x, P(*resolved))
+        except Exception:
+            return x
+
+    @property
+    def dp_spec(self):
+        return tuple(self.dp) if self.dp else None
+
+
+NOSHARD = ShardCtx()
+
+
+# ---------------------------------------------------------------------------
+# initialization helpers: every parameter leaf is created through `mk`, which
+# records its preferred sharding axes in a parallel tree (see model.py).
+# ---------------------------------------------------------------------------
+def trunc_normal(key, shape, scale, dtype=jnp.bfloat16):
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    std = scale / np.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6,
+             plus_one: bool = False) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    w = scale.astype(jnp.float32)
+    if plus_one:  # gemma-style (1 + w)
+        w = 1.0 + w
+    return (x * w).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, hd/2)
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": trunc_normal(ks[0], (d, hq * hd), 1.0, dtype),
+        "wk": trunc_normal(ks[1], (d, hkv * hd), 1.0, dtype),
+        "wv": trunc_normal(ks[2], (d, hkv * hd), 1.0, dtype),
+        "wo": trunc_normal(ks[3], (hq * hd, d), 1.0, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def attention_axes(cfg: ModelConfig):
+    a = {
+        "wq": ("data", "model"),
+        "wk": ("data", "model"),
+        "wv": ("data", "model"),
+        "wo": ("model", "data"),
+    }
+    if cfg.qk_norm:
+        a["q_norm"] = (None,)
+        a["k_norm"] = (None,)
+    return a
+
+
+def _qkv(p, x, cfg: ModelConfig, ctx: ShardCtx, positions):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(B, S, cfg.num_heads, hd)
+    k = (x @ p["wk"]).reshape(B, S, cfg.num_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(B, S, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = ctx.constrain(q, (ctx.dp_spec, None, ctx.tp, None))
+    k = ctx.constrain(k, (ctx.dp_spec, None, ctx.tp, None))
+    v = ctx.constrain(v, (ctx.dp_spec, None, ctx.tp, None))
+    return q, k, v
+
+
+def _repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    if n_rep == 1:
+        return k
+    B, S, Hkv, hd = k.shape
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+# Attention implementation selector (perf hillclimb, EXPERIMENTS.md §Perf):
+#   'blocked' — baseline: q-chunked exact softmax; (q_block, S) score rows
+#               materialize (HBM traffic grows with S)
+#   'online'  — flash-style online softmax over VMEM-sized (q, k) tiles;
+#               score tiles never leave the chip (jnp formulation of
+#               kernels/flash_attention, so it lowers everywhere)
+_ATTENTION_IMPL = "blocked"
+
+
+def set_attention_impl(name: str) -> None:
+    global _ATTENTION_IMPL
+    assert name in ("blocked", "online")
+    _ATTENTION_IMPL = name
+
+
+def attention(
+    p,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    ctx: ShardCtx,
+    *,
+    sliding_window: Optional[int] = None,
+    q_block: int = 1024,
+) -> jnp.ndarray:
+    """Causal self-attention for train/prefill."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _qkv(p, x, cfg, ctx, positions)
+    n_rep = cfg.num_heads // cfg.num_kv_heads
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    q = q.transpose(0, 2, 1, 3)  # (B, H, S, hd)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+
+    if _ATTENTION_IMPL == "online":
+        out = _attention_online(q, k, v, sliding_window, x.dtype)
+    else:
+        out = _attention_blocked(q, k, v, sliding_window, x.dtype, q_block)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, cfg.num_heads * hd)
+    out = out @ p["wo"]
+    return ctx.constrain(out, (ctx.dp_spec, None, None))
+
+
+def _attention_blocked(q, k, v, sliding_window, dtype, q_block):
+    B, H, S, hd = q.shape
+    scale = 1.0 / np.sqrt(hd)
+    nb = max(S // q_block, 1)
+    if S % q_block != 0:
+        nb, q_block = 1, S
+
+    def chunk(carry, qb_idx):
+        qs = qb_idx * q_block
+        qi = jax.lax.dynamic_slice_in_dim(q, qs, q_block, axis=2)
+        scores = jnp.einsum("bhqd,bhkd->bhqk", qi.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        qpos = qs + jnp.arange(q_block)[:, None]
+        kpos = jnp.arange(S)[None, :]
+        mask = kpos <= qpos
+        if sliding_window is not None:
+            mask &= kpos > qpos - sliding_window
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32))
+        return carry, out.astype(dtype)
+
+    _, chunks = jax.lax.scan(chunk, None, jnp.arange(nb))
+    return chunks.transpose(1, 2, 0, 3, 4).reshape(B, H, S, hd)
+
+
+def _attention_online(q, k, v, sliding_window, dtype,
+                      q_tile: int = 512, k_tile: int = 512):
+    """Flash-style online softmax: running (max, denom, acc) per q tile,
+    scanned over k tiles.  Every intermediate is a (q_tile, k_tile) or
+    (q_tile, hd) tile — VMEM-resident on TPU."""
+    B, H, S, hd = q.shape
+    scale = 1.0 / np.sqrt(hd)
+    q_tile = min(q_tile, S)
+    k_tile = min(k_tile, S)
+    if S % q_tile or S % k_tile:
+        q_tile = k_tile = S
+    nq, nk = S // q_tile, S // k_tile
+
+    kt = k.astype(jnp.float32).reshape(B, H, nk, k_tile, hd)
+    vt = v.astype(jnp.float32).reshape(B, H, nk, k_tile, hd)
+
+    def q_chunk(carry, qi):
+        qs = qi * q_tile
+        qq = jax.lax.dynamic_slice_in_dim(q, qs, q_tile, axis=2).astype(jnp.float32)
+        qpos = qs + jnp.arange(q_tile)[:, None]
+
+        def k_chunk(state, ki):
+            m_prev, l_prev, acc = state
+            kk = kt[:, :, ki]  # (B, H, k_tile, hd)
+            vv = vt[:, :, ki]
+            s = jnp.einsum("bhqd,bhkd->bhqk", qq, kk) * scale
+            kpos = ki * k_tile + jnp.arange(k_tile)[None, :]
+            mask = kpos <= qpos
+            if sliding_window is not None:
+                mask &= kpos > qpos - sliding_window
+            s = jnp.where(mask[None, None], s, -1e30)
+            m_cur = jnp.max(s, axis=-1, keepdims=True)
+            m_new = jnp.maximum(m_prev, m_cur)
+            p_ = jnp.exp(s - m_new)
+            alpha = jnp.exp(m_prev - m_new)
+            l_new = alpha * l_prev + jnp.sum(p_, axis=-1, keepdims=True)
+            acc = acc * alpha + jnp.einsum("bhqk,bhkd->bhqd", p_, vv)
+            return (m_new, l_new, acc), None
+
+        init = (
+            jnp.full((B, H, q_tile, 1), -1e30, jnp.float32),
+            jnp.zeros((B, H, q_tile, 1), jnp.float32),
+            jnp.zeros((B, H, q_tile, hd), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(k_chunk, init, jnp.arange(nk))
+        return carry, (acc / jnp.maximum(l, 1e-30)).astype(dtype)
+
+    _, chunks = jax.lax.scan(q_chunk, None, jnp.arange(nq))
+    return chunks.transpose(1, 2, 0, 3, 4).reshape(B, H, S, hd)
+
+
+def decode_attention(
+    p,
+    x: jnp.ndarray,  # (B, 1, D)
+    cache_k: jnp.ndarray,  # (B, S_max, Hkv, hd)
+    cache_v: jnp.ndarray,
+    pos: jnp.ndarray,  # scalar int32: current position
+    cfg: ModelConfig,
+    ctx: ShardCtx,
+    *,
+    sliding_window: Optional[int] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode with KV cache; returns (out, new_k, new_v)."""
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    S_max = cache_k.shape[1]
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q, k, v = _qkv(p, x, cfg, ctx, positions)
+
+    if sliding_window is not None and S_max == sliding_window:
+        slot = jnp.mod(pos, sliding_window)  # ring buffer for local layers
+    else:
+        slot = pos
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=1) \
+        if False else jax.lax.dynamic_update_slice(
+            cache_k, k.astype(cache_k.dtype), (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v.astype(cache_v.dtype), (0, slot, 0, 0))
+
+    n_rep = cfg.num_heads // cfg.num_kv_heads
+    kk = _repeat_kv(cache_k, n_rep)  # (B, S_max, Hq, hd)
+    vv = _repeat_kv(cache_v, n_rep)
+    scale = 1.0 / np.sqrt(hd)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale
+    kpos = jnp.arange(S_max)[None, None, None, :]
+    if sliding_window is not None and S_max == sliding_window:
+        valid = (kpos <= jnp.minimum(pos, S_max - 1)) | (pos >= S_max)
+    else:
+        valid = kpos <= pos
+    scores = jnp.where(valid, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", w, vv.astype(jnp.float32))
+    out = out.reshape(B, 1, cfg.num_heads * hd).astype(x.dtype)
+    return out @ p["wo"], cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+def init_mlp(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": trunc_normal(ks[1], (d, f), 1.0, dtype),
+        "w_down": trunc_normal(ks[2], (f, d), 1.0, dtype),
+    }
+    if cfg.gated_mlp:
+        p["w_gate"] = trunc_normal(ks[0], (d, f), 1.0, dtype)
+    return p
+
+
+def mlp_axes(cfg: ModelConfig):
+    a = {"w_up": ("data", "model"), "w_down": ("model", "data")}
+    if cfg.gated_mlp:
+        a["w_gate"] = ("data", "model")
+    return a
+
+
+def mlp(p, x: jnp.ndarray, cfg: ModelConfig, ctx: ShardCtx) -> jnp.ndarray:
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    up = x @ p["w_up"]
+    if cfg.gated_mlp:
+        h = act(x @ p["w_gate"]) * up
+    else:
+        h = act(up)
+    h = ctx.constrain(h, (ctx.dp_spec, None, ctx.tp))
+    out = h @ p["w_down"]
+    return ctx.constrain(out, (ctx.dp_spec, None, None))

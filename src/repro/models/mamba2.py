@@ -1,0 +1,232 @@
+"""Mamba2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+intra-chunk compute (MXU-friendly) + a linear inter-chunk state recurrence —
+O(S) total.  Decode is a constant-time state update.  The chunk kernel also
+exists as a Pallas TPU kernel (repro.kernels.ssd_scan) validated against the
+`ssd_reference` here.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from .layers import ShardCtx, rms_norm, trunc_normal
+
+
+# ---------------------------------------------------------------------------
+# reference SSD scan (shared with kernels/ssd_scan/ref.py)
+# ---------------------------------------------------------------------------
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., q) -> (..., q, q) with out[i,j] = sum_{k=j+1..i} x[k]; -inf above diag."""
+    q = x.shape[-1]
+    cum = jnp.cumsum(x, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]  # cum_i - cum_j
+    mask = jnp.tril(jnp.ones((q, q), dtype=bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_reference(
+    x: jnp.ndarray,  # (B, S, H, P) — already multiplied by dt
+    dA: jnp.ndarray,  # (B, S, H) log-decays (dt * A, A < 0)
+    Bm: jnp.ndarray,  # (B, S, N)
+    Cm: jnp.ndarray,  # (B, S, N)
+    chunk: int,
+    initial_state: Optional[jnp.ndarray] = None,  # (B, H, P, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD; returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, f"seq {s} % chunk {q} != 0"
+    nc = s // q
+    xc = x.reshape(b, nc, q, h, p).astype(jnp.float32)
+    Ac = dA.reshape(b, nc, q, h).transpose(0, 3, 1, 2).astype(jnp.float32)  # (b,h,nc,q)
+    Bc = Bm.reshape(b, nc, q, n).astype(jnp.float32)
+    Cc = Cm.reshape(b, nc, q, n).astype(jnp.float32)
+
+    A_cumsum = jnp.cumsum(Ac, axis=-1)  # (b,h,nc,q)
+
+    # 1. intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(Ac))  # (b,h,nc,q,q)
+    Y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", Cc, Bc, L, xc)
+
+    # 2. chunk states (decay each position to chunk end)
+    decay_states = jnp.exp(A_cumsum[..., -1:] - A_cumsum)  # (b,h,nc,q)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", Bc, decay_states, xc)
+
+    # 3. inter-chunk recurrence
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), jnp.float32)
+    chunk_decay = jnp.exp(A_cumsum[..., -1])  # (b,h,nc)
+
+    def step(carry, inp):
+        st, dec = inp  # st: (b,h,p,n), dec: (b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit the state *entering* this chunk
+
+    states_t = states.transpose(1, 0, 2, 3, 4)  # (nc,b,h,p,n)
+    decay_t = chunk_decay.transpose(2, 0, 1)  # (nc,b,h)
+    final, prev_states = jax.lax.scan(step, initial_state.astype(jnp.float32),
+                                      (states_t, decay_t))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b,nc,h,p,n)
+
+    # 4. state -> output contribution
+    state_decay_out = jnp.exp(A_cumsum)  # (b,h,nc,q)
+    Y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cc, prev_states, state_decay_out)
+
+    y = (Y_diag + Y_off).reshape(b, s, h, p)
+    return y, final
+
+
+def ssd_decode_step(
+    state: jnp.ndarray,  # (B, H, P, N)
+    x: jnp.ndarray,  # (B, H, P) — dt-scaled input
+    dA: jnp.ndarray,  # (B, H) log decay
+    Bm: jnp.ndarray,  # (B, N)
+    Cm: jnp.ndarray,  # (B, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    state = state * jnp.exp(dA)[..., None, None] \
+        + jnp.einsum("bhp,bn->bhpn", x, Bm)
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm)
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# the block
+# ---------------------------------------------------------------------------
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = s.num_heads(cfg.d_model)
+    conv_dim = d_inner + 2 * s.d_state
+    d_in_proj = 2 * d_inner + 2 * s.d_state + nheads
+    return d_inner, nheads, conv_dim, d_in_proj
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    s = cfg.ssm
+    d_inner, nheads, conv_dim, d_in_proj = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": trunc_normal(ks[0], (d, d_in_proj), 1.0, dtype),
+        "conv_w": trunc_normal(ks[1], (conv_dim, s.d_conv), 1.0, jnp.float32),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads, dtype=jnp.float32)),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "norm": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": trunc_normal(ks[2], (d_inner, d), 1.0, dtype),
+    }
+
+
+def mamba2_axes(cfg: ModelConfig):
+    return {
+        "in_proj": ("data", "model"),
+        "conv_w": ("model", None),
+        "conv_b": ("model",),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "norm": ("model",),
+        "out_proj": ("model", "data"),
+    }
+
+
+def _split_proj(zxbcdt, cfg):
+    s = cfg.ssm
+    d_inner, nheads, conv_dim, _ = _dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner: d_inner + conv_dim]
+    dt = zxbcdt[..., d_inner + conv_dim:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv: xBC (B, S, C), w (C, K)."""
+    B, S, C = xBC.shape
+    K = w.shape[1]
+    x = xBC.astype(jnp.float32).transpose(0, 2, 1)  # (B, C, S)
+    x = jnp.pad(x, ((0, 0), (0, 0), (K - 1, 0)))
+    out = jax.lax.conv_general_dilated(
+        x[:, :, None, :],  # (B, C, 1, S+K-1)
+        w[:, None, None, :],  # (C, 1, 1, K)
+        window_strides=(1, 1),
+        padding="VALID",
+        feature_group_count=C,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[:, :, 0, :]
+    out = out + b[None, :, None]
+    return jax.nn.silu(out).transpose(0, 2, 1)  # (B, S, C)
+
+
+def mamba2_forward(p, x, cfg: ModelConfig, ctx: ShardCtx,
+                   use_kernel: bool = False):
+    """Training/prefill path: full-sequence chunked SSD."""
+    s = cfg.ssm
+    d_inner, nheads, conv_dim, _ = _dims(cfg)
+    B, S, _ = x.shape
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt = _split_proj(zxbcdt, cfg)
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xs = xBC[..., :d_inner].reshape(B, S, nheads, s.head_dim)
+    Bm = xBC[..., d_inner: d_inner + s.d_state]
+    Cm = xBC[..., d_inner + s.d_state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])  # (H,)
+    dA = dt * A[None, None, :]
+    x_scaled = xs.astype(jnp.float32) * dt[..., None]
+    if use_kernel:
+        from ..kernels.ssd_scan.ops import ssd_scan as _ssd
+        y, _ = _ssd(x_scaled, dA, Bm, Cm, chunk=s.chunk)
+    else:
+        y, _ = ssd_reference(x_scaled, dA, Bm, Cm, chunk=min(s.chunk, S))
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, S, d_inner)
+    y = rms_norm(y.astype(x.dtype), p["norm"]) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = y @ p["out_proj"]
+    return ctx.constrain(out, (ctx.dp_spec, None, None))
+
+
+def mamba2_init_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    d_inner, nheads, conv_dim, _ = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, conv_dim, s.d_conv - 1), dtype),
+        "ssd": jnp.zeros((batch, nheads, s.head_dim, s.d_state), dtype),
+    }
+
+
+def mamba2_decode(p, x, cache, cfg: ModelConfig, ctx: ShardCtx):
+    """One-token decode: O(1) conv-buffer + state update. x: (B, 1, D)."""
+    s = cfg.ssm
+    d_inner, nheads, conv_dim, _ = _dims(cfg)
+    B = x.shape[0]
+    zxbcdt = (x @ p["in_proj"])[:, 0]  # (B, d_in_proj)
+    z, xBC, dt = _split_proj(zxbcdt, cfg)
+
+    window = jnp.concatenate(
+        [cache["conv"], xBC.astype(cache["conv"].dtype)[:, :, None]], axis=2
+    )  # (B, conv_dim, K)
+    conv_out = jnp.einsum("bck,ck->bc", window, p["conv_w"]) + p["conv_b"]
+    xBC_t = jax.nn.silu(conv_out)
+    new_conv = window[:, :, 1:]
+
+    xs = xBC_t[..., :d_inner].reshape(B, nheads, s.head_dim)
+    Bm = xBC_t[..., d_inner: d_inner + s.d_state]
+    Cm = xBC_t[..., d_inner + s.d_state:]
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = dtv * A[None, :]
+    y, new_state = ssd_decode_step(cache["ssd"], xs * dtv[..., None], dA, Bm, Cm)
+    y = y + xs * p["D"][None, :, None]
+    y = y.reshape(B, 1, d_inner)
+    y = rms_norm(y.astype(x.dtype), p["norm"]) * \
+        jax.nn.silu(z.astype(jnp.float32))[:, None, :].astype(x.dtype)
+    out = y @ p["out_proj"]
+    return out, {"conv": new_conv, "ssd": new_state}

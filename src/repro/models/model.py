@@ -1,0 +1,363 @@
+"""Composable decoder-only LM covering all 10 assigned architectures.
+
+Layer stacking uses ``jax.lax.scan`` over *pattern periods* (e.g. gemma3's
+5-local+1-global period, zamba2's 5-ssm+1-shared period) so the compiled HLO
+is O(1) in depth — essential to compile 88-layer models against a 512-device
+mesh.  Remainder layers (``tail_pattern``) run unscanned after the scan;
+zamba2's shared attention block lives outside the scan and is re-applied
+with the same weights.
+
+Param pytrees are mirrored by an *axes* pytree giving each leaf's preferred
+mesh axes; the launcher resolves those to NamedShardings, dropping any axis
+that does not divide the dimension (divisibility-aware planner; see
+DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from .layers import (
+    NOSHARD,
+    ShardCtx,
+    attention,
+    attention_axes,
+    decode_attention,
+    init_attention,
+    init_mlp,
+    mlp,
+    mlp_axes,
+    rms_norm,
+    trunc_normal,
+)
+from .mamba2 import (
+    init_mamba2,
+    mamba2_axes,
+    mamba2_decode,
+    mamba2_forward,
+    mamba2_init_cache,
+    _dims as mamba_dims,
+)
+from .moe import init_moe, moe_axes, moe_ffn
+
+
+# ===========================================================================
+# parameter construction
+# ===========================================================================
+def _init_block(key, kind: str, cfg: ModelConfig, dtype=jnp.bfloat16):
+    if kind == "ssm":
+        k1, _ = jax.random.split(key)
+        return {"ln": jnp.ones((cfg.d_model,), jnp.float32),
+                "mamba": init_mamba2(k1, cfg, dtype)}
+    if kind == "shared_attn":
+        return {}  # weights live in params['shared']
+    k1, k2 = jax.random.split(key)
+    block = {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": init_attention(k1, cfg, dtype),
+    }
+    if kind == "moe":
+        block["moe"] = init_moe(k2, cfg, dtype)
+    else:
+        block["mlp"] = init_mlp(k2, cfg, dtype)
+    return block
+
+
+def _block_axes(kind: str, cfg: ModelConfig):
+    if kind == "ssm":
+        return {"ln": (None,), "mamba": mamba2_axes(cfg)}
+    if kind == "shared_attn":
+        return {}
+    a = {"ln1": (None,), "ln2": (None,), "attn": attention_axes(cfg)}
+    if kind == "moe":
+        a["moe"] = moe_axes(cfg)
+    else:
+        a["mlp"] = mlp_axes(cfg)
+    return a
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> Dict:
+    keys = jax.random.split(key, cfg.num_layers + 4)
+    params: Dict = {}
+    if not cfg.embedding_stub:
+        params["embed"] = trunc_normal(keys[0], (cfg.vocab_size, cfg.d_model),
+                                       1.0, dtype)
+    if not cfg.tie_embeddings or cfg.embedding_stub:
+        params["lm_head"] = trunc_normal(keys[1], (cfg.d_model, cfg.vocab_size),
+                                         1.0, dtype)
+    # scanned periods: stack each pattern position across periods
+    per_period = []
+    ki = 2
+    for rep in range(cfg.num_periods):
+        blocks = []
+        for kind in cfg.layer_pattern:
+            blocks.append(_init_block(keys[ki % len(keys)], kind, cfg, dtype))
+            ki += 1
+        per_period.append(tuple(blocks))
+    params["scan"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per_period) \
+        if cfg.num_periods > 1 else jax.tree.map(lambda x: x[None], per_period[0])
+    params["tail"] = tuple(
+        _init_block(keys[(ki + i) % len(keys)], kind, cfg, dtype)
+        for i, kind in enumerate(cfg.tail_pattern)
+    )
+    if cfg.shared_attention:
+        params["shared"] = {
+            "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+            "attn": init_attention(keys[-2], cfg, dtype),
+            "mlp": init_mlp(keys[-1], cfg, dtype),
+        }
+    params["final_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+    return params
+
+
+def param_axes(cfg: ModelConfig) -> Dict:
+    axes: Dict = {}
+    if not cfg.embedding_stub:
+        axes["embed"] = ("model", "data")
+    if not cfg.tie_embeddings or cfg.embedding_stub:
+        axes["lm_head"] = ("data", "model")
+    period_axes = tuple(_block_axes(kind, cfg) for kind in cfg.layer_pattern)
+    # scanned leaves gain a leading (periods) dim -> prepend None
+    axes["scan"] = jax.tree.map(
+        lambda a: (None,) + tuple(a),
+        period_axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(y, (str, type(None))) for y in x),
+    )
+    axes["tail"] = tuple(_block_axes(kind, cfg) for kind in cfg.tail_pattern)
+    if cfg.shared_attention:
+        axes["shared"] = {
+            "ln1": (None,), "ln2": (None,),
+            "attn": attention_axes(cfg), "mlp": mlp_axes(cfg),
+        }
+    axes["final_norm"] = (None,)
+    return axes
+
+
+# ===========================================================================
+# forward (train / prefill)
+# ===========================================================================
+def _apply_block(kind: str, bp, shared, h, cfg: ModelConfig, ctx: ShardCtx):
+    plus_one = cfg.scale_embeddings  # gemma-family norms use (1 + w)
+    if kind == "ssm":
+        return h + mamba2_forward(bp["mamba"], rms_norm(h, bp["ln"]), cfg, ctx)
+    if kind == "shared_attn":
+        bp = shared
+    window = cfg.sliding_window if kind == "local" else None
+    a = attention(bp["attn"], rms_norm(h, bp["ln1"], plus_one=plus_one),
+                  cfg, ctx, sliding_window=window)
+    h = h + a
+    ff_in = rms_norm(h, bp["ln2"], plus_one=plus_one)
+    if "moe" in bp:
+        f = moe_ffn(bp["moe"], ff_in, cfg, ctx)
+    else:
+        f = mlp(bp["mlp"], ff_in, cfg, ctx)
+    return h + f
+
+
+# Remat/scan structure selector (perf hillclimb, EXPERIMENTS.md §Perf):
+#   'per_period' — baseline: remat each period; the scan saves one carry per
+#                  period (L * B * S * D bf16 — dominates HBM at depth 88)
+#   'sqrt'       — nested scan: outer scan over groups of SQRT_GROUP periods
+#                  saves L/k carries; the inner k periods recompute in the
+#                  backward pass (classic sqrt(L) checkpointing)
+_REMAT_MODE = "per_period"
+SQRT_GROUP = 8
+
+
+def set_remat_mode(name: str) -> None:
+    global _REMAT_MODE
+    assert name in ("per_period", "sqrt")
+    _REMAT_MODE = name
+
+
+def forward(
+    params: Dict,
+    cfg: ModelConfig,
+    inputs: jnp.ndarray,  # (B, S) int32 tokens, or (B, S, D) embeddings (stub)
+    ctx: ShardCtx = NOSHARD,
+    remat: bool = True,
+) -> jnp.ndarray:
+    if cfg.embedding_stub:
+        h = inputs.astype(jnp.bfloat16)
+    else:
+        h = jnp.take(params["embed"], inputs, axis=0)
+        if cfg.scale_embeddings:
+            h = h * np.sqrt(cfg.d_model).astype(np.float32)
+        h = h.astype(jnp.bfloat16)
+    h = ctx.constrain(h, (ctx.dp_spec, None, None))
+    shared = params.get("shared")
+
+    def period_body(carry, block_slice):
+        hh = carry
+        for kind, bp in zip(cfg.layer_pattern, block_slice):
+            hh = _apply_block(kind, bp, shared, hh, cfg, ctx)
+        hh = ctx.constrain(hh, (ctx.dp_spec, None, None))
+        return hh, None
+
+    group = SQRT_GROUP
+    if _REMAT_MODE == "sqrt" and remat and cfg.num_periods % group == 0 \
+            and cfg.num_periods > group:
+        grouped = jax.tree.map(
+            lambda x: x.reshape((cfg.num_periods // group, group) + x.shape[1:]),
+            params["scan"])
+
+        def group_body(carry, group_slice):
+            hh = carry
+            for j in range(group):
+                blk = jax.tree.map(lambda x: x[j], group_slice)
+                hh, _ = jax.checkpoint(period_body)(hh, blk)
+            return hh, None
+
+        h, _ = jax.lax.scan(jax.checkpoint(group_body), h, xs=grouped)
+    else:
+        body = jax.checkpoint(period_body) if remat else period_body
+        h, _ = jax.lax.scan(body, h, xs=params["scan"])
+    for kind, bp in zip(cfg.tail_pattern, params["tail"]):
+        h = _apply_block(kind, bp, shared, h, cfg, ctx)
+
+    h = rms_norm(h, params["final_norm"], plus_one=cfg.scale_embeddings)
+    if cfg.tie_embeddings and not cfg.embedding_stub:
+        logits = h @ params["embed"].T
+    else:
+        logits = h @ params["lm_head"]
+    return ctx.constrain(logits, (ctx.dp_spec, None, ctx.tp))
+
+
+# ===========================================================================
+# decode (serve_step)
+# ===========================================================================
+def _cache_len(kind: str, cfg: ModelConfig, max_seq: int) -> int:
+    if kind == "local" and cfg.sliding_window is not None:
+        return min(cfg.sliding_window, max_seq)
+    return max_seq
+
+
+def _init_block_cache(kind: str, cfg: ModelConfig, batch: int, max_seq: int,
+                      dtype=jnp.bfloat16):
+    if kind == "ssm":
+        return mamba2_init_cache(cfg, batch)
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    S = _cache_len(kind, cfg, max_seq)
+    return {
+        "k": jnp.zeros((batch, S, hkv, hd), dtype),
+        "v": jnp.zeros((batch, S, hkv, hd), dtype),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict:
+    per_period = tuple(
+        _init_block_cache(kind, cfg, batch, max_seq)
+        for kind in cfg.layer_pattern
+    )
+    cache = {
+        "scan": jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.num_periods,) + x.shape),
+            per_period,
+        ),
+        "tail": tuple(
+            _init_block_cache(kind, cfg, batch, max_seq)
+            for kind in cfg.tail_pattern
+        ),
+    }
+    return cache
+
+
+def cache_axes(cfg: ModelConfig, batch: int, dp_over_seq: bool) -> Dict:
+    """Sharding prefs for the cache: batch on data when it divides, else the
+    sequence dim (long_500k, batch=1); kv-heads on model when divisible."""
+
+    def attn_axes():
+        if dp_over_seq:
+            return {"k": ("data", None, "model", None) if False else
+                         (None, "data", "model", None),
+                    "v": (None, "data", "model", None)}
+        return {"k": ("data", None, "model", None),
+                "v": ("data", None, "model", None)}
+
+    def block_axes(kind):
+        if kind == "ssm":
+            return {"conv": ("data", "model", None),
+                    "ssd": ("data", "model", None, None)}
+        return attn_axes()
+
+    per = tuple(block_axes(k) for k in cfg.layer_pattern)
+    return {
+        "scan": jax.tree.map(
+            lambda a: (None,) + tuple(a), per,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(y, (str, type(None))) for y in x),
+        ),
+        "tail": tuple(block_axes(k) for k in cfg.tail_pattern),
+    }
+
+
+def _decode_block(kind: str, bp, shared, h, cache, pos, cfg, ctx):
+    plus_one = cfg.scale_embeddings
+    if kind == "ssm":
+        out, new_cache = mamba2_decode(bp["mamba"], rms_norm(h, bp["ln"]),
+                                       cache, cfg, ctx)
+        return h + out, new_cache
+    if kind == "shared_attn":
+        bp = shared
+    window = cfg.sliding_window if kind == "local" else None
+    a, nk, nv = decode_attention(
+        bp["attn"], rms_norm(h, bp["ln1"], plus_one=plus_one),
+        cache["k"], cache["v"], pos, cfg, ctx, sliding_window=window,
+    )
+    h = h + a
+    ff_in = rms_norm(h, bp["ln2"], plus_one=plus_one)
+    if "moe" in bp:
+        f = moe_ffn(bp["moe"], ff_in, cfg, ctx)
+    else:
+        f = mlp(bp["mlp"], ff_in, cfg, ctx)
+    return h + f, {"k": nk, "v": nv}
+
+
+def decode_step(
+    params: Dict,
+    cache: Dict,
+    inputs: jnp.ndarray,  # (B,) int32 token, or (B, 1, D) embedding (stub)
+    pos: jnp.ndarray,  # scalar int32
+    cfg: ModelConfig,
+    ctx: ShardCtx = NOSHARD,
+) -> Tuple[jnp.ndarray, Dict]:
+    if cfg.embedding_stub:
+        h = inputs.astype(jnp.bfloat16)
+    else:
+        h = jnp.take(params["embed"], inputs[:, None], axis=0)
+        if cfg.scale_embeddings:
+            h = h * np.sqrt(cfg.d_model).astype(np.float32)
+        h = h.astype(jnp.bfloat16)
+    shared = params.get("shared")
+
+    def period_body(carry, xs):
+        hh = carry
+        block_slice, cache_slice = xs
+        new_caches = []
+        for kind, bp, cs in zip(cfg.layer_pattern, block_slice, cache_slice):
+            hh, nc = _decode_block(kind, bp, shared, hh, cs, pos, cfg, ctx)
+            new_caches.append(nc)
+        return hh, tuple(new_caches)
+
+    h, new_scan_cache = jax.lax.scan(
+        period_body, h, xs=(params["scan"], cache["scan"])
+    )
+    new_tail = []
+    for kind, bp, cs in zip(cfg.tail_pattern, params["tail"], cache["tail"]):
+        h, nc = _decode_block(kind, bp, shared, h, cs, pos, cfg, ctx)
+        new_tail.append(nc)
+
+    h = rms_norm(h, params["final_norm"], plus_one=cfg.scale_embeddings)
+    if cfg.tie_embeddings and not cfg.embedding_stub:
+        logits = h[:, 0] @ params["embed"].T
+    else:
+        logits = h[:, 0] @ params["lm_head"]
+    return logits, {"scan": new_scan_cache, "tail": tuple(new_tail)}

@@ -1,0 +1,116 @@
+"""Mixture-of-Experts FFN with capacity-based sorted dispatch.
+
+TPU-native design: no ragged compute.  Tokens pick top-k experts; each
+(token, slot) is assigned a position inside its expert's fixed-capacity
+buffer via a cumulative-sum scheme; a scatter builds the (E, C, D) dispatch
+buffer; expert FFNs run as one batched einsum (MXU-friendly); a gather +
+weighted combine restores token order.  Compute scales with E*C ≈ T*k —
+i.e. with *active* parameters, matching the 6·N_active·D roofline model.
+
+Sharding: expert-stacked weights (E, D, F) shard E over 'model' when it
+divides (olmoe: 64/16); otherwise the per-expert matrices shard over
+('data','model') (grok: 8 experts × 314B params ⇒ fully sharded weights).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from .layers import ShardCtx, trunc_normal
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.d_ff_expert, m.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": trunc_normal(ks[0], (d, e), 1.0, jnp.float32),
+        "w_gate": trunc_normal(ks[1], (e, d, f), 1.0, dtype),
+        "w_up": trunc_normal(ks[2], (e, d, f), 1.0, dtype),
+        "w_down": trunc_normal(ks[3], (e, f, d), 1.0, dtype),
+    }
+
+
+def moe_axes(cfg: ModelConfig):
+    # preferred: experts on 'model'; the resolver drops axes that don't
+    # divide, falling back to the later dims' ('data','model') spec.
+    return {
+        "router": (None, None),
+        "w_gate": ("model", "data", None) if _experts_shardable(cfg) else (None, "data", "model"),
+        "w_up": ("model", "data", None) if _experts_shardable(cfg) else (None, "data", "model"),
+        "w_down": ("model", None, "data") if _experts_shardable(cfg) else (None, "model", "data"),
+    }
+
+
+def _experts_shardable(cfg: ModelConfig) -> bool:
+    return cfg.moe is not None and cfg.moe.num_experts >= 16
+
+
+def moe_ffn(p, x: jnp.ndarray, cfg: ModelConfig, ctx: ShardCtx) -> jnp.ndarray:
+    """x: (B, S, D) -> (B, S, D)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    k, E = m.top_k, m.num_experts
+    xf = x.reshape(T, D)
+
+    logits = xf.astype(jnp.float32) @ p["router"]  # (T, E)
+    topv, topi = jax.lax.top_k(logits, k)  # (T, k)
+    gates = jax.nn.softmax(topv, axis=-1)  # (T, k)
+
+    C = int(np.ceil(T * k / E * m.capacity_factor))
+    C = max(int(np.ceil(C / 8)) * 8, 8)  # pad capacity to a lane multiple
+
+    # position of each (token, slot) inside its expert's buffer
+    flat_e = topi.reshape(T * k)  # expert id per slot
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (T*k, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot
+    pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]  # (T*k,)
+    keep = pos < C  # overflowing tokens are dropped (capacity routing)
+
+    token_of = jnp.repeat(jnp.arange(T), k)
+    buf_idx = jnp.where(keep, flat_e * C + pos, E * C)  # E*C = drop slot
+    dispatch = jnp.zeros((E * C + 1, D), dtype=x.dtype)
+    dispatch = dispatch.at[buf_idx].set(xf[token_of])
+    dispatch = dispatch[: E * C].reshape(E, C, D)
+    # EP when the expert count divides the model axis; otherwise shard the
+    # capacity/feature dims so GSPMD never replicates the (E, C, D) buffer
+    # (grok: E=8 < model=16 — see EXPERIMENTS.md §Perf iteration 2)
+    if _experts_shardable(cfg):
+        disp_spec, h_spec = (ctx.tp, ctx.dp_spec, None), (ctx.tp, ctx.dp_spec, None)
+    else:
+        disp_spec, h_spec = (None, ctx.dp_spec, ctx.tp), (None, ctx.dp_spec, ctx.tp)
+    dispatch = ctx.constrain(dispatch, disp_spec)
+
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    gate_h = jnp.einsum("ecd,edf->ecf", dispatch, p["w_gate"])
+    up_h = jnp.einsum("ecd,edf->ecf", dispatch, p["w_up"])
+    h = act(gate_h) * up_h
+    h = ctx.constrain(h, h_spec)
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["w_down"])  # (E, C, D)
+    out_e = ctx.constrain(out_e, disp_spec)
+
+    flat_out = out_e.reshape(E * C, D)
+    slot_out = jnp.where(keep[:, None], flat_out[jnp.minimum(buf_idx, E * C - 1)], 0)
+    weighted = slot_out * gates.reshape(T * k, 1).astype(slot_out.dtype)
+    y = jax.ops.segment_sum(weighted, token_of, num_segments=T)
+    y = ctx.constrain(y.reshape(B, S, D), (ctx.dp_spec, None, None))
+    return y.astype(x.dtype)
+
+
+def aux_load_balance_loss(p, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Switch-style load-balancing auxiliary loss (used in training)."""
+    m = cfg.moe
+    T = x.shape[0] * x.shape[1]
+    logits = x.reshape(T, -1).astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, topi = jax.lax.top_k(logits, m.top_k)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(topi, m.num_experts, dtype=jnp.float32).sum(1), axis=0
+    )
+    frac_probs = jnp.mean(probs, axis=0)
+    return m.num_experts * jnp.sum(frac_tokens * frac_probs)

@@ -1,0 +1,150 @@
+"""train_step / serve_step / input_specs for every (arch × shape) cell.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for all step
+inputs — weak-type-correct and shardable, with zero device allocation — which
+is what the multi-pod dry-run lowers against.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import model as M
+from ..models.layers import NOSHARD, ShardCtx
+from .optimizer import AdamWState, adamw_init, adamw_update
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean token cross-entropy; logits (B,S,V) any float dtype, labels (B,S)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, ctx: ShardCtx = NOSHARD,
+                    microbatches: int = 1, remat: bool = True, lr: float = 3e-4):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    With microbatches > 1 the global batch is split and gradients accumulate
+    in f32 across a lax.scan (gradient accumulation — keeps the logits
+    buffer at 1/M size, the standard large-batch memory trick)."""
+
+    def loss_fn(params, inputs, labels):
+        logits = M.forward(params, cfg, inputs, ctx, remat=remat)
+        loss = softmax_xent(logits, labels)
+        return loss
+
+    def train_step(params, opt_state: AdamWState, batch: Dict):
+        inputs, labels = batch["inputs"], batch["labels"]
+        if microbatches > 1:
+            B = inputs.shape[0]
+            mb = B // microbatches
+            minputs = inputs.reshape((microbatches, mb) + inputs.shape[1:])
+            mlabels = labels.reshape((microbatches, mb) + labels.shape[1:])
+
+            def acc(carry, xs):
+                gsum, lsum = carry
+                mi, ml = xs
+                l, g = jax.value_and_grad(loss_fn)(params, mi, ml)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(acc, (zeros, 0.0), (minputs, mlabels))
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, inputs, labels)
+        new_params, new_opt, gnorm = adamw_update(grads, opt_state, params, lr=lr)
+        return new_params, new_opt, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# serve (decode)
+# ---------------------------------------------------------------------------
+def make_serve_step(cfg: ModelConfig, ctx: ShardCtx = NOSHARD):
+    """serve_step(params, cache, inputs, pos) -> (next_token, cache).
+
+    One new token against a KV cache of the shape's seq_len."""
+
+    def serve_step(params, cache, inputs, pos):
+        logits, new_cache = M.decode_step(params, cache, inputs, pos, cfg, ctx)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, new_cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, ctx: ShardCtx = NOSHARD):
+    """Forward-only step for prefill shapes (logits for the last position)."""
+
+    def prefill_step(params, inputs):
+        logits = M.forward(params, cfg, inputs, ctx, remat=False)
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+    return prefill_step
+
+
+# ---------------------------------------------------------------------------
+# input specs (dry-run stand-ins; also used to build real smoke batches)
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.embedding_stub:
+            inputs = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+        else:
+            inputs = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return {
+            "batch": {
+                "inputs": inputs,
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            }
+        }
+    if shape.kind == "prefill":
+        if cfg.embedding_stub:
+            inputs = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+        else:
+            inputs = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return {"inputs": inputs}
+    # decode: one new token with a cache of seq_len
+    if cfg.embedding_stub:
+        inputs = jax.ShapeDtypeStruct((B, 1, cfg.d_model), jnp.bfloat16)
+    else:
+        inputs = jax.ShapeDtypeStruct((B,), jnp.int32)
+    cache = jax.eval_shape(lambda: M.init_cache(cfg, B, S))
+    return {
+        "inputs": inputs,
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "cache": cache,
+    }
+
+
+def materialize_batch(cfg: ModelConfig, shape: ShapeConfig, key) -> Dict:
+    """Concrete random inputs matching input_specs (smoke tests / examples)."""
+    specs = input_specs(cfg, shape)
+
+    def mk(s):
+        if s.dtype == jnp.int32 and s.shape and s.shape[-1] != cfg.d_model:
+            return jax.random.randint(key, s.shape, 0, cfg.vocab_size, jnp.int32)
+        if s.dtype == jnp.int32:
+            return jnp.zeros(s.shape, jnp.int32)
+        return jax.random.normal(key, s.shape, jnp.float32).astype(s.dtype) * 0.02
+
+    return jax.tree.map(mk, specs)

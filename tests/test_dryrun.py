@@ -1,0 +1,108 @@
+"""Dry-run machinery: sharding resolver, HLO analysis, small-mesh compile.
+
+The full 33-cell x 2-mesh matrix runs via
+``python -m repro.launch.dryrun --all --both-meshes`` (see EXPERIMENTS.md);
+here we verify the machinery on an 8-device debug mesh in a subprocess.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_resolve_pspec_divisibility():
+    import jax
+
+    from repro.launch.sharding import resolve_pspec
+
+    mesh = jax.make_mesh((1,), ("model",))  # single device: everything divides by 1
+    p = resolve_pspec(("model", "data"), (40, 128), mesh)
+    assert p[0] == "model"
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16, "pod": 2}
+
+    # 40 heads don't divide model=16 -> dropped; 17408 does
+    p = resolve_pspec(("model",), (40,), FakeMesh())
+    assert p == (None,) if len(p) else True
+    p = resolve_pspec(("data", "model"), (5120, 17408), FakeMesh())
+    assert tuple(p) == ("data", "model")
+    # expand_data maps data -> (pod, data) for batch trees
+    p = resolve_pspec(("data",), (128,), FakeMesh(), expand_data=True)
+    assert p[0] == ("pod", "data")
+    # never reuse an axis twice
+    p = resolve_pspec(("model", "model"), (64, 64), FakeMesh())
+    assert p[1] is None
+
+
+def test_hlo_analysis_counts_loops():
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    hlo = """
+HloModule test
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8] get-tuple-element(%p), index=1
+  %d = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8]{1,0} all-reduce(%d), replica_groups={}
+  ROOT %t = (s32[], f32[8,8]) tuple(%i, %ar)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8] parameter(0)
+  %init = (s32[], f32[8,8]) tuple(%a, %a)
+  %w = (s32[], f32[8,8]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[8,8] get-tuple-element(%w), index=1
+}
+"""
+    hc = analyze_hlo(hlo)
+    assert hc.flops == 2 * 8 * 8 * 8 * 5  # dot x trip count 5
+    assert hc.collective_bytes == 8 * 8 * 4 * 5
+    assert hc.collective_by_type == {"all-reduce": 8 * 8 * 4 * 5}
+
+
+@pytest.mark.slow
+def test_debug_mesh_dryrun_cells():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out_dir = os.path.join(REPO, "experiments", "dryrun_test")
+    for arch, shape in [("mamba2-130m", "train_4k"), ("qwen3-14b", "decode_32k")]:
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+             "--shape", shape, "--debug-mesh", "--out-dir", out_dir],
+            capture_output=True, text=True, env=env, timeout=560,
+        )
+        assert r.returncode == 0, r.stdout + r.stderr[-2000:]
+        assert "OK" in r.stdout
+    files = os.listdir(out_dir)
+    assert len(files) >= 2
+    with open(os.path.join(out_dir, files[0])) as f:
+        art = json.load(f)
+    rf = art["roofline"]
+    assert rf["hlo_flops"] > 0 and rf["bottleneck"] in (
+        "compute", "memory", "collective")
+
+
+def test_artifacts_exist_for_all_cells():
+    """The full production-mesh matrix must have been generated."""
+    d = os.path.join(REPO, "experiments", "dryrun")
+    if not os.path.isdir(d):
+        pytest.skip("run `python -m repro.launch.dryrun --all --both-meshes`")
+    names = os.listdir(d)
+    single = [n for n in names if "__16x16" in n and "debug" not in n]
+    multi = [n for n in names if "__2x16x16" in n]
+    assert len(single) >= 33, f"expected 33 single-pod cells, got {len(single)}"
+    assert len(multi) >= 33, f"expected 33 multi-pod cells, got {len(multi)}"

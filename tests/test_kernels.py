@@ -1,0 +1,100 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.bloom.ops import probe_bloom_filter
+from repro.kernels.filter_eval.ops import filter_eval
+from repro.kernels.filter_eval.ref import filter_eval_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.hash_group.ops import hash_group
+from repro.kernels.hash_group.ref import hash_group_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+@pytest.mark.parametrize("n,ncols", [(100, 1), (1024, 2), (5000, 3), (8192, 2)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64, np.int64])
+def test_filter_eval_sweep(n, ncols, dtype):
+    rng = np.random.default_rng(n)
+    cols = [jnp.asarray(rng.uniform(0, 100, n).astype(dtype)) for _ in range(ncols)]
+    ops = tuple((i % 6) for i in range(ncols))
+    lits = tuple(float(rng.uniform(20, 80)) for _ in range(ncols))
+    got = filter_eval(cols, ops, lits)
+    exp = filter_eval_ref(cols, ops, lits)
+    assert (np.array(got) == np.array(exp)).all()
+
+
+@pytest.mark.parametrize("n,g", [(100, 5), (4096, 128), (10_000, 37), (2048, 1000)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_hash_group_sweep(n, g, dtype):
+    rng = np.random.default_rng(g)
+    codes = jnp.asarray(rng.integers(0, g, n).astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=n).astype(dtype))
+    s1, c1 = hash_group(codes, vals, g)
+    s2, c2 = hash_group_ref(codes, vals, g)
+    np.testing.assert_allclose(np.array(s1), np.array(s2), atol=1e-3)
+    np.testing.assert_array_equal(np.array(c1), np.array(c2))
+
+
+@pytest.mark.parametrize("shape", [(1, 1, 64, 16), (2, 3, 128, 32),
+                                   (2, 2, 256, 64), (1, 4, 96, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(shape, dtype):
+    B, H, S, d = shape
+    rng = np.random.default_rng(S)
+    q = jnp.asarray(rng.normal(size=shape), dtype)
+    k = jnp.asarray(rng.normal(size=shape), dtype)
+    v = jnp.asarray(rng.normal(size=shape), dtype)
+    bq = 32 if S % 32 == 0 else S
+    got = flash_attention(q, k, v, block_q=bq, block_k=bq)
+    exp = attention_ref(q, k, v)
+    atol = 3e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.array(got, np.float32),
+                               np.array(exp, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("cfg", [(1, 32, 2, 8, 4, 8), (2, 64, 3, 16, 8, 16),
+                                 (1, 128, 4, 32, 16, 32), (2, 96, 2, 8, 8, 48)])
+def test_ssd_scan_sweep(cfg):
+    B, S, H, P, N, Q = cfg
+    rng = np.random.default_rng(S)
+    x = jnp.asarray(rng.normal(size=(B, S, H, P)).astype(np.float32)) * 0.1
+    dA = -jnp.abs(jnp.asarray(rng.normal(size=(B, S, H)).astype(np.float32))) * 0.2
+    Bm = jnp.asarray(rng.normal(size=(B, S, N)).astype(np.float32)) * 0.3
+    Cm = jnp.asarray(rng.normal(size=(B, S, N)).astype(np.float32)) * 0.3
+    got, _ = ssd_scan(x, dA, Bm, Cm, chunk=Q)
+    exp = ssd_scan_ref(x, dA, Bm, Cm, chunk=Q)
+    np.testing.assert_allclose(np.array(got), np.array(exp), atol=5e-5, rtol=1e-3)
+
+
+def test_ssd_scan_chunk_invariance():
+    """Same result regardless of chunking — the invariant behind SSD."""
+    rng = np.random.default_rng(0)
+    B, S, H, P, N = 1, 64, 2, 8, 4
+    x = jnp.asarray(rng.normal(size=(B, S, H, P)).astype(np.float32)) * 0.1
+    dA = -jnp.abs(jnp.asarray(rng.normal(size=(B, S, H)).astype(np.float32))) * 0.2
+    Bm = jnp.asarray(rng.normal(size=(B, S, N)).astype(np.float32)) * 0.3
+    Cm = jnp.asarray(rng.normal(size=(B, S, N)).astype(np.float32)) * 0.3
+    y8, _ = ssd_scan(x, dA, Bm, Cm, chunk=8)
+    y32, _ = ssd_scan(x, dA, Bm, Cm, chunk=32)
+    np.testing.assert_allclose(np.array(y8), np.array(y32), atol=5e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 2000), k=st.integers(1, 500))
+def test_property_bloom_kernel_matches_host(n, k):
+    from repro.core.bloomfilter import BloomFilter
+
+    rng = np.random.default_rng(n * 1000 + k)
+    members = rng.integers(0, 1_000_000, k)
+    bf = BloomFilter.for_expected(k)
+    bf.add(members)
+    queries = np.concatenate([members, rng.integers(0, 1_000_000, n)])
+    got = probe_bloom_filter(bf, queries)
+    exp = bf.might_contain(queries)
+    assert (got == exp).all()
