@@ -1,7 +1,10 @@
-"""Quickstart: the warehouse in 60 seconds.
+"""Quickstart: the warehouse in 60 seconds, through the client API.
 
-Creates a partitioned ACID table, runs optimized analytic queries, shows the
-results cache, a materialized-view rewrite, and DML with snapshot isolation.
+Connects via the DB-API-style front-end (``repro.api``), creates a
+partitioned ACID table, runs optimized analytic queries with ``?``
+parameters, pages results with a cursor, reuses a prepared statement's
+cached plan, shows the results cache, a materialized-view rewrite, DML with
+snapshot isolation, and EXPLAIN ANALYZE with per-stage pipeline timings.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -9,64 +12,84 @@ import tempfile
 
 import numpy as np
 
-from repro.core.session import Warehouse
+import repro.api as db
 
 
 def main():
-    wh = Warehouse(tempfile.mkdtemp(prefix="tahoe_quickstart_"))
-    s = wh.session()
+    conn = db.connect(tempfile.mkdtemp(prefix="tahoe_quickstart_"))
+    cur = conn.cursor()
 
     print("== DDL: partitioned fact table + dimension (paper §3.1) ==")
-    s.execute("""CREATE TABLE store_sales (
+    cur.execute("""CREATE TABLE store_sales (
         ss_item_sk INT, ss_qty INT, ss_price DECIMAL(7,2), ss_sold_date_sk INT
     ) PARTITIONED BY (ss_sold_date_sk INT)""")
-    s.execute("CREATE TABLE item (i_item_sk INT, i_category STRING)")
+    cur.execute("CREATE TABLE item (i_item_sk INT, i_category STRING)")
 
     rng = np.random.default_rng(0)
     rows = ", ".join(
         f"({rng.integers(0, 30)}, {rng.integers(1, 9)},"
         f" {rng.uniform(1, 50):.2f}, {d})"
         for d in range(8) for _ in range(500))
-    s.execute(f"INSERT INTO store_sales VALUES {rows}")
-    s.execute("INSERT INTO item VALUES " + ", ".join(
-        f"({i}, '{['Sports', 'Books', 'Home'][i % 3]}')" for i in range(30)))
-    print(f"partitions on disk: {len(wh.hms.list_partitions('store_sales'))}")
+    cur.execute(f"INSERT INTO store_sales VALUES {rows}")
+    cur.executemany("INSERT INTO item VALUES (?, ?)",
+                    [(i, ["Sports", "Books", "Home"][i % 3])
+                     for i in range(30)])
+    hms = conn.warehouse.hms
+    print(f"partitions on disk: {len(hms.list_partitions('store_sales'))}")
 
     q = """SELECT i_category, SUM(ss_price * ss_qty) AS rev
            FROM store_sales, item
-           WHERE ss_item_sk = i_item_sk AND ss_sold_date_sk BETWEEN 2 AND 5
+           WHERE ss_item_sk = i_item_sk AND ss_sold_date_sk BETWEEN ? AND ?
            GROUP BY i_category ORDER BY rev DESC"""
-    print("\n== optimized query (CBO + semijoin reduction + LLAP) ==")
-    r = s.execute(q)
-    for row in r.rows:
+    print("\n== parameterized query (CBO + semijoin reduction + LLAP) ==")
+    cur.execute(q, (2, 5))
+    print("description:", [d[:2] for d in cur.description])
+    for row in cur:
         print("  ", row)
-    print("info:", {k: r.info[k] for k in
+    print("info:", {k: cur.info[k] for k in
                     ("semijoin_reducers", "dag_edges", "cache_hit")})
 
-    r2 = s.execute(q)
-    print(f"second run: cache_hit={r2.info['cache_hit']} "
-          f"({r2.info['seconds'] * 1e3:.1f} ms)")
+    cur.execute(q, (2, 5))
+    print(f"second run: cache_hit={cur.info['cache_hit']} "
+          f"plan_cache_hit={cur.info.get('plan_cache_hit')}")
+
+    print("\n== prepared statement: plan bound+optimized once ==")
+    ps = conn.prepare("""SELECT ss_sold_date_sk, COUNT(*) AS n
+                         FROM store_sales WHERE ss_qty >= ?
+                         GROUP BY ss_sold_date_sk ORDER BY ss_sold_date_sk""")
+    for qty in (7, 8):
+        c = ps.execute((qty,))
+        page = c.fetchmany(3)  # cursor pages through the result
+        print(f"  qty>={qty}: first page {page} "
+              f"(plan_cache_hit={c.info.get('plan_cache_hit')})")
 
     print("\n== materialized view rewrite (paper §4.4) ==")
-    s.execute("""CREATE MATERIALIZED VIEW daily_rev AS
+    cur.execute("""CREATE MATERIALIZED VIEW daily_rev AS
         SELECT ss_sold_date_sk, i_category, SUM(ss_price) AS s
         FROM store_sales, item WHERE ss_item_sk = i_item_sk
         GROUP BY ss_sold_date_sk, i_category""")
-    r3 = s.execute("""SELECT i_category, SUM(ss_price) FROM store_sales, item
-                      WHERE ss_item_sk = i_item_sk GROUP BY i_category""")
-    print(f"rewritten against MV: {r3.info.get('mv_used')}"
-          f" (mode={r3.info.get('mv_mode')})")
+    cur.execute("""SELECT i_category, SUM(ss_price) FROM store_sales, item
+                   WHERE ss_item_sk = i_item_sk GROUP BY i_category""")
+    print(f"rewritten against MV: {cur.info.get('mv_used')}"
+          f" (mode={cur.info.get('mv_mode')})")
 
     print("\n== ACID DML with snapshot isolation (paper §3.2) ==")
-    s.execute("UPDATE item SET i_category = 'Clearance' WHERE i_item_sk < 3")
-    s.execute("DELETE FROM store_sales WHERE ss_qty = 1")
-    r4 = s.execute("ALTER MATERIALIZED VIEW daily_rev REBUILD")
-    print("MV rebuild after delete:", r4.info)
-    print("row count:",
-          s.execute("SELECT COUNT(*) FROM store_sales").rows[0][0])
+    cur.execute("UPDATE item SET i_category = 'Clearance' WHERE i_item_sk < ?",
+                (3,))
+    print("updated rows:", cur.rowcount)
+    cur.execute("DELETE FROM store_sales WHERE ss_qty = ?", (1,))
+    print("deleted rows:", cur.rowcount)
+    cur.execute("ALTER MATERIALIZED VIEW daily_rev REBUILD")
+    print("MV rebuild after delete:", cur.info)
+    cur.execute("SELECT COUNT(*) FROM store_sales")
+    print("row count:", cur.fetchone()[0])
 
-    print("\n== EXPLAIN ==")
-    print(s.explain(q))
+    print("\n== EXPLAIN ANALYZE: per-stage pipeline timings ==")
+    cur.execute("EXPLAIN ANALYZE " + q.replace("?", "3", 1).replace("?", "6"))
+    for (line,) in cur.fetchall():
+        print(line)
+
+    conn.close()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,49 @@
+"""Public client API for the warehouse (DB-API 2.0 flavored).
+
+The paper's §2 architecture keeps the client protocol (HiveServer2 / JDBC)
+separate from the query driver; this package is that front-end for the
+reproduction:
+
+    import repro.api as db
+
+    with db.connect("/data/warehouse", engine="auto") as conn:
+        cur = conn.cursor()
+        cur.execute("SELECT region, SUM(amount) FROM sales "
+                    "WHERE amount > ? GROUP BY region", (100.0,))
+        print(cur.description)
+        for row in cur.fetchmany(64):
+            ...
+
+    ps = conn.prepare("SELECT * FROM sales WHERE region = ?")
+    ps.execute(("EMEA",)).fetchall()   # plan cached across executions
+
+Module globals follow PEP 249: ``apilevel``, ``threadsafety`` (connections
+may be shared across threads), and ``paramstyle`` (``qmark``: ``?``).
+"""
+from .connection import Connection, connect
+from .cursor import Cursor
+from .exceptions import (
+    DatabaseError,
+    DataError,
+    Error,
+    IntegrityError,
+    InterfaceError,
+    InternalError,
+    NotSupportedError,
+    OperationalError,
+    ProgrammingError,
+    Warning,
+)
+from .prepared import PreparedStatement
+
+apilevel = "2.0"
+threadsafety = 2
+paramstyle = "qmark"
+
+__all__ = [
+    "Connection", "Cursor", "PreparedStatement", "connect",
+    "apilevel", "threadsafety", "paramstyle",
+    "Warning", "Error", "InterfaceError", "DatabaseError", "DataError",
+    "OperationalError", "IntegrityError", "InternalError",
+    "ProgrammingError", "NotSupportedError",
+]

@@ -1,0 +1,113 @@
+"""Connection layer: ``connect()`` -> :class:`Connection` -> cursors.
+
+Mirrors the HiveServer2/JDBC split of the paper's §2 architecture: the
+connection owns client protocol state (config validation, session, prepared
+statements) while all query driving lives in ``repro.core`` behind the
+staged ``QueryPipeline``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from ..core.session import DEFAULT_CONFIG, Warehouse, _VALID_ENGINES
+from .cursor import Cursor
+from .exceptions import InterfaceError, NotSupportedError, ProgrammingError
+from .prepared import PreparedStatement
+
+
+def connect(warehouse_dir: Optional[str] = None, *,
+            warehouse: Optional[Warehouse] = None, **config) -> "Connection":
+    """Open a connection to a warehouse directory.
+
+    Pass either ``warehouse_dir`` (a path; the warehouse is created/opened
+    there and owned by the connection) or ``warehouse=`` (attach to an
+    existing :class:`Warehouse`, e.g. to share one across connections).
+    Remaining keyword arguments override session config defaults
+    (see ``repro.core.session.DEFAULT_CONFIG``), e.g. ``engine="ref"`` or
+    ``result_cache=False``.
+    """
+    if (warehouse_dir is None) == (warehouse is None):
+        raise InterfaceError(
+            "pass exactly one of warehouse_dir or warehouse="
+        )
+    unknown = set(config) - set(DEFAULT_CONFIG)
+    if unknown:
+        raise ProgrammingError(
+            f"unknown config option(s): {sorted(unknown)}; "
+            f"valid options: {sorted(DEFAULT_CONFIG)}"
+        )
+    if config.get("engine", DEFAULT_CONFIG["engine"]) not in _VALID_ENGINES:
+        raise ProgrammingError(
+            f"engine must be one of {_VALID_ENGINES}"
+        )
+    owns = warehouse is None
+    wh = warehouse if warehouse is not None else Warehouse(warehouse_dir)
+    return Connection(wh, config, owns_warehouse=owns)
+
+
+class Connection:
+    """A client session over one warehouse; create with :func:`connect`."""
+
+    def __init__(self, warehouse: Warehouse, config: dict,
+                 owns_warehouse: bool = True):
+        self._wh = warehouse
+        self._session = warehouse.session(**config)
+        self._owns_warehouse = owns_warehouse
+        self._closed = False
+
+    # ------------------------------------------------------------------
+    @property
+    def warehouse(self) -> Warehouse:
+        return self._wh
+
+    @property
+    def session(self):
+        """The underlying ``repro.core.session.Session`` (escape hatch)."""
+        return self._session
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def cursor(self) -> Cursor:
+        self._check_open()
+        return Cursor(self)
+
+    def prepare(self, sql: str) -> PreparedStatement:
+        """Parse + bind + optimize ``sql`` once; re-executions reuse the
+        cached plan (see ``repro.core.pipeline.PlanCache``)."""
+        self._check_open()
+        return PreparedStatement(self, sql)
+
+    def execute(self, sql: str, params: Optional[Sequence] = None) -> Cursor:
+        """Convenience: ``conn.cursor().execute(sql, params)``."""
+        return self.cursor().execute(sql, params)
+
+    # ------------------------------------------------------------------
+    # transaction surface: statements run under single-statement ACID
+    # transactions (paper §3.2), i.e. autocommit
+    # ------------------------------------------------------------------
+    def commit(self) -> None:
+        self._check_open()  # every statement auto-commits; nothing pending
+
+    def rollback(self) -> None:
+        self._check_open()
+        raise NotSupportedError(
+            "statements auto-commit under single-statement transactions"
+        )
+
+    # ------------------------------------------------------------------
+    def close(self) -> None:
+        if not self._closed and self._owns_warehouse:
+            self._wh.close()  # attached warehouses outlive the connection
+        self._closed = True
+
+    def __enter__(self) -> "Connection":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise InterfaceError("connection is closed")

@@ -174,7 +174,7 @@ def get_config(name: str) -> ModelConfig:
 
 def load_all() -> Dict[str, ModelConfig]:
     for arch in ARCH_IDS:
-        importlib.import_module(f"repro.configs.{arch.replace("-", "_").replace(".", "_")}")
+        importlib.import_module("repro.configs." + arch.replace("-", "_").replace(".", "_"))
     return ARCH_REGISTRY
 
 

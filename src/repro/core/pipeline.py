@@ -1,0 +1,473 @@
+"""Staged query pipeline (paper §2, Figure 2 — the query driver).
+
+``Session`` used to fuse planning and execution into a single blocking call;
+this module carves that path into explicit, individually testable stages:
+
+    Parse -> Bind -> CacheProbe -> MVRewrite -> Optimize -> Compile -> Execute
+
+A typed :class:`QueryContext` flows through the stages; each stage's
+wall-time is recorded and surfaced in ``QueryResult.info['stage_times_ms']``
+and via ``EXPLAIN ANALYZE``.
+
+The module also hosts :class:`PlanCache` (prepared-statement support): the
+Bind stage probes it by statement text, and the Optimize stage fills it with
+the optimized logical plan, so ``PreparedStatement.execute()`` skips
+parse + bind + optimize on re-execution.  Plans are parameter-generic —
+``?`` placeholders stay :class:`repro.core.sql.ast.Param` nodes in the plan
+and bind to values only inside ``ExecContext`` — while the *result* cache key
+includes the parameter values.
+"""
+from __future__ import annotations
+
+import copy
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .optimizer import plan as P
+from .optimizer.mv_rewrite import MVRewriter
+from .optimizer.rules import Optimizer, OptimizerConfig
+from .optimizer.semijoin import SemijoinConfig, insert_semijoin_reducers
+from .optimizer.shared_work import find_shared_subplans
+from .runtime.dag import DAGScheduler, compile_dag
+from .runtime.exec import MemoryPressureError
+from .runtime.vector import VectorBatch
+from .sql import ast as A
+from .sql.binder import Binder
+from .sql.parser import parse
+
+
+# ===========================================================================
+# prepared-statement plan cache
+# ===========================================================================
+# config keys that change the shape of the optimized plan; part of the cache
+# key so sessions with different planning configs don't share plans
+_PLANNING_KEYS = (
+    "cbo", "pushdown", "prune_columns", "join_reorder",
+    "transitive_inference", "partition_pruning", "broadcast_threshold_rows",
+    "mv_rewriting", "semijoin_reduction",
+)
+
+
+@dataclass
+class PlanCacheEntry:
+    stmt: object                 # parsed AST (needed for re-optimization)
+    plan: P.PlanNode             # pristine optimized plan (deep-copied out)
+    bound_key: str               # bound-plan key = result-cache identity
+    tables: List[str]            # participating tables (cache validation)
+    snapshot: Dict[str, Tuple] = field(default_factory=dict)
+    info: Dict[str, object] = field(default_factory=dict)  # planning info
+    created_at: float = field(default_factory=time.time)
+    hits: int = 0
+
+
+def table_state(hms, tables) -> Dict[str, Tuple]:
+    """Per-table (hwm, invalid WriteIds): the transactional identity used to
+    validate both the result cache and the plan cache."""
+    snap = hms.get_snapshot()
+    return {
+        t: (wl.hwm, wl.invalid)
+        for t in tables
+        for wl in [hms.writeid_list(t, snap)]
+    }
+
+
+class PlanCache:
+    """Caches optimized logical plans, keyed like the query-result cache:
+    by resolved statement text plus the planning-relevant session config.
+
+    Entries are validated against the participating tables' WriteId state:
+    any base-table write drops the entry, because the cached plan may embed
+    decisions that are only valid for the old snapshot (MV rewrites most of
+    all — a stale MV-scan plan would silently return stale data)."""
+
+    def __init__(self, max_entries: int = 128):
+        self.max_entries = max_entries
+        self._lock = threading.Lock()
+        self._entries: Dict[str, PlanCacheEntry] = {}
+        self.stats = {"hits": 0, "misses": 0}
+
+    @staticmethod
+    def key_of(sql: str, config: dict) -> Optional[str]:
+        if not sql or not sql.strip():
+            return None
+        cfg = "|".join(f"{k}={config.get(k)!r}" for k in _PLANNING_KEYS)
+        return f"{' '.join(sql.split())}#{cfg}"
+
+    def get(self, key: Optional[str], hms=None) -> Optional[PlanCacheEntry]:
+        if key is None:
+            return None
+        with self._lock:
+            entry = self._entries.get(key)
+        if entry is None:
+            self.stats["misses"] += 1
+            return None
+        if hms is not None and table_state(hms, entry.snapshot) != entry.snapshot:
+            with self._lock:
+                self._entries.pop(key, None)
+            self.stats["misses"] += 1
+            return None
+        entry.hits += 1
+        self.stats["hits"] += 1
+        return entry
+
+    def put(self, key: Optional[str], entry: PlanCacheEntry) -> None:
+        if key is None:
+            return
+        with self._lock:
+            self._entries[key] = entry
+            if len(self._entries) > self.max_entries:
+                victims = sorted(self._entries.items(),
+                                 key=lambda kv: (kv[1].hits, kv[1].created_at))
+                for k, _ in victims[: len(self._entries) - self.max_entries]:
+                    self._entries.pop(k, None)
+
+    def invalidate_all(self) -> None:
+        with self._lock:
+            self._entries.clear()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+
+# ===========================================================================
+# query context
+# ===========================================================================
+@dataclass
+class QueryContext:
+    """Typed state flowing through the pipeline stages."""
+
+    session: object                       # repro.core.session.Session
+    sql: str = ""                         # statement text ("" when unknown)
+    stmt: object = None                   # parsed AST (Select | SetOp)
+    params: Tuple = ()                    # qmark parameter values
+    config: dict = field(default_factory=dict)
+    info: dict = field(default_factory=dict)
+
+    # planning state
+    plan: Optional[P.PlanNode] = None
+    plan_pretty: str = ""                 # captured before DAG compilation
+    bound_key: str = ""                   # parameter-generic plan identity
+    result_key: str = ""                  # + parameter values
+    tables: List[str] = field(default_factory=list)
+    from_plan_cache: bool = False
+    plan_cache_key: Optional[str] = None
+
+    # result-cache state
+    cacheable: bool = False
+    filling: bool = False
+
+    # execution state
+    exec_ctx: object = None
+    dag: object = None
+    batch: Optional[VectorBatch] = None
+
+    # bookkeeping
+    stage_times: Dict[str, float] = field(default_factory=dict)
+    finished: bool = False                # short-circuits remaining stages
+
+
+# ===========================================================================
+# stages
+# ===========================================================================
+class Stage:
+    name = "stage"
+
+    def run(self, q: QueryContext) -> None:
+        raise NotImplementedError
+
+
+class ParseStage(Stage):
+    name = "parse"
+
+    def run(self, q: QueryContext) -> None:
+        if q.stmt is None:
+            q.stmt = parse(q.sql)
+        n = A.count_params(q.stmt)
+        if n != len(q.params):
+            raise ValueError(
+                f"statement has {n} parameter placeholder(s) but "
+                f"{len(q.params)} value(s) were supplied"
+            )
+
+
+class BindStage(Stage):
+    """Name resolution + subquery unnesting; also probes the plan cache —
+    a hit yields the fully optimized plan and skips MVRewrite/Optimize."""
+
+    name = "bind"
+
+    def run(self, q: QueryContext) -> None:
+        s = q.session
+        q.plan_cache_key = PlanCache.key_of(q.sql, q.config)
+        entry = s.wh.plan_cache.get(q.plan_cache_key, s.hms)
+        if entry is not None:
+            q.plan = copy.deepcopy(entry.plan)  # Compile mutates the tree
+            q.bound_key = entry.bound_key
+            q.tables = list(entry.tables)
+            q.from_plan_cache = True
+            q.info.update(entry.info)  # mv_used / semijoin_reducers / ...
+            q.info["plan_cache_hit"] = True
+            return
+        q.plan = Binder(s.hms).bind(q.stmt)
+        q.bound_key = q.plan.key()
+        q.tables = [sc.table.name for sc in P.walk_plan(q.plan)
+                    if isinstance(sc, (P.Scan, P.FederatedScan))]
+
+
+class CacheProbeStage(Stage):
+    """Query-result cache (§4.3), probed on the bound-plan identity so a hit
+    skips optimization entirely.  Parameter values are part of the key."""
+
+    name = "cache_probe"
+
+    def run(self, q: QueryContext) -> None:
+        s, cfg = q.session, q.config
+        # mv_rewriting is part of the identity: an MV-rewritten execution may
+        # legitimately serve stale-within-window data that a non-MV session
+        # must never be handed from the cache
+        q.result_key = q.bound_key + f"|mv={bool(cfg['mv_rewriting'])}" + (
+            f"|params={q.params!r}" if q.params else "")
+        q.cacheable = bool(
+            cfg["result_cache"] and is_cacheable(q.stmt) and q.tables
+        )
+        if not q.cacheable:
+            return
+        hit = s.wh.result_cache.lookup(q.result_key, s.hms, q.tables)
+        if hit is not None:
+            q.batch = hit
+            q.info["cache_hit"] = True
+            q.finished = True
+            return
+        q.filling = s.wh.result_cache.begin_pending(q.result_key, s.hms,
+                                                    q.tables)
+        if not q.filling:
+            # someone else is filling; wait behind their pending entry
+            hit = s.wh.result_cache.lookup(q.result_key, s.hms, q.tables)
+            if hit is not None:
+                q.batch = hit
+                q.info.update(cache_hit=True, pending_wait=True)
+                q.finished = True
+
+
+class MVRewriteStage(Stage):
+    name = "mv_rewrite"
+
+    def run(self, q: QueryContext) -> None:
+        if q.from_plan_cache or not q.config["mv_rewriting"]:
+            return
+        hit = MVRewriter(q.session.hms).try_rewrite(q.plan)
+        if hit is not None:
+            q.plan, mv_name, mode = hit
+            q.info["mv_used"] = mv_name
+            q.info["mv_mode"] = mode
+
+
+class OptimizeStage(Stage):
+    """Rule/cost optimization + semijoin reducers + federation pushdown;
+    fills the plan cache with the pristine optimized plan."""
+
+    name = "optimize"
+
+    def __init__(self, runtime_overrides: Optional[dict] = None):
+        # §4.2 re-optimization threads captured actual cardinalities in here
+        self.runtime_overrides = runtime_overrides
+
+    def run(self, q: QueryContext) -> None:
+        s, cfg = q.session, q.config
+        if q.from_plan_cache:
+            return
+        opt = Optimizer(s.hms, optimizer_config(cfg),
+                        runtime_overrides=self.runtime_overrides)
+        q.plan = opt.optimize(q.plan)
+        if cfg["semijoin_reduction"]:
+            added = insert_semijoin_reducers(q.plan, opt.cost_model,
+                                             SemijoinConfig(enabled=True))
+            q.info["semijoin_reducers"] = added
+        pushed = s._push_federated(q.plan)
+        if pushed:
+            q.info["federated_pushdown"] = pushed
+            q.plan = pushed.get("__plan__", q.plan)
+            pushed.pop("__plan__", None)
+        if q.plan_cache_key is not None:
+            planning_info = {k: q.info[k] for k in
+                             ("mv_used", "mv_mode", "semijoin_reducers",
+                              "federated_pushdown") if k in q.info}
+            s.wh.plan_cache.put(q.plan_cache_key, PlanCacheEntry(
+                stmt=q.stmt,
+                plan=copy.deepcopy(q.plan),
+                bound_key=q.bound_key,
+                tables=list(q.tables),
+                snapshot=table_state(s.hms, q.tables),
+                info=planning_info,
+            ))
+
+
+class CompileStage(Stage):
+    """Shared-work detection (§4.5) + Tez-style task-DAG compilation."""
+
+    name = "compile"
+
+    def run(self, q: QueryContext) -> None:
+        s, cfg = q.session, q.config
+        ctx = s._make_ctx(cfg, params=q.params)
+        if cfg["shared_work"]:
+            ctx.shared_keys = find_shared_subplans(q.plan)
+            q.info["shared_subplans"] = len(ctx.shared_keys)
+        q.plan_pretty = q.plan.pretty()  # before compile_dag mutates the tree
+        q.dag = compile_dag(q.plan)
+        q.info["dag_edges"] = q.dag.edge_summary()
+        q.exec_ctx = ctx
+
+
+class ExecuteStage(Stage):
+    """WLM admission (§5.2), scheduled execution (LLAP or containers),
+    re-optimization on memory pressure (§4.2), result-cache fill."""
+
+    name = "execute"
+
+    def run(self, q: QueryContext) -> None:
+        s, cfg = q.session, q.config
+        qid = f"q{next(s.wh._qid)}"
+        slot = None
+        try:
+            slot = s.wh.wlm.admit(qid, cfg.get("user"), cfg.get("application"))
+            if slot is not None:
+                q.info["wlm_pool"] = slot.pool
+            q.batch = self._run_dag(q, qid)
+            if q.cacheable and q.filling:
+                s.wh.result_cache.fill(q.result_key, q.batch)
+            q.info["cache_hit"] = False
+        finally:
+            if slot is not None:
+                s.wh.wlm.release(qid)
+
+    def _run_dag(self, q: QueryContext, qid: str) -> VectorBatch:
+        s, cfg, ctx = q.session, q.config, q.exec_ctx
+        sched = DAGScheduler(
+            pool=s.wh.llap.executors if cfg["llap"] else None,
+            speculative=cfg["speculative_execution"],
+        )
+
+        def on_vertex(vid, batch):
+            s.wh.wlm.update_metrics(qid, rows_produced=batch.num_rows)
+
+        try:
+            batch = sched.execute(q.dag, ctx, on_vertex_done=on_vertex)
+            s._persist_runtime_stats(q.plan, ctx)
+            return batch
+        except MemoryPressureError:
+            mode = cfg["reopt_mode"]
+            if mode == "off":
+                raise
+            q.info["reexecuted"] = True
+            q.info["reopt_mode"] = mode
+            s._persist_runtime_stats(q.plan, ctx)
+            if mode == "overlay":
+                # §4.2 overlay: re-run every re-execution with config overrides
+                cfg2 = {**cfg, **cfg.get("overlay", {}), "reopt_mode": "off"}
+                plan2, _ = s._plan_query(q.stmt, config=cfg2)
+            else:
+                # §4.2 reoptimize: feed captured actual cardinalities back in;
+                # the failure also teaches the planner the broadcast budget
+                cfg2 = {
+                    **cfg,
+                    "reopt_mode": "off",
+                    "broadcast_threshold_rows": min(
+                        cfg["broadcast_threshold_rows"],
+                        float(cfg["mapjoin_max_rows"]),
+                    ),
+                }
+                plan2, _ = s._plan_query(
+                    q.stmt, runtime_overrides=dict(ctx.op_stats), config=cfg2
+                )
+            ctx2 = s._make_ctx(cfg2, params=q.params)
+            if cfg2["shared_work"]:
+                ctx2.shared_keys = find_shared_subplans(plan2)
+            dag2 = compile_dag(plan2)
+            return DAGScheduler(
+                pool=s.wh.llap.executors if cfg2["llap"] else None
+            ).execute(dag2, ctx2)
+
+
+# ===========================================================================
+# the pipeline
+# ===========================================================================
+DEFAULT_STAGES: Tuple[Stage, ...] = (
+    ParseStage(), BindStage(), CacheProbeStage(), MVRewriteStage(),
+    OptimizeStage(), CompileStage(), ExecuteStage(),
+)
+
+def plan_only_stages(runtime_overrides: Optional[dict] = None):
+    """Bind + rewrite + optimize, no caches / compile / execute — the shape
+    used by MV maintenance and §4.2 re-planning."""
+    return (BindStage(), MVRewriteStage(), OptimizeStage(runtime_overrides))
+
+
+class QueryPipeline:
+    """Runs a :class:`QueryContext` through the staged query path."""
+
+    def __init__(self, session, stages: Tuple[Stage, ...] = DEFAULT_STAGES):
+        self.session = session
+        self.stages = stages
+
+    def run(self, q: QueryContext) -> QueryContext:
+        t0 = time.perf_counter()
+        try:
+            for stage in self.stages:
+                if q.finished:
+                    break
+                t = time.perf_counter()
+                stage.run(q)
+                q.stage_times[stage.name] = (
+                    q.stage_times.get(stage.name, 0.0)
+                    + time.perf_counter() - t
+                )
+        except Exception:
+            if q.cacheable and q.filling:
+                self.session.wh.result_cache.cancel_pending(q.result_key)
+            raise
+        q.info["stage_times_ms"] = {
+            k: round(v * 1e3, 3) for k, v in q.stage_times.items()
+        }
+        q.info["seconds"] = time.perf_counter() - t0
+        return q
+
+
+def optimizer_config(cfg: dict) -> OptimizerConfig:
+    return OptimizerConfig(
+        cbo=cfg["cbo"],
+        pushdown=cfg["pushdown"],
+        prune_columns=cfg["prune_columns"],
+        join_reorder=cfg["join_reorder"],
+        transitive_inference=cfg["transitive_inference"],
+        broadcast_threshold_rows=cfg["broadcast_threshold_rows"],
+        partition_pruning=cfg["partition_pruning"],
+    )
+
+
+def is_cacheable(stmt) -> bool:
+    """No non-deterministic or runtime-constant functions (§4.3)."""
+    bad = A.NON_DETERMINISTIC_FUNCS | A.RUNTIME_CONSTANT_FUNCS
+
+    def scan_sel(s) -> bool:
+        if isinstance(s, A.SetOp):
+            return scan_sel(s.left) and scan_sel(s.right)
+        if not isinstance(s, A.Select):
+            return True
+        exprs = [e for e, _ in s.projections]
+        exprs += [x for x in (s.where, s.having) if x is not None]
+        exprs += [e for e, _ in s.order_by] + list(s.group_by)
+        for e in exprs:
+            for node in A.walk(e):
+                if isinstance(node, A.Func) and node.name in bad:
+                    return False
+                if isinstance(node, A.SubqueryExpr) and not scan_sel(node.query):
+                    return False
+        if isinstance(s.from_, A.SubqueryRef) and not scan_sel(s.from_.query):
+            return False
+        return True
+
+    return scan_sel(stmt)

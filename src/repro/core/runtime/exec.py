@@ -45,12 +45,15 @@ class ExecContext:
         config: Optional[dict] = None,
         io=None,
         handlers=None,
+        params: Tuple = (),
     ):
         self.hms = hms
         self.snapshot = snapshot
         self.config = config or {}
         self.io = io
         self.handlers = handlers or {}
+        self.params = tuple(params)  # qmark placeholder values, by ordinal
+        self.engine = self.config.get("engine", "auto")  # auto | pallas | ref
         self.op_stats: Dict[str, int] = {}  # plan key digest -> actual rows
         self.shared_keys: set = set()  # filled by shared-work optimizer (§4.5)
         self.subplan_cache: Dict[str, VectorBatch] = {}
@@ -64,6 +67,12 @@ class ExecContext:
 
     def record(self, node: P.PlanNode, rows: int) -> None:
         self.op_stats[node.digest()] = rows
+
+    def kernel(self, name: str):
+        """Resolve a compute kernel for this query's engine selection."""
+        from ...kernels.registry import resolve
+
+        return resolve(name, self.engine)
 
 
 # ===========================================================================
@@ -201,6 +210,15 @@ def eval_expr(e: A.Expr, batch: VectorBatch, ctx: Optional[ExecContext] = None) 
         return _lookup(batch, e)
     if isinstance(e, A.Lit):
         return _broadcast(e.value, n)
+    if isinstance(e, A.Param):
+        if ctx is None:
+            raise ExecError(f"parameter ?{e.index} outside an execution context")
+        if e.index >= len(ctx.params):
+            raise ExecError(
+                f"unbound parameter ?{e.index}: only {len(ctx.params)} "
+                "parameter value(s) supplied"
+            )
+        return _broadcast(ctx.params[e.index], n)
     if isinstance(e, A.BinOp):
         if e.op == "AND":
             l = eval_expr(e.left, batch, ctx).astype(bool)
@@ -438,8 +456,19 @@ class Executor:
         b = self.execute(node.input)
         if b.num_rows == 0:
             return b
-        mask = eval_expr(node.predicate, b, self.ctx).astype(bool)
+        mask = self._filter_mask(node.predicate, b)
         return b.select(mask)
+
+    def _filter_mask(self, predicate: A.Expr, b: VectorBatch) -> np.ndarray:
+        # engine != auto routes sargable conjunctions through the registered
+        # filter kernel (pallas or jnp ref) instead of the numpy interpreter
+        if self.ctx.engine != "auto":
+            compiled = _compile_kernel_filter(predicate, b)
+            if compiled is not None:
+                cols, ops, lits = compiled
+                fn = self.ctx.kernel("filter_eval")
+                return np.asarray(fn(cols, ops, lits)).astype(bool)
+        return eval_expr(predicate, b, self.ctx).astype(bool)
 
     def _exec_project(self, node: P.Project) -> VectorBatch:
         b = self.execute(node.input)
@@ -753,6 +782,43 @@ def _eval_window(wf: A.WindowFunc, b: VectorBatch, ctx) -> np.ndarray:
             vals = _agg_column(AggSpec(name, A.Col("x") if arg is not None else None, False, "v"), arg, codes, ng)
         return vals[codes]
     raise ExecError(f"unsupported window function {name}")
+
+
+_KERNEL_FILTER_OPS = {"<": 0, "<=": 1, ">": 2, ">=": 3, "=": 4, "!=": 5}
+
+
+def _compile_kernel_filter(pred: A.Expr, b: VectorBatch):
+    """Compile ``col <op> numeric-literal AND ...`` into the filter kernel's
+    (columns, ops, lits) form; None when the predicate is not kernel-shaped."""
+    from ..sql.binder import split_conjuncts
+
+    cols, ops, lits = [], [], []
+    for c in split_conjuncts(pred):
+        if not (isinstance(c, A.BinOp) and c.op in _KERNEL_FILTER_OPS
+                and isinstance(c.left, A.Col) and isinstance(c.right, A.Lit)):
+            return None
+        v = c.right.value
+        if isinstance(v, bool) or not isinstance(v, (int, float)):
+            return None
+        try:
+            arr = _lookup(b, c.left)
+        except ExecError:
+            return None
+        if arr.dtype.kind not in "iuf":
+            return None
+        # the kernel contract is float32: only take this path when the cast
+        # is value-preserving, else comparisons beyond 2^24 go wrong
+        f32 = arr.astype(np.float32)
+        if not np.array_equal(f32.astype(arr.dtype), arr):
+            return None
+        if float(np.float32(v)) != float(v):
+            return None
+        cols.append(f32)
+        ops.append(_KERNEL_FILTER_OPS[c.op])
+        lits.append(float(v))
+    if not cols:
+        return None
+    return tuple(cols), tuple(ops), tuple(lits)
 
 
 def _extract_sargs(pred: A.Expr) -> List[SargPredicate]:

@@ -74,6 +74,11 @@ class LlapDaemon:
             "evictions": 0,
         }
 
+    def shutdown(self) -> None:
+        """Release the executor/IO thread pools (daemon decommission)."""
+        self.executors.shutdown(wait=False)
+        self.io_pool.shutdown(wait=False)
+
     # ------------------------------------------------------------- metadata
     def file_meta(self, path: str) -> FileMeta:
         mtime = os.path.getmtime(path)

@@ -16,11 +16,11 @@ from __future__ import annotations
 
 import itertools
 import os
-import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..kernels.registry import VALID_ENGINES as _VALID_ENGINES
 from .acid import AcidTable, PlainIO
 from .compaction import CompactionConfig, compact_partition, maybe_compact
 from .federation.druid import DruidHandler
@@ -28,23 +28,21 @@ from .federation.handler import HandlerRegistry
 from .federation.jdbc import JdbcHandler
 from .metastore import Metastore, TxnAborted, WriteConflict
 from .optimizer import plan as P
-from .optimizer.mv_rewrite import MVRewriter
 from .optimizer.result_cache import QueryResultCache
-from .optimizer.rules import Optimizer, OptimizerConfig
-from .optimizer.semijoin import SemijoinConfig, insert_semijoin_reducers
-from .optimizer.shared_work import find_shared_subplans
-from .runtime.dag import DAGScheduler, compile_dag
-from .runtime.exec import (
-    ExecContext,
-    Executor,
-    MemoryPressureError,
-    eval_expr,
+from .pipeline import (
+    PlanCache,
+    QueryContext,
+    QueryPipeline,
+    is_cacheable,
+    plan_only_stages,
 )
+from .runtime.dag import compile_dag
+from .runtime.exec import ExecContext, Executor, eval_expr
 from .runtime.llap import LlapDaemon, LlapIO
 from .runtime.vector import ROWID_COL, WRITEID_COL, VectorBatch
 from .runtime.wlm import WorkloadManager
 from .sql import ast as A
-from .sql.binder import Binder, _classify_join_condition, conjoin
+from .sql.binder import Binder, _classify_join_condition
 from .sql.parser import parse, parse_many
 
 DEFAULT_CONFIG = {
@@ -71,6 +69,8 @@ DEFAULT_CONFIG = {
     "compaction_enabled": True,
     "compaction_minor_threshold": 10,
     "compaction_major_ratio": 0.2,
+    # kernel backend selection (repro.kernels.registry)
+    "engine": "auto",  # auto | pallas | ref
     # identity for workload management (§5.2)
     "user": None,
     "application": None,
@@ -108,11 +108,23 @@ class Warehouse:
         self.handlers.register(DruidHandler(), self.hms)
         self.handlers.register(JdbcHandler(), self.hms)
         self.result_cache = QueryResultCache()
+        self.plan_cache = PlanCache()
         self.wlm = WorkloadManager(self.hms, total_executors=llap_executors)
         self._qid = itertools.count()
 
     def session(self, **config) -> "Session":
-        return Session(self, {**DEFAULT_CONFIG, **config})
+        cfg = {**DEFAULT_CONFIG, **config}
+        if cfg.get("engine") not in _VALID_ENGINES:
+            raise ValueError(
+                f"engine must be one of {_VALID_ENGINES}, got {cfg['engine']!r}"
+            )
+        return Session(self, cfg)
+
+    def close(self) -> None:
+        """Decommission cluster state (LLAP thread pools, caches)."""
+        self.llap.shutdown()
+        self.result_cache.invalidate_all()
+        self.plan_cache.invalidate_all()
 
 
 class Session:
@@ -125,9 +137,9 @@ class Session:
     # ==================================================================
     # public API
     # ==================================================================
-    def execute(self, sql: str) -> QueryResult:
+    def execute(self, sql: str, params: Optional[Sequence] = None) -> QueryResult:
         stmt = parse(sql)
-        return self.execute_stmt(stmt, sql)
+        return self.execute_stmt(stmt, sql, params)
 
     def execute_script(self, sql: str) -> List[QueryResult]:
         return [self.execute_stmt(s, "") for s in parse_many(sql)]
@@ -147,16 +159,35 @@ class Session:
     # ==================================================================
     # statement dispatch
     # ==================================================================
-    def execute_stmt(self, stmt, sql_text: str = "") -> QueryResult:
+    def execute_stmt(self, stmt, sql_text: str = "",
+                     params: Optional[Sequence] = None) -> QueryResult:
+        params = tuple(params) if params is not None else ()
         if isinstance(stmt, A.Explain):
             inner = stmt.stmt
-            if isinstance(inner, (A.Select, A.SetOp)):
-                return QueryResult(
-                    VectorBatch({"plan": np.array(self.explain_stmt(inner).split("\n"))})
+            if not isinstance(inner, (A.Select, A.SetOp)):
+                raise ValueError("EXPLAIN supports queries only")
+            n = A.count_params(inner)
+            if n != len(params):
+                raise ValueError(
+                    f"statement has {n} parameter placeholder(s) but "
+                    f"{len(params)} value(s) were supplied"
                 )
-            raise ValueError("EXPLAIN supports queries only")
+            if stmt.analyze:
+                return self._explain_analyze(inner, sql_text, params)
+            return QueryResult(
+                VectorBatch({"plan": np.array(self.explain_stmt(inner).split("\n"))})
+            )
         if isinstance(stmt, (A.Select, A.SetOp)):
-            return self._run_query(stmt, sql_text)
+            return self._run_query(stmt, sql_text, params)
+        n_params = A.count_params(stmt)
+        if n_params != len(params):
+            raise ValueError(
+                f"statement has {n_params} parameter placeholder(s) but "
+                f"{len(params)} value(s) were supplied"
+            )
+        if params:
+            # DML/DDL take the substitution path: placeholders become literals
+            stmt = A.substitute_params(stmt, params)
         if isinstance(stmt, A.CreateTable):
             return self._create_table(stmt)
         if isinstance(stmt, A.CreateMaterializedView):
@@ -166,6 +197,7 @@ class Session:
                 return QueryResult(VectorBatch({}))
             self.hms.drop_table(stmt.name)
             self.wh.result_cache.invalidate_all()
+            self.wh.plan_cache.invalidate_all()
             return QueryResult(VectorBatch({}))
         if isinstance(stmt, A.Insert):
             return self._insert(stmt)
@@ -218,48 +250,16 @@ class Session:
         raise ValueError("ADD RULE requires an active plan or plan qualifier")
 
     # ==================================================================
-    # query path
+    # query path (staged pipeline; see repro.core.pipeline)
     # ==================================================================
     def _plan_query(self, stmt, runtime_overrides: Optional[dict] = None,
                     config: Optional[dict] = None) -> Tuple[P.PlanNode, dict]:
-        cfg = config or self.config
-        info: dict = {}
-        plan = Binder(self.hms).bind(stmt)
-
-        if cfg["mv_rewriting"]:
-            hit = MVRewriter(self.hms).try_rewrite(plan)
-            if hit is not None:
-                plan, mv_name, mode = hit
-                info["mv_used"] = mv_name
-                info["mv_mode"] = mode
-
-        opt = Optimizer(
-            self.hms,
-            OptimizerConfig(
-                cbo=cfg["cbo"],
-                pushdown=cfg["pushdown"],
-                prune_columns=cfg["prune_columns"],
-                join_reorder=cfg["join_reorder"],
-                transitive_inference=cfg["transitive_inference"],
-                broadcast_threshold_rows=cfg["broadcast_threshold_rows"],
-                partition_pruning=cfg["partition_pruning"],
-            ),
-            runtime_overrides=runtime_overrides,
-        )
-        plan = opt.optimize(plan)
-
-        if cfg["semijoin_reduction"]:
-            added = insert_semijoin_reducers(plan, opt.cost_model,
-                                             SemijoinConfig(enabled=True))
-            info["semijoin_reducers"] = added
-
-        # federation pushdown (§6.2): push maximal prefixes into handlers
-        pushed = self._push_federated(plan)
-        if pushed:
-            info["federated_pushdown"] = pushed
-            plan = pushed.get("__plan__", plan)
-            pushed.pop("__plan__", None)
-        return plan, info
+        """Plan-only pipeline run (bind + MV rewrite + optimize)."""
+        q = QueryContext(session=self, stmt=stmt, config=config or self.config)
+        QueryPipeline(self, plan_only_stages(runtime_overrides)).run(q)
+        info = {k: v for k, v in q.info.items()
+                if k not in ("stage_times_ms", "seconds")}
+        return q.plan, info
 
     def _push_federated(self, plan: P.PlanNode) -> Optional[dict]:
         """Find FederatedScan nodes; ask handlers to absorb plan prefixes."""
@@ -289,117 +289,47 @@ class Session:
         try_at(plan, None, 0)
         return out if out else None
 
-    def _run_query(self, stmt, sql_text: str) -> QueryResult:
-        t0 = time.perf_counter()
-        cfg = self.config
-        plan, info = self._plan_query(stmt)
-        cache_key = plan.key()
-        tables = [s.table.name for s in P.walk_plan(plan)
-                  if isinstance(s, (P.Scan, P.FederatedScan))]
+    def _run_pipeline(self, stmt, sql_text: str = "", params: Tuple = (),
+                      config: Optional[dict] = None) -> QueryContext:
+        q = QueryContext(session=self, sql=sql_text, stmt=stmt,
+                         params=tuple(params), config=config or self.config)
+        return QueryPipeline(self).run(q)
 
-        cacheable = cfg["result_cache"] and _is_cacheable(stmt) and tables
-        filling = False
-        if cacheable:
-            hit = self.wh.result_cache.lookup(cache_key, self.hms, tables)
-            if hit is not None:
-                info.update(cache_hit=True, seconds=time.perf_counter() - t0)
-                self.last_info = info
-                return QueryResult(hit, info)
-            filling = self.wh.result_cache.begin_pending(cache_key, self.hms, tables)
-            if not filling:
-                hit = self.wh.result_cache.lookup(cache_key, self.hms, tables)
-                if hit is not None:
-                    info.update(cache_hit=True, pending_wait=True,
-                                seconds=time.perf_counter() - t0)
-                    self.last_info = info
-                    return QueryResult(hit, info)
+    def _run_query(self, stmt, sql_text: str = "",
+                   params: Tuple = ()) -> QueryResult:
+        q = self._run_pipeline(stmt, sql_text, params)
+        self.last_info = q.info
+        return QueryResult(q.batch, q.info)
 
-        qid = f"q{next(self.wh._qid)}"
-        slot = None
-        try:
-            slot = self.wh.wlm.admit(qid, cfg.get("user"), cfg.get("application"))
-            if slot is not None:
-                info["wlm_pool"] = slot.pool
-            batch, exec_info = self._execute_plan(plan, stmt, cfg, qid)
-            info.update(exec_info)
-            if cacheable and filling:
-                self.wh.result_cache.fill(cache_key, batch)
-            info["cache_hit"] = False
-            info["seconds"] = time.perf_counter() - t0
-            self.last_info = info
-            return QueryResult(batch, info)
-        except Exception:
-            if cacheable and filling:
-                self.wh.result_cache.cancel_pending(cache_key)
-            raise
-        finally:
-            if slot is not None:
-                self.wh.wlm.release(qid)
+    def _explain_analyze(self, stmt, sql_text: str,
+                         params: Tuple = ()) -> QueryResult:
+        """EXPLAIN ANALYZE: run the query, report plan + per-stage timings.
 
-    def _execute_plan(self, plan, stmt, cfg, qid) -> Tuple[VectorBatch, dict]:
-        info: dict = {}
-        ctx = self._make_ctx(cfg)
-        if cfg["shared_work"]:
-            ctx.shared_keys = find_shared_subplans(plan)
-            info["shared_subplans"] = len(ctx.shared_keys)
-        dag = compile_dag(plan)
-        info["dag_edges"] = dag.edge_summary()
-        sched = DAGScheduler(
-            pool=self.wh.llap.executors if cfg["llap"] else None,
-            speculative=cfg["speculative_execution"],
-        )
+        The result cache is bypassed — ANALYZE means "actually execute and
+        measure"; a cache hit would short-circuit before the plan exists."""
+        q = self._run_pipeline(stmt, sql_text, params,
+                               config={**self.config, "result_cache": False})
+        self.last_info = q.info
+        lines: List[str] = []
+        if q.plan_pretty:
+            lines.extend(q.plan_pretty.split("\n"))
+            lines.append("")
+        lines.append("stage timings:")
+        for name, ms in q.info.get("stage_times_ms", {}).items():
+            lines.append(f"  {name}: {ms:.3f} ms")
+        for k, v in q.info.items():
+            if k not in ("stage_times_ms",):
+                lines.append(f"{k}: {v}")
+        return QueryResult(VectorBatch({"plan": np.array(lines)}), q.info)
 
-        def on_vertex(vid, batch):
-            try:
-                self.wh.wlm.update_metrics(qid, rows_produced=batch.num_rows)
-            except Exception:
-                raise
-
-        try:
-            batch = sched.execute(dag, ctx, on_vertex_done=on_vertex)
-            self._persist_runtime_stats(plan, ctx)
-            return batch, info
-        except MemoryPressureError as err:
-            mode = cfg["reopt_mode"]
-            if mode == "off":
-                raise
-            info["reexecuted"] = True
-            info["reopt_mode"] = mode
-            self._persist_runtime_stats(plan, ctx)
-            if mode == "overlay":
-                # §4.2 overlay: re-run every re-execution with config overrides
-                cfg2 = {**cfg, **cfg.get("overlay", {}), "reopt_mode": "off"}
-                plan2, _ = self._plan_query(stmt, config=cfg2)
-            else:
-                # §4.2 reoptimize: feed captured actual cardinalities back in;
-                # the failure also teaches the planner the broadcast budget
-                cfg2 = {
-                    **cfg,
-                    "reopt_mode": "off",
-                    "broadcast_threshold_rows": min(
-                        cfg["broadcast_threshold_rows"],
-                        float(cfg["mapjoin_max_rows"]),
-                    ),
-                }
-                plan2, _ = self._plan_query(
-                    stmt, runtime_overrides=dict(ctx.op_stats), config=cfg2
-                )
-            ctx2 = self._make_ctx(cfg2)
-            if cfg2["shared_work"]:
-                ctx2.shared_keys = find_shared_subplans(plan2)
-            dag2 = compile_dag(plan2)
-            batch = DAGScheduler(
-                pool=self.wh.llap.executors if cfg2["llap"] else None
-            ).execute(dag2, ctx2)
-            return batch, info
-
-    def _make_ctx(self, cfg) -> ExecContext:
+    def _make_ctx(self, cfg, params: Tuple = ()) -> ExecContext:
         return ExecContext(
             self.hms,
             self.hms.get_snapshot(),
             config=cfg,
             io=LlapIO(self.wh.llap) if cfg["llap"] else PlainIO(),
             handlers=self.wh.handlers.as_dict(),
+            params=params,
         )
 
     def _persist_runtime_stats(self, plan, ctx) -> None:
@@ -434,6 +364,7 @@ class Session:
             stmt.name, schema, partition_cols=part_cols, props=stmt.props,
             handler=handler_name,
         )
+        self.wh.plan_cache.invalidate_all()
         return QueryResult(VectorBatch({}))
 
     def _create_mv(self, stmt: A.CreateMaterializedView) -> QueryResult:
@@ -473,6 +404,7 @@ class Session:
         window = float(stmt.props.get("staleness_window", 0) or 0)
         self.hms.register_mv(stmt.name, _mv_sql_of(stmt), source_tables, build,
                              staleness_window=window)
+        self.wh.plan_cache.invalidate_all()  # cached plans now miss the MV
         return QueryResult(VectorBatch({}), {"mv": stmt.name, "rows": batch.num_rows})
 
     def _rebuild_mv(self, name: str) -> QueryResult:
@@ -525,6 +457,7 @@ class Session:
         build = {t: self.hms.writeid_list(t, snap).hwm for t in mv["source_tables"]}
         self.hms.update_mv_snapshot(name, build)
         self.wh.result_cache.invalidate_all()
+        self.wh.plan_cache.invalidate_all()
         return QueryResult(VectorBatch({}), {"rebuild_mode": mode})
 
     def _replace_mv_contents(self, desc, stmt) -> None:
@@ -875,29 +808,7 @@ class Session:
 
 
 # ---------------------------------------------------------------------------
-def _is_cacheable(stmt) -> bool:
-    """No non-deterministic or runtime-constant functions (§4.3)."""
-    bad = A.NON_DETERMINISTIC_FUNCS | A.RUNTIME_CONSTANT_FUNCS
-
-    def scan_sel(s) -> bool:
-        if isinstance(s, A.SetOp):
-            return scan_sel(s.left) and scan_sel(s.right)
-        if not isinstance(s, A.Select):
-            return True
-        exprs = [e for e, _ in s.projections]
-        exprs += [x for x in (s.where, s.having) if x is not None]
-        exprs += [e for e, _ in s.order_by] + list(s.group_by)
-        for e in exprs:
-            for node in A.walk(e):
-                if isinstance(node, A.Func) and node.name in bad:
-                    return False
-                if isinstance(node, A.SubqueryExpr) and not scan_sel(node.query):
-                    return False
-        if isinstance(s.from_, A.SubqueryRef) and not scan_sel(s.from_.query):
-            return False
-        return True
-
-    return scan_sel(stmt)
+_is_cacheable = is_cacheable  # moved to repro.core.pipeline; alias kept
 
 
 def _has_subquery(e: A.Expr) -> bool:
@@ -1004,6 +915,8 @@ def _from_sql(f) -> str:
 def _expr_sql(e: A.Expr) -> str:
     if isinstance(e, A.Col):
         return e.qualified
+    if isinstance(e, A.Param):
+        return "?"
     if isinstance(e, A.Lit):
         if isinstance(e.value, str):
             return "'" + e.value.replace("'", "''") + "'"

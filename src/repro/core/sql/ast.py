@@ -143,6 +143,20 @@ class Cast(Expr):
 
 
 @dataclass(frozen=True)
+class Param(Expr):
+    """``?`` placeholder (DB-API qmark style), bound at execution time.
+
+    ``key()`` is the ordinal, not the value, so a prepared statement's plan
+    is parameter-independent and can be cached across executions.
+    """
+
+    index: int  # 0-based ordinal of the placeholder in the statement
+
+    def key(self) -> str:
+        return f"?{self.index}"
+
+
+@dataclass(frozen=True)
 class Star(Expr):
     table: Optional[str] = None
 
@@ -384,3 +398,52 @@ Statement = Union[
     CreateResourcePlan, CreatePool, CreateWMRule, AddWMRuleToPool,
     CreateWMMapping, AlterResourcePlan,
 ]
+
+
+# ---------------------------------------------------------------------------
+# parameter binding helpers (DB-API qmark placeholders)
+# ---------------------------------------------------------------------------
+def _walk_any(obj):
+    """Yield every Expr reachable from an AST node / statement dataclass."""
+    if isinstance(obj, Expr):
+        for e in walk(obj):
+            yield e
+            if isinstance(e, SubqueryExpr):
+                yield from _walk_any(e.query)
+        return
+    if dataclasses.is_dataclass(obj):
+        for f in dataclasses.fields(obj):
+            yield from _walk_any(getattr(obj, f.name))
+        return
+    if isinstance(obj, (list, tuple)):
+        for x in obj:
+            yield from _walk_any(x)
+
+
+def count_params(stmt) -> int:
+    """Number of distinct ``?`` placeholders in a statement."""
+    return len({e.index for e in _walk_any(stmt) if isinstance(e, Param)})
+
+
+def substitute_params(obj, params: Sequence[object]):
+    """Return a copy of the statement with every ``Param`` replaced by a
+    ``Lit`` of the corresponding value (used by the DML execution path)."""
+    if isinstance(obj, Param):
+        if obj.index >= len(params):
+            raise ValueError(
+                f"statement references parameter ?{obj.index} but only "
+                f"{len(params)} parameter(s) were supplied"
+            )
+        return Lit(params[obj.index])
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return type(obj)(**{
+            f.name: substitute_params(getattr(obj, f.name), params)
+            for f in dataclasses.fields(obj)
+        })
+    if isinstance(obj, list):
+        return [substitute_params(x, params) for x in obj]
+    if isinstance(obj, tuple):
+        return tuple(substitute_params(x, params) for x in obj)
+    if isinstance(obj, dict):
+        return {k: substitute_params(v, params) for k, v in obj.items()}
+    return obj

@@ -443,6 +443,8 @@ class Binder:
             return A.Col(_base(q), _qual(q))
         if isinstance(e, A.SubqueryExpr):
             return e  # handled by unnesting paths
+        if isinstance(e, A.Param):
+            return e  # bound at execution time from ExecContext.params
         return _rebuild(e, [self._bind_expr(c, scope) for c in e.children()])
 
     # ======================================================================

@@ -19,7 +19,7 @@ _TOKEN_RE = re.compile(
   | (?P<num>\d+\.\d+|\d+|\.\d+)
   | (?P<str>'(?:[^']|'')*')
   | (?P<ident>[A-Za-z_][A-Za-z_0-9]*)
-  | (?P<op><>|!=|>=|<=|=|<|>|\|\||[+\-*/%(),.;])
+  | (?P<op><>|!=|>=|<=|=|<|>|\|\||[+\-*/%(),.;?])
     """,
     re.VERBOSE,
 )
@@ -77,6 +77,7 @@ class Parser:
     def __init__(self, sql: str):
         self.toks = tokenize(sql)
         self.i = 0
+        self._next_param = 0  # ordinal for '?' placeholders (qmark style)
 
     # -- token helpers --------------------------------------------------------
     def peek(self, offset: int = 0) -> Token:
@@ -704,6 +705,11 @@ class Parser:
         if t.kind == "op" and t.value == "*":
             self.next()
             return A.Star()
+        if t.kind == "op" and t.value == "?":
+            self.next()
+            p = A.Param(self._next_param)
+            self._next_param += 1
+            return p
         # identifier: column, qualified column, star, or function call
         name = self.ident()
         if self.accept_op("("):

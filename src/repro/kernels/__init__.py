@@ -1,3 +1,7 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# Backend selection (pallas vs ref) is centralized in .registry;
+# session config `engine: auto|pallas|ref` picks per query.
+from .registry import VALID_ENGINES, backends, kernels, on_tpu, register, resolve  # noqa: F401

@@ -1,4 +1,4 @@
-"""jit'd public wrapper + host-side bridge for the bloom-probe kernel."""
+"""Public wrapper + host-side bridge for the bloom-probe kernel."""
 from __future__ import annotations
 
 import functools
@@ -8,23 +8,33 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...core.bloomfilter import BloomFilter, hash_values
+from ..registry import on_tpu, register, resolve
 from .bloom import bloom_probe_pallas
+from .ref import bloom_probe_ref
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
+@register("bloom_probe", "pallas")
 @functools.partial(jax.jit, static_argnames=("num_hashes", "num_bits"))
-def bloom_probe(h1, h2, bits, num_hashes: int, num_bits: int):
+def _bloom_probe_pallas(h1, h2, bits, num_hashes: int, num_bits: int):
     return bloom_probe_pallas(h1, h2, bits, num_hashes, num_bits,
-                              interpret=not _on_tpu())
+                              interpret=not on_tpu())
 
 
-def probe_bloom_filter(bf: BloomFilter, values: np.ndarray) -> np.ndarray:
+register("bloom_probe", "ref", bloom_probe_ref)
+
+
+def bloom_probe(h1, h2, bits, num_hashes: int, num_bits: int,
+                engine: str = "auto"):
+    return resolve("bloom_probe", engine)(h1, h2, bits, num_hashes, num_bits)
+
+
+def probe_bloom_filter(bf: BloomFilter, values: np.ndarray,
+                       engine: str = "auto") -> np.ndarray:
     """Probe a core.bloomfilter.BloomFilter via the TPU kernel path."""
     h = hash_values(values)
     h1 = jnp.asarray((h & np.uint64(0xFFFFFFFF)).astype(np.uint32))
     h2 = jnp.asarray((h >> np.uint64(32)).astype(np.uint32))
     bits32 = jnp.asarray(bf.bits.view(np.uint32))
-    return np.asarray(bloom_probe(h1, h2, bits32, bf.num_hashes, bf.num_bits))
+    return np.asarray(
+        bloom_probe(h1, h2, bits32, bf.num_hashes, bf.num_bits, engine=engine)
+    )

@@ -1,18 +1,24 @@
-"""jit'd public wrapper for the vectorized filter kernel."""
+"""Public wrapper for the vectorized filter kernel (registry-dispatched)."""
 from __future__ import annotations
 
 import functools
 
 import jax
 
+from ..registry import on_tpu, register, resolve
 from .filter_eval import filter_eval_pallas
+from .ref import filter_eval_ref
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
+@register("filter_eval", "pallas")
 @functools.partial(jax.jit, static_argnames=("ops", "lits"))
-def filter_eval(columns, ops: tuple, lits: tuple):
+def _filter_eval_pallas(columns, ops: tuple, lits: tuple):
     return filter_eval_pallas(list(columns), ops, lits,
-                              interpret=not _on_tpu())
+                              interpret=not on_tpu())
+
+
+register("filter_eval", "ref", filter_eval_ref)
+
+
+def filter_eval(columns, ops: tuple, lits: tuple, engine: str = "auto"):
+    return resolve("filter_eval", engine)(columns, ops, lits)

@@ -1,19 +1,31 @@
-"""jit'd public wrapper for causal flash attention."""
+"""Public wrapper for causal flash attention (registry-dispatched)."""
 from __future__ import annotations
 
 import functools
 
 import jax
 
+from ..registry import on_tpu, register, resolve
 from .flash_attention import flash_attention_pallas
+from .ref import attention_ref
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
+@register("flash_attention", "pallas")
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
-def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
-                    block_k: int = 128):
+def _flash_attention_pallas(q, k, v, causal: bool = True, block_q: int = 128,
+                            block_k: int = 128):
     return flash_attention_pallas(q, k, v, causal=causal, block_q=block_q,
-                                  block_k=block_k, interpret=not _on_tpu())
+                                  block_k=block_k, interpret=not on_tpu())
+
+
+@register("flash_attention", "ref")
+def _flash_attention_ref(q, k, v, causal: bool = True, block_q: int = 128,
+                         block_k: int = 128):
+    del block_q, block_k  # exact oracle has no tiling
+    return attention_ref(q, k, v, causal=causal)
+
+
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, engine: str = "auto"):
+    return resolve("flash_attention", engine)(q, k, v, causal=causal,
+                                              block_q=block_q, block_k=block_k)

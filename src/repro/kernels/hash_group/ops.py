@@ -1,18 +1,24 @@
-"""jit'd public wrapper for the grouped-aggregation kernel."""
+"""Public wrapper for the grouped-aggregation kernel (registry-dispatched)."""
 from __future__ import annotations
 
 import functools
 
 import jax
 
+from ..registry import on_tpu, register, resolve
 from .hash_group import hash_group_pallas
+from .ref import hash_group_ref
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
+@register("hash_group", "pallas")
 @functools.partial(jax.jit, static_argnames=("num_groups",))
-def hash_group(codes, values, num_groups: int):
+def _hash_group_pallas(codes, values, num_groups: int):
     return hash_group_pallas(codes, values, num_groups,
-                             interpret=not _on_tpu())
+                             interpret=not on_tpu())
+
+
+register("hash_group", "ref", hash_group_ref)
+
+
+def hash_group(codes, values, num_groups: int, engine: str = "auto"):
+    return resolve("hash_group", engine)(codes, values, num_groups)

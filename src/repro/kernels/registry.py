@@ -1,0 +1,87 @@
+"""Engine registry: resolves ``pallas`` vs ``ref`` kernel backends.
+
+Every kernel package registers its implementations here under a stable
+kernel name (``filter_eval``, ``hash_group``, ``bloom_probe``, ``ssd_scan``,
+``flash_attention``).  Callers resolve a backend by name + engine selector:
+
+  * ``auto``   — the Pallas implementation (interpret mode off-TPU), i.e. the
+                 historical default previously encoded as per-file
+                 ``_on_tpu()`` checks;
+  * ``pallas`` — force the Pallas kernel;
+  * ``ref``    — force the pure-jnp oracle (useful for A/B-ing numerics and
+                 for hosts where Pallas lowering is unavailable).
+
+The session config key ``engine`` selects the backend per query and is
+threaded through ``ExecContext`` (see ``repro.core.runtime.exec``).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+VALID_ENGINES = ("auto", "pallas", "ref")
+
+_REGISTRY: Dict[str, Dict[str, Callable]] = {}
+
+
+def on_tpu() -> bool:
+    """Single authority for the TPU check (was duplicated per ops.py)."""
+    import jax  # lazy: lets jax-free paths import VALID_ENGINES cheaply
+
+    return jax.default_backend() == "tpu"
+
+
+def validate_engine(engine: str) -> str:
+    if engine not in VALID_ENGINES:
+        raise ValueError(
+            f"unknown engine {engine!r}; expected one of {VALID_ENGINES}"
+        )
+    return engine
+
+
+def register(kernel: str, backend: str, fn: Optional[Callable] = None):
+    """Register an implementation; usable directly or as a decorator."""
+    if backend not in ("pallas", "ref"):
+        raise ValueError(f"backend must be 'pallas' or 'ref', got {backend!r}")
+
+    def _do(f: Callable) -> Callable:
+        _REGISTRY.setdefault(kernel, {})[backend] = f
+        return f
+
+    return _do(fn) if fn is not None else _do
+
+
+def backends(kernel: str):
+    if kernel not in _REGISTRY:
+        _import_all()
+    return tuple(sorted(_REGISTRY.get(kernel, {})))
+
+
+def kernels():
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve(kernel: str, engine: str = "auto") -> Callable:
+    """Return the implementation of ``kernel`` for ``engine``."""
+    validate_engine(engine)
+    impls = _REGISTRY.get(kernel)
+    if impls is None:
+        # kernel packages self-register on import; pull them in lazily so
+        # `resolve` works without callers importing repro.kernels.* first
+        _import_all()
+        impls = _REGISTRY.get(kernel)
+        if impls is None:
+            raise KeyError(f"no kernel registered under {kernel!r}; "
+                           f"have {kernels()}")
+    backend = "pallas" if engine == "auto" else engine
+    if backend not in impls:
+        raise KeyError(f"kernel {kernel!r} has no {backend!r} backend; "
+                       f"have {backends(kernel)}")
+    return impls[backend]
+
+
+def _import_all() -> None:
+    import importlib
+
+    for pkg in ("filter_eval", "hash_group", "bloom", "ssd_scan",
+                "flash_attention"):
+        importlib.import_module(f"repro.kernels.{pkg}.ops")

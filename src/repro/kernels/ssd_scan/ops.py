@@ -1,19 +1,28 @@
-"""jit'd public wrapper for the SSD scan kernel (interpret-mode on CPU)."""
+"""Public wrapper for the SSD scan kernel (registry-dispatched)."""
 from __future__ import annotations
 
 import functools
 
 import jax
 
+from ..registry import on_tpu, register, resolve
 from .ssd_scan import ssd_scan_pallas
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
+@register("ssd_scan", "pallas")
 @functools.partial(jax.jit, static_argnames=("chunk",))
-def ssd_scan(x, dA, Bm, Cm, chunk: int = 256):
-    """Mamba2 SSD scan; returns (y, None) mirroring ssd_reference's API."""
-    y = ssd_scan_pallas(x, dA, Bm, Cm, chunk, interpret=not _on_tpu())
+def _ssd_scan_pallas(x, dA, Bm, Cm, chunk: int = 256):
+    y = ssd_scan_pallas(x, dA, Bm, Cm, chunk, interpret=not on_tpu())
     return y, None
+
+
+@register("ssd_scan", "ref")
+def _ssd_scan_ref(x, dA, Bm, Cm, chunk: int = 256):
+    from .ref import ssd_scan_ref  # lazy: ref pulls in repro.models.mamba2
+
+    return ssd_scan_ref(x, dA, Bm, Cm, chunk), None
+
+
+def ssd_scan(x, dA, Bm, Cm, chunk: int = 256, engine: str = "auto"):
+    """Mamba2 SSD scan; returns (y, None) mirroring ssd_reference's API."""
+    return resolve("ssd_scan", engine)(x, dA, Bm, Cm, chunk)

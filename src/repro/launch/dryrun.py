@@ -178,6 +178,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, debug_mesh: bool,
             if v is not None:
                 mem_dict[k] = int(v)
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax returns [{...}] per device
+        cost = cost[0] if cost else {}
 
     # trip-count-corrected accounting from the optimized per-device HLO
     hlo_text = compiled.as_text()

@@ -182,8 +182,8 @@ def mamba2_forward(p, x, cfg: ModelConfig, ctx: ShardCtx,
     dA = dt * A[None, None, :]
     x_scaled = xs.astype(jnp.float32) * dt[..., None]
     if use_kernel:
-        from ..kernels.ssd_scan.ops import ssd_scan as _ssd
-        y, _ = _ssd(x_scaled, dA, Bm, Cm, chunk=s.chunk)
+        from ..kernels.registry import resolve
+        y, _ = resolve("ssd_scan")(x_scaled, dA, Bm, Cm, s.chunk)
     else:
         y, _ = ssd_reference(x_scaled, dA, Bm, Cm, chunk=min(s.chunk, S))
     y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]

@@ -1,8 +1,7 @@
 """ACID / transaction-manager behaviour (paper §3.2)."""
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import HealthCheck, given, settings, st
 
 from repro.core.acid import AcidTable, list_stores
 from repro.core.compaction import CompactionConfig, compact_partition, maybe_compact

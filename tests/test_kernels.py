@@ -3,8 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.bloom.ops import probe_bloom_filter
 from repro.kernels.filter_eval.ops import filter_eval

@@ -3,8 +3,7 @@ import os
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.bloomfilter import BloomFilter
 from repro.core.runtime.lrfu import LRFUPolicy

@@ -3,8 +3,7 @@ import collections
 
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import HealthCheck, given, settings, st
 
 
 def q(session, sql):
