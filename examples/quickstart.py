@@ -4,7 +4,9 @@ Connects via the DB-API-style front-end (``repro.api``), creates a
 partitioned ACID table, runs optimized analytic queries with ``?``
 parameters, pages results with a cursor, reuses a prepared statement's
 cached plan, shows the results cache, a materialized-view rewrite, DML with
-snapshot isolation, and EXPLAIN ANALYZE with per-stage pipeline timings.
+snapshot isolation, asynchronous query handles (``execute_async`` +
+``fetch_stream`` behind workload-manager pools, paper §5.2), and EXPLAIN
+ANALYZE with per-stage pipeline timings.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -83,6 +85,57 @@ def main():
     print("MV rebuild after delete:", cur.info)
     cur.execute("SELECT COUNT(*) FROM store_sales")
     print("row count:", cur.fetchone()[0])
+
+    print("\n== async handles: concurrent queries behind WLM pools (§5.2) ==")
+    # a resource plan with two pools: interactive clients are admitted into
+    # `bi` (one query at a time), everything else lands in `etl`
+    for ddl in [
+        "CREATE RESOURCE PLAN daytime",
+        "CREATE POOL daytime.bi WITH alloc_fraction=0.7, query_parallelism=1",
+        "CREATE POOL daytime.etl WITH alloc_fraction=0.3, query_parallelism=2",
+        "CREATE APPLICATION MAPPING dashboard IN daytime TO bi",
+        "ALTER PLAN daytime SET DEFAULT POOL = etl",
+        "ALTER RESOURCE PLAN daytime ENABLE ACTIVATE",
+    ]:
+        cur.execute(ddl)
+    dash = db.connect(warehouse=conn.warehouse, application="dashboard",
+                      result_cache=False)
+    # submit without blocking; both handles run on the warehouse scheduler
+    h1 = dash.execute_async(
+        "SELECT i_category, SUM(ss_price * ss_qty) AS rev "
+        "FROM store_sales, item WHERE ss_item_sk = i_item_sk "
+        "GROUP BY i_category ORDER BY rev DESC")
+    h2 = dash.execute_async("SELECT COUNT(*) FROM store_sales")
+    print(f"submitted {h1.query_id} and {h2.query_id} without blocking "
+          f"(states: h1={h1.state}, h2={h2.state}; pool bi admits one "
+          f"query at a time — with bi full, h2 borrows idle etl capacity; "
+          f"once every pool is busy, further handles queue as QUEUED)")
+    # stream row batches as the engine produces them; on slow queries the
+    # consumer sees batches while the handle is still RUNNING
+    for batch in h1.fetch_stream(batch_rows=2):
+        print(f"  streamed {len(batch)} row(s) (h1: {h1.state}): {batch}")
+    p = h1.poll()
+    print(f"h1 finished: pool={p['pool']} vertices="
+          f"{p['vertices_done']}/{p['vertices_total']} "
+          f"queue_wait_ms={p['queue_wait_ms']}")
+    print("h2 result:", h2.result(timeout=30).fetchone()[0],
+          f"(state={h2.state})")
+    # handles are cancellable while queued or running (cooperative,
+    # observed at DAG vertex boundaries); killed/cancelled queries raise
+    # QueryKilledError / QueryCancelledError from result().  The demo slows
+    # each vertex so the cancel lands before the last cancellation point.
+    slow = db.connect(warehouse=conn.warehouse, application="dashboard",
+                      debug_vertex_delay_s=0.3, result_cache=False)
+    h3 = slow.execute_async("SELECT ss_customer_sk, SUM(ss_price) "
+                            "FROM store_sales GROUP BY ss_customer_sk")
+    h3.cancel()
+    try:
+        h3.result(timeout=30)
+        print(f"h3 outran the cancel request (state={h3.state})")
+    except db.QueryCancelledError:
+        print(f"h3 cancelled cleanly (state={h3.state})")
+    slow.close()
+    dash.close()
 
     print("\n== EXPLAIN ANALYZE: per-stage pipeline timings ==")
     cur.execute("EXPLAIN ANALYZE " + q.replace("?", "3", 1).replace("?", "6"))

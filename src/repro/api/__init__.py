@@ -17,6 +17,15 @@ reproduction:
     ps = conn.prepare("SELECT * FROM sales WHERE region = ?")
     ps.execute(("EMEA",)).fetchall()   # plan cached across executions
 
+Statements can also run without blocking: ``conn.execute_async(sql)``
+returns a :class:`~repro.api.handle.QueryHandle` immediately.  The query
+executes on the warehouse's scheduler worker pool behind workload-manager
+admission (per-pool ``query_parallelism``; paper §5.2); the handle can be
+polled for progress, cancelled, awaited (``result(timeout)``), or iterated
+with ``fetch_stream()``, which yields row batches while the query is still
+running.  The blocking ``Cursor.execute`` is a thin wrapper over this same
+path, so there is one execution route for all clients.
+
 Module globals follow PEP 249: ``apilevel``, ``threadsafety`` (connections
 may be shared across threads), and ``paramstyle`` (``qmark``: ``?``).
 """
@@ -32,8 +41,11 @@ from .exceptions import (
     NotSupportedError,
     OperationalError,
     ProgrammingError,
+    QueryCancelledError,
+    QueryKilledError,
     Warning,
 )
+from .handle import QueryHandle
 from .prepared import PreparedStatement
 
 apilevel = "2.0"
@@ -41,9 +53,10 @@ threadsafety = 2
 paramstyle = "qmark"
 
 __all__ = [
-    "Connection", "Cursor", "PreparedStatement", "connect",
+    "Connection", "Cursor", "PreparedStatement", "QueryHandle", "connect",
     "apilevel", "threadsafety", "paramstyle",
     "Warning", "Error", "InterfaceError", "DatabaseError", "DataError",
     "OperationalError", "IntegrityError", "InternalError",
     "ProgrammingError", "NotSupportedError",
+    "QueryKilledError", "QueryCancelledError",
 ]

@@ -10,8 +10,9 @@ from __future__ import annotations
 from typing import Optional, Sequence
 
 from ..core.session import DEFAULT_CONFIG, Warehouse, _VALID_ENGINES
-from .cursor import Cursor
+from .cursor import Cursor, _params, _translate_error
 from .exceptions import InterfaceError, NotSupportedError, ProgrammingError
+from .handle import QueryHandle
 from .prepared import PreparedStatement
 
 
@@ -82,6 +83,21 @@ class Connection:
     def execute(self, sql: str, params: Optional[Sequence] = None) -> Cursor:
         """Convenience: ``conn.cursor().execute(sql, params)``."""
         return self.cursor().execute(sql, params)
+
+    def execute_async(self, sql: str,
+                      params: Optional[Sequence] = None) -> QueryHandle:
+        """Submit a statement without blocking; returns a
+        :class:`~repro.api.handle.QueryHandle` to poll, stream, cancel, or
+        await.  Queries are admitted through the active workload-manager
+        resource plan (per-pool ``query_parallelism``; paper §5.2) on the
+        warehouse's shared scheduler.  Parsing runs synchronously, so syntax
+        and parameter-arity errors raise here, not from the handle."""
+        self._check_open()
+        try:
+            task = self._session.submit(sql, _params(params))
+        except Exception as exc:  # noqa: BLE001 - translated to DB-API
+            raise _translate_error(exc) from exc
+        return QueryHandle(self, task)
 
     # ------------------------------------------------------------------
     # transaction surface: statements run under single-statement ACID

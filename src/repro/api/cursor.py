@@ -8,7 +8,9 @@ from __future__ import annotations
 
 from typing import List, Optional, Sequence, Tuple
 
+from ..core.runtime.cancel import QueryCancelledError as _CoreCancelled
 from ..core.runtime.exec import ExecError, MemoryPressureError
+from ..core.runtime.wlm import QueryKilledError as _CoreKilled
 from ..core.session import QueryResult
 from ..core.sql.binder import BindError
 from ..core.sql.parser import parse
@@ -20,6 +22,8 @@ from .exceptions import (
     InterfaceError,
     OperationalError,
     ProgrammingError,
+    QueryCancelledError,
+    QueryKilledError,
 )
 
 # numpy dtype kind -> SQL type name surfaced in Cursor.description
@@ -31,6 +35,10 @@ _DML_COUNTERS = ("inserted", "updated", "deleted")
 def _translate_error(exc: Exception) -> Exception:
     if isinstance(exc, Error):
         return exc  # already a DB-API error; don't re-wrap
+    if isinstance(exc, _CoreKilled):
+        return QueryKilledError(str(exc))
+    if isinstance(exc, _CoreCancelled):
+        return QueryCancelledError(str(exc))
     if isinstance(exc, (SyntaxError, BindError, KeyError, ValueError)):
         return ProgrammingError(str(exc))
     if isinstance(exc, (WriteConflict, TxnAborted)):
@@ -54,13 +62,16 @@ class Cursor:
     # ------------------------------------------------------------------
     def execute(self, operation: str, params: Optional[Sequence] = None
                 ) -> "Cursor":
-        """Execute a statement; ``?`` placeholders bind from ``params``."""
+        """Execute a statement; ``?`` placeholders bind from ``params``.
+
+        A thin blocking wrapper over the asynchronous handle path: the
+        statement is submitted via :meth:`Connection.execute_async` (so it
+        takes the same WLM-admitted scheduler route as every other query)
+        and awaited to completion.
+        """
         self._check_open()
-        try:
-            result = self._session.execute(operation, params=_params(params))
-        except Exception as exc:  # noqa: BLE001 - translated to DB-API
-            raise _translate_error(exc) from exc
-        self._install(result)
+        handle = self._conn.execute_async(operation, params)
+        self._install(handle._wait_result())  # noqa: SLF001 - same package
         return self
 
     def executemany(self, operation: str,

@@ -40,3 +40,11 @@ class ProgrammingError(DatabaseError):
 
 class NotSupportedError(DatabaseError):
     """A method or API the warehouse does not support (e.g. rollback)."""
+
+
+class QueryKilledError(OperationalError):
+    """The workload manager killed the query via a trigger rule (§5.2)."""
+
+
+class QueryCancelledError(OperationalError):
+    """The query was cancelled through :meth:`QueryHandle.cancel`."""

@@ -32,6 +32,7 @@ from .optimizer.semijoin import SemijoinConfig, insert_semijoin_reducers
 from .optimizer.shared_work import find_shared_subplans
 from .runtime.dag import DAGScheduler, compile_dag
 from .runtime.exec import MemoryPressureError
+from .runtime.scheduler import stream_batch_rows
 from .runtime.vector import VectorBatch
 from .sql import ast as A
 from .sql.binder import Binder
@@ -58,6 +59,8 @@ class PlanCacheEntry:
     tables: List[str]            # participating tables (cache validation)
     snapshot: Dict[str, Tuple] = field(default_factory=dict)
     info: Dict[str, object] = field(default_factory=dict)  # planning info
+    row_counts: Dict[str, float] = field(default_factory=dict)  # at plan time
+    uses_mv: bool = False        # MV-rewritten plans validate strictly
     created_at: float = field(default_factory=time.time)
     hits: int = 0
 
@@ -73,14 +76,33 @@ def table_state(hms, tables) -> Dict[str, Tuple]:
     }
 
 
+def table_row_counts(hms, tables) -> Dict[str, float]:
+    """Per-table optimizer row counts (the statistics plans are costed on)."""
+    out = {}
+    for t in tables:
+        try:
+            out[t] = float(hms.get_stats(t).row_count)
+        except KeyError:
+            out[t] = 0.0
+    return out
+
+# a cached plan's cost-based choices (join order, broadcast sides, semijoin
+# reducers) are considered stale once any base table's row count shifts by
+# more than this factor in either direction
+PLAN_DRIFT_FACTOR = 2.0
+
+
 class PlanCache:
     """Caches optimized logical plans, keyed like the query-result cache:
     by resolved statement text plus the planning-relevant session config.
 
-    Entries are validated against the participating tables' WriteId state:
-    any base-table write drops the entry, because the cached plan may embed
-    decisions that are only valid for the old snapshot (MV rewrites most of
-    all — a stale MV-scan plan would silently return stale data)."""
+    Entries are validated against the participating tables' WriteId state.
+    MV-rewritten plans drop on *any* base-table write — a stale MV-scan plan
+    would silently return stale data.  Plain plans only embed cost-based
+    decisions (scans re-resolve data at execution time), so they survive
+    writes and drop only when a table's row count drifts by more than
+    ``PLAN_DRIFT_FACTOR`` from what the plan was costed on — the point at
+    which join order / broadcast choices deserve re-optimization (§4.2)."""
 
     def __init__(self, max_entries: int = 128):
         self.max_entries = max_entries
@@ -103,14 +125,37 @@ class PlanCache:
         if entry is None:
             self.stats["misses"] += 1
             return None
-        if hms is not None and table_state(hms, entry.snapshot) != entry.snapshot:
-            with self._lock:
-                self._entries.pop(key, None)
-            self.stats["misses"] += 1
-            return None
+        if hms is not None:
+            current = table_state(hms, entry.snapshot)
+            if current != entry.snapshot:
+                if entry.uses_mv or self._drifted(hms, entry):
+                    with self._lock:
+                        self._entries.pop(key, None)
+                    self.stats["misses"] += 1
+                    return None
+                # plan survives the write: adopt the new WriteId state so the
+                # next hit skips the drift re-check (row_counts keeps the
+                # plan-time baseline the drift factor is measured against)
+                entry.snapshot = current
         entry.hits += 1
         self.stats["hits"] += 1
         return entry
+
+    @staticmethod
+    def _drifted(hms, entry: PlanCacheEntry) -> bool:
+        """Did any base table's row count shift past the drift factor?"""
+        try:
+            current = table_row_counts(hms, entry.row_counts)
+        except Exception:  # noqa: BLE001 - e.g. table vanished mid-check
+            return True
+        for t, base in entry.row_counts.items():
+            cur = current.get(t, 0.0)
+            if base <= 0.0:
+                if cur > 0.0:
+                    return True  # empty -> populated: unbounded drift
+            elif cur > base * PLAN_DRIFT_FACTOR or cur < base / PLAN_DRIFT_FACTOR:
+                return True
+        return False
 
     def put(self, key: Optional[str], entry: PlanCacheEntry) -> None:
         if key is None:
@@ -163,6 +208,12 @@ class QueryContext:
     exec_ctx: object = None
     dag: object = None
     batch: Optional[VectorBatch] = None
+
+    # async-handle state (None on the synchronous path)
+    task: object = None                   # runtime.scheduler.QueryTask
+    slot: object = None                   # WLM slot admitted by the scheduler
+    qid: str = ""                         # query id ("" -> allocate one)
+    cancel_token: object = None           # runtime.cancel.CancelToken
 
     # bookkeeping
     stage_times: Dict[str, float] = field(default_factory=dict)
@@ -302,6 +353,8 @@ class OptimizeStage(Stage):
                 tables=list(q.tables),
                 snapshot=table_state(s.hms, q.tables),
                 info=planning_info,
+                row_counts=table_row_counts(s.hms, q.tables),
+                uses_mv="mv_used" in q.info,
             ))
 
 
@@ -312,7 +365,7 @@ class CompileStage(Stage):
 
     def run(self, q: QueryContext) -> None:
         s, cfg = q.session, q.config
-        ctx = s._make_ctx(cfg, params=q.params)
+        ctx = s._make_ctx(cfg, params=q.params, cancel_token=q.cancel_token)
         if cfg["shared_work"]:
             ctx.shared_keys = find_shared_subplans(q.plan)
             q.info["shared_subplans"] = len(ctx.shared_keys)
@@ -324,35 +377,58 @@ class CompileStage(Stage):
 
 class ExecuteStage(Stage):
     """WLM admission (§5.2), scheduled execution (LLAP or containers),
-    re-optimization on memory pressure (§4.2), result-cache fill."""
+    re-optimization on memory pressure (§4.2), result streaming to an async
+    handle, result-cache fill.
+
+    On the synchronous path this stage admits (and releases) its own WLM
+    slot, raising when the pool is saturated.  On the async path the
+    :class:`~repro.core.runtime.scheduler.QueryScheduler` already queued the
+    handle through blocking admission and owns the slot's lifecycle; the
+    stage only consumes ``q.slot``.
+    """
 
     name = "execute"
 
     def run(self, q: QueryContext) -> None:
         s, cfg = q.session, q.config
-        qid = f"q{next(s.wh._qid)}"
-        slot = None
+        qid = q.qid or f"q{next(s.wh._qid)}"
+        slot = q.slot
+        own_slot = q.task is None
         try:
-            slot = s.wh.wlm.admit(qid, cfg.get("user"), cfg.get("application"))
+            if own_slot:
+                slot = s.wh.wlm.admit(qid, cfg.get("user"),
+                                      cfg.get("application"))
             if slot is not None:
                 q.info["wlm_pool"] = slot.pool
-            q.batch = self._run_dag(q, qid)
+            q.batch = self._run_dag(q, qid, slot)
+            if q.task is not None:
+                # stream the root output to the handle while still RUNNING;
+                # a consumer in fetch_stream() sees batches before the cache
+                # fill and the SUCCEEDED transition
+                q.task.stream.publish(q.batch, stream_batch_rows(cfg),
+                                      q.cancel_token)
             if q.cacheable and q.filling:
                 s.wh.result_cache.fill(q.result_key, q.batch)
             q.info["cache_hit"] = False
         finally:
-            if slot is not None:
+            if own_slot and slot is not None:
                 s.wh.wlm.release(qid)
 
-    def _run_dag(self, q: QueryContext, qid: str) -> VectorBatch:
+    def _run_dag(self, q: QueryContext, qid: str, slot) -> VectorBatch:
         s, cfg, ctx = q.session, q.config, q.exec_ctx
         sched = DAGScheduler(
             pool=s.wh.llap.executors if cfg["llap"] else None,
             speculative=cfg["speculative_execution"],
+            vertex_delay=float(cfg.get("debug_vertex_delay_s", 0.0) or 0.0),
         )
+        if q.task is not None:
+            q.task.note_vertices_total(len(q.dag.vertices))
 
         def on_vertex(vid, batch):
-            s.wh.wlm.update_metrics(qid, rows_produced=batch.num_rows)
+            if q.task is not None:
+                q.task.note_vertex_done()
+            if slot is not None:
+                s.wh.wlm.update_metrics(qid, rows_produced=batch.num_rows)
 
         try:
             batch = sched.execute(q.dag, ctx, on_vertex_done=on_vertex)
@@ -383,13 +459,17 @@ class ExecuteStage(Stage):
                 plan2, _ = s._plan_query(
                     q.stmt, runtime_overrides=dict(ctx.op_stats), config=cfg2
                 )
-            ctx2 = s._make_ctx(cfg2, params=q.params)
+            ctx2 = s._make_ctx(cfg2, params=q.params,
+                               cancel_token=q.cancel_token)
             if cfg2["shared_work"]:
                 ctx2.shared_keys = find_shared_subplans(plan2)
             dag2 = compile_dag(plan2)
+            if q.task is not None:
+                q.task.note_vertices_total(len(dag2.vertices))
             return DAGScheduler(
-                pool=s.wh.llap.executors if cfg2["llap"] else None
-            ).execute(dag2, ctx2)
+                pool=s.wh.llap.executors if cfg2["llap"] else None,
+                vertex_delay=float(cfg.get("debug_vertex_delay_s", 0.0) or 0.0),
+            ).execute(dag2, ctx2, on_vertex_done=on_vertex)
 
 
 # ===========================================================================

@@ -187,11 +187,13 @@ class DAGScheduler:
         speculative: bool = False,
         straggler_factor: float = 4.0,
         injected_delays: Optional[Dict[str, float]] = None,  # test hook
+        vertex_delay: float = 0.0,  # debug/test hook: sleep per vertex
     ):
         self.pool = pool
         self.speculative = speculative
         self.straggler_factor = straggler_factor
         self.injected_delays = injected_delays or {}
+        self.vertex_delay = vertex_delay
         self.metrics: List[VertexMetrics] = []
 
     def execute(self, dag: TaskDAG, ctx: ExecContext,
@@ -201,6 +203,7 @@ class DAGScheduler:
         if pool is None:
             pool = ThreadPoolExecutor(max_workers=4, thread_name_prefix="container")
             own_pool = True
+        cancel_token = getattr(ctx, "cancel_token", None)
         try:
             results: Dict[str, VectorBatch] = {}
             done: Set[str] = set()
@@ -210,8 +213,14 @@ class DAGScheduler:
             lock = threading.Lock()
 
             def run_vertex(vid: str) -> VectorBatch:
+                # vertex boundaries are the cancellation points (§5.2): a
+                # tripped token stops the query without mid-operator state
+                if cancel_token is not None:
+                    cancel_token.check()
                 if vid in self.injected_delays:
                     time.sleep(self.injected_delays[vid])
+                if self.vertex_delay:
+                    time.sleep(self.vertex_delay)
                 v = dag.vertices[vid]
                 for mn in _walk_materialized(v.plan):
                     mn.batch = results[mn.tag]
@@ -226,6 +235,8 @@ class DAGScheduler:
 
             remaining = list(order)
             while remaining or pending:
+                if cancel_token is not None:
+                    cancel_token.check()
                 # launch every vertex whose deps are satisfied
                 for vid in list(remaining):
                     v = dag.vertices[vid]

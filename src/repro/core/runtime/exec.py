@@ -46,6 +46,7 @@ class ExecContext:
         io=None,
         handlers=None,
         params: Tuple = (),
+        cancel_token=None,
     ):
         self.hms = hms
         self.snapshot = snapshot
@@ -53,6 +54,7 @@ class ExecContext:
         self.io = io
         self.handlers = handlers or {}
         self.params = tuple(params)  # qmark placeholder values, by ordinal
+        self.cancel_token = cancel_token  # CancelToken of an async handle
         self.engine = self.config.get("engine", "auto")  # auto | pallas | ref
         self.op_stats: Dict[str, int] = {}  # plan key digest -> actual rows
         self.shared_keys: set = set()  # filled by shared-work optimizer (§4.5)
@@ -607,12 +609,53 @@ class Executor:
 
         for spec in aggs:
             vals = eval_expr(spec.arg, b, self.ctx) if spec.arg is not None else None
-            out[spec.out_name] = _agg_column(spec, vals, codes2, ng)
+            # engine != auto routes SUM/COUNT through the registered grouped-
+            # aggregation kernel (pallas one-hot matmul or jnp ref) when the
+            # float32 contract is value-preserving, mirroring the filter path
+            routed = (self._kernel_agg(spec, vals, codes2, ng)
+                      if self.ctx.engine != "auto" else None)
+            out[spec.out_name] = (routed if routed is not None
+                                  else _agg_column(spec, vals, codes2, ng))
         if not keys and b.num_rows == 0:
             # global aggregate over empty input yields a single row
             for spec in aggs:
                 out[spec.out_name] = _agg_column(spec, np.empty(0), np.empty(0, np.int64), 1)
         return VectorBatch(out)
+
+    def _kernel_agg(self, spec, vals: Optional[np.ndarray],
+                    codes: np.ndarray, ng: int) -> Optional[np.ndarray]:
+        """Grouped SUM/COUNT via ``ctx.kernel('hash_group')``; None when the
+        aggregate is not kernel-shaped (then the numpy path runs)."""
+        if spec.fn not in ("sum", "count") or spec.distinct or vals is None:
+            return None
+        if ng <= 0 or vals.dtype.kind not in "iufb":
+            return None
+        if vals.size >= (1 << 24):
+            # the kernel's float32 accumulators stop being exact integers at
+            # 2^24, so COUNTs (and the row-bounded sums below) could silently
+            # round; beyond that the numpy path runs
+            return None
+        f32 = vals.astype(np.float32)
+        # the kernel accumulates in float32: only take this path when the
+        # cast is value-preserving (also rejects NaN/NULL-carrying columns,
+        # whose skip semantics the kernel does not implement)
+        if not np.array_equal(f32.astype(vals.dtype), vals):
+            return None
+        if spec.fn == "sum" and vals.dtype.kind in "iu" and vals.size:
+            # integer sums must stay exact: every partial sum is an integer
+            # bounded by sum(|v|), so < 2^24 keeps float32 accumulation exact
+            if float(np.abs(vals.astype(np.int64)).sum()) >= float(1 << 24):
+                return None
+        fn = self.ctx.kernel("hash_group")
+        sums, counts = fn(codes.astype(np.int32), f32, int(ng))
+        if spec.fn == "count":
+            return np.asarray(counts, dtype=np.int64)
+        sums = np.asarray(sums, dtype=np.float64)
+        counts = np.asarray(counts)
+        sums[counts == 0] = np.nan  # SUM over an empty group is NULL
+        if vals.dtype.kind in "iu" and not np.isnan(sums).any():
+            return sums.astype(np.int64)
+        return sums
 
     # ---- window functions --------------------------------------------------------
     def _exec_windowop(self, node: P.WindowOp) -> VectorBatch:

@@ -131,6 +131,20 @@ class LlapDaemon:
             for key in [k for k in self._chunks if k[0] == file_id]:
                 self._evict(key)
 
+    def invalidate_location(self, location: str) -> None:
+        """DDL invalidation: drop cached footers and data chunks for every
+        file under ``location`` (e.g. a dropped table's directory), so a
+        table re-created at the same path never serves the old bytes."""
+        prefix = location.rstrip(os.sep) + os.sep
+        with self._lock:
+            victims = [p for p in self._meta
+                       if p == location or p.startswith(prefix)]
+            file_ids = {self._meta[p][1].file_id for p in victims}
+            for p in victims:
+                del self._meta[p]
+            for key in [k for k in self._chunks if k[0] in file_ids]:
+                self._evict(key)
+
     def cache_usage(self) -> Tuple[int, int]:
         return self._used, self.cache_bytes
 

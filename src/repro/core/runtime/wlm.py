@@ -6,6 +6,13 @@ pools by user/application, and triggers that move or kill queries based on
 runtime metrics.  Only one plan is active at a time; plans persist in the
 metastore.  Idle pool capacity may be borrowed by queries from other pools
 until the owning pool claims it.
+
+Admission has two entry points: :meth:`WorkloadManager.admit` (admit or
+raise — the synchronous execution path) and
+:meth:`WorkloadManager.wait_admit` (queue on a condition variable until a
+running query releases pool capacity — the async scheduler's path, woken
+by :meth:`WorkloadManager.release` and responsive to the handle's
+``CancelToken`` while queued).
 """
 from __future__ import annotations
 
@@ -86,6 +93,7 @@ class QuerySlot:
     metrics: Dict[str, float] = field(default_factory=dict)
     killed: bool = False
     moves: List[str] = field(default_factory=list)
+    cancel_token: Optional[object] = None  # CancelToken of an async handle
 
 
 class WorkloadManager:
@@ -93,6 +101,7 @@ class WorkloadManager:
         self.hms = hms
         self.total_executors = total_executors
         self._lock = threading.RLock()
+        self._capacity_freed = threading.Condition(self._lock)
         self._active: Optional[ResourcePlan] = None
         self._running: Dict[str, QuerySlot] = {}
         self._pool_load: Dict[str, int] = {}
@@ -169,15 +178,37 @@ class WorkloadManager:
                 return pool
         return plan.default_pool or (next(iter(plan.pools)) if plan.pools else None)
 
-    def admit(self, query_id: str, user=None, application=None) -> Optional[QuerySlot]:
+    def admit(self, query_id: str, user=None, application=None,
+              cancel_token=None) -> Optional[QuerySlot]:
+        """Admit or die: raises :class:`QueryKilledError` when the routed
+        pool is saturated and no idle capacity can be borrowed (the
+        pre-async behavior, kept for the synchronous execution path)."""
+        slot, saturated = self.try_admit(query_id, user, application,
+                                         cancel_token)
+        if saturated:
+            pool = self.route(user, application)
+            raise QueryKilledError(
+                f"pool {pool} at parallelism limit and no idle capacity"
+            )
+        return slot
+
+    def try_admit(self, query_id: str, user=None, application=None,
+                  cancel_token=None):
+        """Non-blocking admission probe.
+
+        Returns ``(slot, saturated)``: ``(QuerySlot, False)`` on admission,
+        ``(None, False)`` when no resource plan applies (run unmanaged), and
+        ``(None, True)`` when the routed pool is at its parallelism limit
+        with no idle capacity to borrow — the caller may queue and retry.
+        """
         with self._lock:
             plan = self._active
             if plan is None:
-                return None
+                return None, False
             pool = self.route(user, application)
             if pool is None:
-                return None
-            slot = QuerySlot(query_id, pool)
+                return None, False
+            slot = QuerySlot(query_id, pool, cancel_token=cancel_token)
             if self._pool_load.get(pool, 0) >= plan.pools[pool].query_parallelism:
                 # pool saturated: borrow idle capacity from another pool (§5.2)
                 for other, pdef in plan.pools.items():
@@ -186,15 +217,42 @@ class WorkloadManager:
                         pool_to_charge = other
                         break
                 else:
-                    raise QueryKilledError(
-                        f"pool {pool} at parallelism limit and no idle capacity"
-                    )
+                    return None, True
             else:
                 pool_to_charge = pool
             self._pool_load[pool_to_charge] = self._pool_load.get(pool_to_charge, 0) + 1
             slot.metrics["charged_pool"] = pool_to_charge
             self._running[query_id] = slot
-            return slot
+            return slot, False
+
+    def wait_admit(self, query_id: str, user=None, application=None,
+                   cancel_token=None, timeout: Optional[float] = None,
+                   poll_interval: float = 0.05) -> Optional[QuerySlot]:
+        """Blocking admission: queue until the routed pool frees a slot.
+
+        Re-probes whenever a running query releases capacity (and at
+        ``poll_interval`` so a tripped ``cancel_token`` is observed promptly).
+        Raises the token's error when cancelled/killed while queued, and
+        :class:`QueryKilledError` on ``timeout``.
+        """
+        deadline = (time.monotonic() + timeout) if timeout is not None else None
+        with self._capacity_freed:
+            while True:
+                if cancel_token is not None:
+                    cancel_token.check()
+                slot, saturated = self.try_admit(query_id, user, application,
+                                                 cancel_token)
+                if not saturated:
+                    return slot
+                wait = poll_interval
+                if deadline is not None:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        raise QueryKilledError(
+                            f"query {query_id} timed out waiting for admission"
+                        )
+                    wait = min(wait, remaining)
+                self._capacity_freed.wait(wait)
 
     def executors_for(self, slot: Optional[QuerySlot]) -> int:
         if slot is None or self._active is None:
@@ -224,12 +282,19 @@ class WorkloadManager:
                 elif rule.action == "kill":
                     slot.killed = True
         if slot.killed:
+            # trip the handle's token first so sibling DAG vertices stop at
+            # their next boundary, then surface the kill to the caller
+            if slot.cancel_token is not None:
+                slot.cancel_token.kill(
+                    f"query {query_id} killed by trigger"
+                )
             raise QueryKilledError(f"query {query_id} killed by trigger")
 
     def release(self, query_id: str) -> None:
-        with self._lock:
+        with self._capacity_freed:
             slot = self._running.pop(query_id, None)
             if slot is not None:
                 charged = slot.metrics.get("charged_pool", slot.pool)
                 if charged in self._pool_load and self._pool_load[charged] > 0:
                     self._pool_load[charged] -= 1
+                self._capacity_freed.notify_all()

@@ -1,7 +1,8 @@
 """HiveServer2 analogue: the query driver (paper §2, Figure 2).
 
 ``Warehouse`` owns cluster-wide state (metastore, LLAP daemon, storage
-handlers, workload manager, query-result cache); ``Session`` executes SQL:
+handlers, workload manager, query-result cache, and the async
+``QueryScheduler`` worker pool); ``Session`` executes SQL:
 
     parse -> bind (logical plan) -> [result cache probe] -> [MV rewrite]
          -> rule/cost optimization -> semijoin reducers -> shared-work marks
@@ -11,11 +12,17 @@ handlers, workload manager, query-result cache); ``Session`` executes SQL:
 DML statements (INSERT/UPDATE/DELETE/MERGE) run under single-statement ACID
 transactions (§3.2); materialized views rebuild incrementally when possible
 (§4.4); resource-plan DDL administers the workload manager (§5.2).
+
+``Session.execute`` drives the pipeline synchronously; ``Session.submit``
+hands the statement to the warehouse scheduler and returns a
+:class:`~repro.core.runtime.scheduler.QueryTask` that the client-side
+``QueryHandle`` polls, streams from, or cancels.
 """
 from __future__ import annotations
 
 import itertools
 import os
+import shutil
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -39,6 +46,7 @@ from .pipeline import (
 from .runtime.dag import compile_dag
 from .runtime.exec import ExecContext, Executor, eval_expr
 from .runtime.llap import LlapDaemon, LlapIO
+from .runtime.scheduler import QueryScheduler, QueryTask
 from .runtime.vector import ROWID_COL, WRITEID_COL, VectorBatch
 from .runtime.wlm import WorkloadManager
 from .sql import ast as A
@@ -74,6 +82,11 @@ DEFAULT_CONFIG = {
     # identity for workload management (§5.2)
     "user": None,
     "application": None,
+    # async handles: rows per batch handed to QueryHandle.fetch_stream()
+    "stream_batch_rows": 4096,
+    # debug/test instrumentation: sleep this long at each DAG vertex, to make
+    # concurrency observable (admission queueing, cancel, streaming)
+    "debug_vertex_delay_s": 0.0,
 }
 
 
@@ -98,7 +111,7 @@ class Warehouse:
     """Cluster-scoped state (one per deployment)."""
 
     def __init__(self, warehouse_dir: str, llap_cache_bytes: int = 256 << 20,
-                 llap_executors: int = 4):
+                 llap_executors: int = 4, query_workers: int = 8):
         self.dir = warehouse_dir
         os.makedirs(warehouse_dir, exist_ok=True)
         self.hms = Metastore(warehouse_dir)
@@ -111,6 +124,7 @@ class Warehouse:
         self.plan_cache = PlanCache()
         self.wlm = WorkloadManager(self.hms, total_executors=llap_executors)
         self._qid = itertools.count()
+        self.scheduler = QueryScheduler(self, max_workers=query_workers)
 
     def session(self, **config) -> "Session":
         cfg = {**DEFAULT_CONFIG, **config}
@@ -122,6 +136,7 @@ class Warehouse:
 
     def close(self) -> None:
         """Decommission cluster state (LLAP thread pools, caches)."""
+        self.scheduler.shutdown()  # cancels in-flight async handles
         self.llap.shutdown()
         self.result_cache.invalidate_all()
         self.plan_cache.invalidate_all()
@@ -140,6 +155,26 @@ class Session:
     def execute(self, sql: str, params: Optional[Sequence] = None) -> QueryResult:
         stmt = parse(sql)
         return self.execute_stmt(stmt, sql, params)
+
+    def submit(self, sql: str, params: Optional[Sequence] = None) -> QueryTask:
+        """Submit a statement for asynchronous execution.
+
+        Parsing and parameter arity run synchronously (so syntax errors
+        surface at submit time, like HS2 compilation); everything else —
+        WLM admission, planning, execution — happens on the warehouse
+        scheduler's worker pool.  The returned :class:`QueryTask` is the
+        engine side of a client :class:`repro.api.handle.QueryHandle`.
+        """
+        stmt = parse(sql)
+        params = tuple(params) if params is not None else ()
+        target = stmt.stmt if isinstance(stmt, A.Explain) else stmt
+        n = A.count_params(target)
+        if n != len(params):
+            raise ValueError(
+                f"statement has {n} parameter placeholder(s) but "
+                f"{len(params)} value(s) were supplied"
+            )
+        return self.wh.scheduler.submit(self, stmt, sql, params)
 
     def execute_script(self, sql: str) -> List[QueryResult]:
         return [self.execute_stmt(s, "") for s in parse_many(sql)]
@@ -195,9 +230,16 @@ class Session:
         if isinstance(stmt, A.DropTable):
             if stmt.if_exists and not self.hms.table_exists(stmt.name):
                 return QueryResult(VectorBatch({}))
+            desc = self.hms.get_table(stmt.name)
             self.hms.drop_table(stmt.name)
             self.wh.result_cache.invalidate_all()
             self.wh.plan_cache.invalidate_all()
+            if not desc.handler:
+                # managed table: purge the LLAP cache and the data files, so
+                # a table re-created under the same name never scans the old
+                # delta stores (stale-rows-after-DROP seed bug)
+                self.wh.llap.invalidate_location(desc.location)
+                shutil.rmtree(desc.location, ignore_errors=True)
             return QueryResult(VectorBatch({}))
         if isinstance(stmt, A.Insert):
             return self._insert(stmt)
@@ -290,9 +332,14 @@ class Session:
         return out if out else None
 
     def _run_pipeline(self, stmt, sql_text: str = "", params: Tuple = (),
-                      config: Optional[dict] = None) -> QueryContext:
+                      config: Optional[dict] = None, task=None,
+                      slot=None) -> QueryContext:
         q = QueryContext(session=self, sql=sql_text, stmt=stmt,
-                         params=tuple(params), config=config or self.config)
+                         params=tuple(params), config=config or self.config,
+                         task=task, slot=slot,
+                         qid=task.qid if task is not None else "",
+                         cancel_token=(task.cancel_token
+                                       if task is not None else None))
         return QueryPipeline(self).run(q)
 
     def _run_query(self, stmt, sql_text: str = "",
@@ -301,14 +348,28 @@ class Session:
         self.last_info = q.info
         return QueryResult(q.batch, q.info)
 
-    def _explain_analyze(self, stmt, sql_text: str,
-                         params: Tuple = ()) -> QueryResult:
+    def _run_query_task(self, task: QueryTask, slot) -> QueryResult:
+        """Async query entry point, called by the scheduler's worker with an
+        already-admitted WLM slot (or None when no plan is active)."""
+        if isinstance(task.stmt, A.Explain):
+            # EXPLAIN ANALYZE executes the inner query, so it is admitted
+            # like one; the scheduler only routes the analyze variant here
+            return self._explain_analyze(task.stmt.stmt, task.sql,
+                                         task.params, task=task, slot=slot)
+        q = self._run_pipeline(task.stmt, task.sql, task.params,
+                               task=task, slot=slot)
+        self.last_info = q.info
+        return QueryResult(q.batch, q.info)
+
+    def _explain_analyze(self, stmt, sql_text: str, params: Tuple = (),
+                         task=None, slot=None) -> QueryResult:
         """EXPLAIN ANALYZE: run the query, report plan + per-stage timings.
 
         The result cache is bypassed — ANALYZE means "actually execute and
         measure"; a cache hit would short-circuit before the plan exists."""
         q = self._run_pipeline(stmt, sql_text, params,
-                               config={**self.config, "result_cache": False})
+                               config={**self.config, "result_cache": False},
+                               task=task, slot=slot)
         self.last_info = q.info
         lines: List[str] = []
         if q.plan_pretty:
@@ -322,7 +383,8 @@ class Session:
                 lines.append(f"{k}: {v}")
         return QueryResult(VectorBatch({"plan": np.array(lines)}), q.info)
 
-    def _make_ctx(self, cfg, params: Tuple = ()) -> ExecContext:
+    def _make_ctx(self, cfg, params: Tuple = (),
+                  cancel_token=None) -> ExecContext:
         return ExecContext(
             self.hms,
             self.hms.get_snapshot(),
@@ -330,6 +392,7 @@ class Session:
             io=LlapIO(self.wh.llap) if cfg["llap"] else PlainIO(),
             handlers=self.wh.handlers.as_dict(),
             params=params,
+            cancel_token=cancel_token,
         )
 
     def _persist_runtime_stats(self, plan, ctx) -> None:

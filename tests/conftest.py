@@ -1,5 +1,7 @@
 import os
+import signal
 import tempfile
+import threading
 
 import numpy as np
 import pytest
@@ -7,6 +9,46 @@ import pytest
 # NOTE: XLA_FLAGS / device-count overrides are deliberately NOT set here —
 # smoke tests must see the real single CPU device.  Distributed tests spawn
 # subprocesses that set --xla_force_host_platform_device_count themselves.
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--test-timeout", type=float, default=0.0,
+        help="per-test wall-clock limit in seconds (0 = disabled); a "
+             "SIGALRM-based guard so a deadlocked scheduler fails the test "
+             "instead of hanging the run (no pytest-timeout dependency)",
+    )
+
+
+@pytest.fixture(autouse=True)
+def _per_test_alarm(request):
+    """Fail (don't hang) any test that exceeds ``--test-timeout`` seconds.
+
+    CPython delivers signals between bytecodes in the main thread, which
+    interrupts pure-Python waits (locks, queues, Condition.wait) — exactly
+    the states a deadlocked async scheduler would park a test in.
+    """
+    seconds = request.config.getoption("--test-timeout")
+    if (
+        not seconds
+        or not hasattr(signal, "SIGALRM")
+        or threading.current_thread() is not threading.main_thread()
+    ):
+        yield
+        return
+
+    def _on_alarm(signum, frame):
+        raise TimeoutError(
+            f"test exceeded --test-timeout={seconds}s (deadlock guard)"
+        )
+
+    old = signal.signal(signal.SIGALRM, _on_alarm)
+    signal.setitimer(signal.ITIMER_REAL, seconds)
+    try:
+        yield
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0)
+        signal.signal(signal.SIGALRM, old)
 
 
 @pytest.fixture()

@@ -168,3 +168,39 @@ def test_property_acid_matches_oracle(tmp_path_factory, ops):
         else:
             compact_partition(tbl, tbl.desc.location, "major", hms)
         assert _read_ks(hms, tbl) == sorted(oracle)
+
+
+# ---------------------------------------------------------------------------
+# DDL invalidation (seed bug regression): DROP + CREATE under the same name
+# ---------------------------------------------------------------------------
+def test_drop_create_same_name_purges_old_rows(warehouse):
+    """DROP TABLE must purge the managed table's data files and LLAP cache,
+    so a re-created table with the same name never scans stale delta stores
+    (the seed bug: 4 old + 4 new rows, COUNT(*) said 8)."""
+    s = warehouse.session()
+    s.execute("CREATE TABLE dr (a INT)")
+    s.execute("INSERT INTO dr VALUES (1), (2), (3), (4)")
+    assert s.execute("SELECT COUNT(*) FROM dr").rows == [(4,)]
+    s.execute("SELECT a FROM dr")  # warm the LLAP chunk/meta caches
+    s.execute("DROP TABLE dr")
+    s.execute("CREATE TABLE dr (a INT)")
+    s.execute("INSERT INTO dr VALUES (10), (20), (30), (40)")
+    assert s.execute("SELECT COUNT(*) FROM dr").rows == [(4,)]
+    assert s.execute("SELECT a FROM dr ORDER BY a").rows == \
+        [(10,), (20,), (30,), (40,)]
+
+
+def test_drop_table_removes_data_dir_and_llap_entries(warehouse):
+    import os
+
+    s = warehouse.session()
+    s.execute("CREATE TABLE gone (a INT)")
+    s.execute("INSERT INTO gone VALUES (1), (2)")
+    loc = warehouse.hms.get_table("gone").location
+    s.execute("SELECT a FROM gone")
+    assert os.path.isdir(loc)
+    cached = [p for p in warehouse.llap._meta if p.startswith(loc)]
+    assert cached  # scan populated the footer cache
+    s.execute("DROP TABLE gone")
+    assert not os.path.isdir(loc)
+    assert not [p for p in warehouse.llap._meta if p.startswith(loc)]

@@ -353,3 +353,85 @@ def test_registry_resolution():
         resolve("no_such_kernel")
     with pytest.raises(ValueError):
         resolve("filter_eval", "cuda")
+
+
+# ---------------------------------------------------------------------------
+# plan-cache drift policy
+# ---------------------------------------------------------------------------
+def test_plan_cache_survives_small_writes(conn):
+    """Non-MV plans stay cached across writes (scans re-resolve data at run
+    time); only a >2x row-count shift re-optimizes."""
+    cur = conn.cursor()
+    q = "SELECT tag, COUNT(*) AS n FROM events GROUP BY tag ORDER BY tag"
+    cur.execute(q)
+    cur.execute(q)
+    assert cur.info["plan_cache_hit"] is True
+    cur.execute("INSERT INTO events VALUES (999, 1.0, 'red')")  # +1 row
+    cur.execute(q)
+    assert cur.info.get("plan_cache_hit") is True  # plan survived the write
+    counts = dict(cur.fetchall())
+    assert counts["red"] == 87  # ...and the new row is visible (86 + 1)
+
+
+def test_plan_cache_drops_on_row_count_drift(conn):
+    cur = conn.cursor()
+    q = "SELECT tag, COUNT(*) AS n FROM events GROUP BY tag"
+    cur.execute(q)
+    cur.execute(q)
+    assert cur.info["plan_cache_hit"] is True
+    rows = ", ".join(f"({i}, 0.5, 'grey')" for i in range(600))  # 257 -> >2x
+    cur.execute(f"INSERT INTO events VALUES {rows}")
+    cur.execute(q)
+    assert cur.info.get("plan_cache_hit") is None  # drift re-optimized
+
+
+# ---------------------------------------------------------------------------
+# grouped aggregation through the kernel registry
+# ---------------------------------------------------------------------------
+def test_engine_routes_grouped_aggregation_through_registry(tmp_path):
+    """engine != auto dispatches SUM/COUNT through kernels.registry
+    ('hash_group'), like filter conjunctions already do."""
+    import repro.kernels.registry as registry
+
+    c = db.connect(str(tmp_path / "wh"), result_cache=False)
+    cur = c.cursor()
+    cur.execute("CREATE TABLE g (k INT, v DOUBLE, n INT)")
+    cur.execute("INSERT INTO g VALUES " + ", ".join(
+        f"({i % 7}, {i * 0.5}, {i % 13})" for i in range(200)))
+    q = ("SELECT k, SUM(v) AS sv, COUNT(v) AS cv, AVG(n) AS an "
+         "FROM g GROUP BY k ORDER BY k")
+    expect = cur.execute(q).fetchall()
+
+    calls = []
+    orig = registry.resolve
+
+    def spy(kernel, engine="auto"):
+        calls.append((kernel, engine))
+        return orig(kernel, engine)
+
+    registry.resolve = spy
+    try:
+        for engine in ("ref", "pallas"):
+            calls.clear()
+            with db.connect(warehouse=c.warehouse, result_cache=False,
+                            engine=engine) as ce:
+                got = ce.execute(q).fetchall()
+            assert [k for k, _ in calls].count("hash_group") > 0, engine
+            assert all(e == engine for k, e in calls if k == "hash_group")
+            for exp_row, got_row in zip(expect, got):
+                assert exp_row == pytest.approx(got_row), engine
+    finally:
+        registry.resolve = orig
+    c.close()
+
+
+def test_kernel_agg_falls_back_beyond_float32(tmp_path):
+    """Integer SUMs that float32 accumulation cannot represent exactly must
+    take the numpy path even under a forced engine."""
+    with db.connect(str(tmp_path / "wh"), engine="ref",
+                    result_cache=False) as c:
+        cur = c.cursor()
+        cur.execute("CREATE TABLE big (k INT, a INT)")
+        cur.execute(f"INSERT INTO big VALUES (1, {1 << 24}), (1, 1)")
+        cur.execute("SELECT k, SUM(a) AS s FROM big GROUP BY k")
+        assert cur.fetchall() == [(1, (1 << 24) + 1)]
