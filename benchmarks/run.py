@@ -9,6 +9,12 @@ Prints ``name,us_per_call,derived`` CSV rows plus per-section summaries.
   q88_shared_work        : §7.1 claim — shared work optimizer speedup
   kernel_micro           : Pallas kernels (interpret mode) vs jnp oracles
   roofline_summary       : aggregates experiments/dryrun artifacts (§Roofline)
+  bench_pr3              : pipelined streaming vs materialized baseline
+                           (wall, time-to-first-batch, peak buffered rows,
+                           spill counts) -> BENCH_PR3.json
+
+``python -m benchmarks.run pr3 [--scale N] [--out PATH]`` runs only the
+PR 3 streaming benchmark (the CI smoke invocation).
 """
 from __future__ import annotations
 
@@ -256,6 +262,109 @@ def kernel_micro():
          "chunked SSD (interpret)")
 
 
+PR3_QUERIES = {
+    # scan-filter-project: first rows stream out while the scan runs
+    "scan_stream": "SELECT lo_orderdate, lo_revenue FROM lineorder"
+                   " WHERE lo_quantity < 48",
+    # one representative per SSB flight (Q1-Q4)
+    "q1.1": None, "q2.1": None, "q3.1": None, "q4.1": None,
+}
+
+
+def _pr3_measure(conn, sql, page_rows=1024):
+    """One streamed execution: wall, time-to-first-batch, poll metrics."""
+    t0 = time.perf_counter()
+    h = conn.execute_async(sql)
+    ttfb = None
+    rows = 0
+    for batch in h.fetch_stream(batch_rows=page_rows):
+        if ttfb is None:
+            ttfb = time.perf_counter() - t0
+        rows += len(batch)
+    h.result(600)
+    wall = time.perf_counter() - t0
+    p = h.poll()
+    return {
+        "wall_ms": round(wall * 1e3, 3),
+        "time_to_first_batch_ms": round((ttfb if ttfb is not None else wall)
+                                        * 1e3, 3),
+        "rows": rows,
+        "peak_buffered_rows": int(p.get("peak_buffered_rows", 0)),
+        "rows_spilled": int(p.get("rows_spilled", 0)),
+        "bytes_spilled": int(p.get("bytes_spilled", 0)),
+        "spill_chunks_by_vertex": {k: v for k, v in p.get("spill", {}).items()
+                                   if v.get("rows")},
+    }
+
+
+def bench_pr3(scale=60_000, out_path=None):
+    """Streaming-execution trajectory: pipelined exchanges vs the
+    materialize-every-vertex baseline, plus a constrained-budget spill run.
+
+    Writes BENCH_PR3.json so later PRs can track wall time,
+    time-to-first-batch, and peak buffered rows per SSB query.
+    """
+    import repro.api as db
+    from benchmarks.ssb import SSB_QUERIES
+
+    wh = _fresh_ssb(scale=scale)
+    queries = {name: (sql or SSB_QUERIES[name])
+               for name, sql in PR3_QUERIES.items()}
+    modes = {
+        "baseline": {"exchange.pipeline": False},
+        "pipelined": {},
+        "pipelined_tight": {"exchange.buffer_rows": 2048,
+                            "exchange.buffer_bytes": 1 << 20},
+    }
+    report = {
+        "scale_rows": scale,
+        "config": {"exchange.batch_rows": 1024,
+                   "tight_buffer_rows": 2048},
+        "queries": {},
+    }
+    for name, sql in queries.items():
+        per_query = {}
+        for mode, overrides in modes.items():
+            conn = db.connect(warehouse=wh, result_cache=False, **overrides)
+            _pr3_measure(conn, sql)  # warm LLAP (paper reports warm cache)
+            runs = [_pr3_measure(conn, sql) for _ in range(2)]
+            per_query[mode] = min(runs, key=lambda r: r["wall_ms"])
+            conn.close()
+            emit(f"pr3.{name}.{mode}", per_query[mode]["wall_ms"] * 1e3,
+                 f"ttfb_ms={per_query[mode]['time_to_first_batch_ms']},"
+                 f"peak_rows={per_query[mode]['peak_buffered_rows']},"
+                 f"spilled={per_query[mode]['rows_spilled']}")
+        assert per_query["baseline"]["rows"] == per_query["pipelined"]["rows"]
+        assert per_query["pipelined"]["rows"] == \
+            per_query["pipelined_tight"]["rows"]
+        per_query["ttfb_speedup_vs_baseline"] = round(
+            per_query["baseline"]["time_to_first_batch_ms"]
+            / max(per_query["pipelined"]["time_to_first_batch_ms"], 1e-3), 3)
+        report["queries"][name] = per_query
+    streamed = report["queries"]["scan_stream"]
+    report["summary"] = {
+        "scan_ttfb_speedup": streamed["ttfb_speedup_vs_baseline"],
+        "scan_peak_rows_baseline": streamed["baseline"]["peak_buffered_rows"],
+        "scan_peak_rows_pipelined":
+            streamed["pipelined"]["peak_buffered_rows"],
+        # under a constrained budget the in-memory peak stays bounded by
+        # exchange.buffer_rows while results stay identical (spill/replay)
+        "scan_peak_rows_tight":
+            streamed["pipelined_tight"]["peak_buffered_rows"],
+        "tight_budget_total_rows_spilled": sum(
+            q["pipelined_tight"]["rows_spilled"]
+            for q in report["queries"].values()),
+    }
+    out_path = out_path or os.path.join(os.path.dirname(__file__),
+                                        "BENCH_PR3.json")
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    emit("pr3.scan_ttfb_speedup", report["summary"]["scan_ttfb_speedup"])
+    wh.close()
+    return report
+
+
 def roofline_summary():
     d = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
     if not os.path.isdir(d):
@@ -287,6 +396,7 @@ def main() -> None:
     acid = acid_at_par()
     sw = q88_shared_work()
     kernel_micro()
+    bench_pr3()
     roofline_summary()
     print()
     print(f"# paper-claims summary: v3-vs-v1 speedup {v1v3:.2f}x (paper: 4.6x avg),"
@@ -296,4 +406,18 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("section", nargs="?", default="all",
+                        choices=["all", "pr3"])
+    parser.add_argument("--scale", type=int, default=60_000,
+                        help="SSB lineorder rows (pr3 section)")
+    parser.add_argument("--out", default=None,
+                        help="BENCH_PR3.json output path (pr3 section)")
+    args = parser.parse_args()
+    if args.section == "pr3":
+        print("name,us_per_call,derived")
+        bench_pr3(scale=args.scale, out_path=args.out)
+    else:
+        main()

@@ -5,8 +5,9 @@ partitioned ACID table, runs optimized analytic queries with ``?``
 parameters, pages results with a cursor, reuses a prepared statement's
 cached plan, shows the results cache, a materialized-view rewrite, DML with
 snapshot isolation, asynchronous query handles (``execute_async`` +
-``fetch_stream`` behind workload-manager pools, paper §5.2), and EXPLAIN
-ANALYZE with per-stage pipeline timings.
+``fetch_stream`` behind workload-manager pools, paper §5.2), streaming
+execution over spill-aware exchanges (``exchange.*`` session config), and
+EXPLAIN ANALYZE with per-stage pipeline timings.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -136,6 +137,32 @@ def main():
         print(f"h3 cancelled cleanly (state={h3.state})")
     slow.close()
     dash.close()
+
+    print("\n== streaming execution + spill-aware exchanges (§5) ==")
+    # Operators stream `exchange.batch_rows`-row morsels end-to-end: scans,
+    # filters and projects pipeline chunk-by-chunk, pipeline breakers (join
+    # builds, grouped aggregation, sort) keep incremental-merge state, and
+    # each DAG edge buffers at most `exchange.buffer_rows` rows /
+    # `exchange.buffer_bytes` bytes in memory — overflow morsels spill to a
+    # per-query scratch directory and replay downstream, so a constrained
+    # budget changes peak memory, never results.  fetch_stream() therefore
+    # yields first rows while upstream vertices are still running.
+    tight = db.connect(warehouse=conn.warehouse, result_cache=False,
+                       **{"exchange.batch_rows": 256,
+                          "exchange.buffer_rows": 512,
+                          "exchange.spill": True})
+    ht = tight.execute_async(
+        "SELECT ss_item_sk, ss_price FROM store_sales WHERE ss_qty >= 2")
+    first = next(iter(ht.fetch_stream(batch_rows=256)))
+    print(f"first {len(first)} rows arrived while state={ht.state}")
+    ht.result(30)
+    pt = ht.poll()
+    print(f"spilled under the tight budget: rows={pt['rows_spilled']} "
+          f"bytes={pt['bytes_spilled']} per-vertex={pt['spill']} "
+          f"(peak in-memory rows bounded at {pt['peak_buffered_rows']})")
+    # with `exchange.spill: False` the same overflow raises
+    # MemoryPressureError and feeds the §4.2 re-optimization path instead
+    tight.close()
 
     print("\n== EXPLAIN ANALYZE: per-stage pipeline timings ==")
     cur.execute("EXPLAIN ANALYZE " + q.replace("?", "3", 1).replace("?", "6"))

@@ -5,14 +5,19 @@ immediately; the statement runs on the warehouse's scheduler worker pool
 behind workload-manager admission (paper §5.2).  The handle exposes:
 
   * ``state`` — QUEUED / ADMITTED / RUNNING / SUCCEEDED / FAILED / CANCELLED;
-  * ``poll()`` — progress: DAG vertices done/total, WLM pool, queue wait;
+  * ``poll()`` — progress: DAG vertices done/total, WLM pool, queue wait,
+    rows/bytes spilled per vertex by the spill-aware exchanges, and the
+    per-pool admission queue depth;
   * ``result(timeout)`` — block for completion, return a :class:`Cursor`
     over the result set (raises the query's error on failure);
-  * ``cancel()`` — cooperative cancellation, observed at DAG vertex
-    boundaries and while queued for admission;
-  * ``fetch_stream()`` — iterate row batches as the engine produces them,
-    before the handle reaches SUCCEEDED (a lagging consumer backpressures
-    the executing worker).
+  * ``cancel()`` — cooperative cancellation, observed while queued for
+    admission and at every operator batch boundary (latency bounded by one
+    morsel);
+  * ``fetch_stream()`` — iterate row batches as the engine produces them:
+    root-vertex morsels stream out while upstream DAG vertices are still
+    running, so first rows arrive long before the handle reaches SUCCEEDED
+    (a lagging consumer backpressures the executing worker; upstream
+    vertices keep going, bounded by the exchanges' spill budget).
 
 Queries killed by a WLM trigger rule raise
 :class:`repro.api.exceptions.QueryKilledError` from ``result()`` /
@@ -50,7 +55,10 @@ class QueryHandle:
 
     def poll(self) -> dict:
         """Non-blocking progress snapshot: ``state``, ``pool``,
-        ``vertices_done``/``vertices_total``, ``queue_wait_ms``."""
+        ``vertices_done``/``vertices_total``, ``queue_wait_ms``,
+        ``spill`` (per-vertex rows/bytes spilled by the exchanges),
+        ``rows_spilled``/``bytes_spilled`` totals, and
+        ``pool_queue_depth`` (queued queries per WLM pool)."""
         return self._task.poll()
 
     @property
@@ -83,13 +91,14 @@ class QueryHandle:
                      ) -> Iterator[List[tuple]]:
         """Yield result rows in batches as the engine produces them.
 
-        While the query is in flight, batches stream from the executing
-        worker *before* the handle transitions to SUCCEEDED — upstream DAG
-        vertices report through :meth:`poll` as they finish, and the root
-        vertex's output is handed over in ``batch_rows``-row slices (default:
-        session config ``stream_batch_rows``).  On a finished handle the
-        final result is replayed in slices instead, so the method is safe to
-        call at any point.  Raises like :meth:`result` if the query failed.
+        While the query is in flight, the root vertex's morsels stream from
+        the executing worker as they are produced — the first batch arrives
+        before the root vertex (let alone the DAG) finishes, upstream
+        vertices report through :meth:`poll` as they go, and rows are handed
+        over in ``batch_rows``-row slices (default: session config
+        ``stream_batch_rows``).  On a finished handle the final result is
+        replayed in slices instead, so the method is safe to call at any
+        point.  Raises like :meth:`result` if the query failed.
         """
         task = self._task
         if task.stream.activate(batch_rows):

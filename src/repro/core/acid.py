@@ -55,6 +55,23 @@ T_ROWID_COL = "__t_rowid__"
 class PlainIO:
     """Cold reads straight off the file system (the "container" path)."""
 
+    def read_file_chunks(
+        self,
+        path: str,
+        columns: Optional[Sequence[str]] = None,
+        sarg_preds: Sequence[SargPredicate] = (),
+        runtime_blooms: Optional[Dict[str, BloomFilter]] = None,
+    ) -> Iterator[VectorBatch]:
+        """Stream one decoded ``VectorBatch`` per surviving stripe, so scans
+        pipeline morsels instead of materializing whole files."""
+        meta = self.read_meta(path)
+        cols = list(columns) if columns is not None else meta.columns
+        for si, smeta in enumerate(meta.stripes):
+            if sarg_preds and not stripe_may_match(smeta, sarg_preds):
+                continue  # row-group skip via min/max + file blooms (§5.1)
+            stripe_cols = {c: read_stripe_column(path, si, c) for c in cols}
+            yield _bloom_masked(stripe_cols, cols, runtime_blooms)
+
     def read_file(
         self,
         path: str,
@@ -62,30 +79,39 @@ class PlainIO:
         sarg_preds: Sequence[SargPredicate] = (),
         runtime_blooms: Optional[Dict[str, BloomFilter]] = None,
     ) -> Tuple[FileMeta, VectorBatch]:
-        meta = read_file_meta(path)
+        meta = self.read_meta(path)
         cols = list(columns) if columns is not None else meta.columns
-        parts: Dict[str, list] = {c: [] for c in cols}
-        for si, smeta in enumerate(meta.stripes):
-            if sarg_preds and not stripe_may_match(smeta, sarg_preds):
-                continue  # row-group skip via min/max + file blooms (§5.1)
-            stripe_cols = {c: read_stripe_column(path, si, c) for c in cols}
-            mask = None
-            if runtime_blooms:
-                for col, bf in runtime_blooms.items():
-                    if col in stripe_cols:
-                        m = bf.might_contain(stripe_cols[col])
-                        mask = m if mask is None else (mask & m)
-            for c in cols:
-                v = stripe_cols[c]
-                parts[c].append(v[mask] if mask is not None else v)
-        out = {
-            c: (np.concatenate(parts[c]) if parts[c] else np.empty(0, dtype=meta.dtypes[c]))
-            for c in cols
-        }
-        return meta, VectorBatch(out)
+        chunks = list(self.read_file_chunks(path, columns, sarg_preds,
+                                            runtime_blooms))
+        return meta, _concat_file_chunks(chunks, cols, meta)
 
     def read_meta(self, path: str) -> FileMeta:
         return read_file_meta(path)
+
+
+def _bloom_masked(
+    stripe_cols: Dict[str, np.ndarray],
+    cols: Sequence[str],
+    runtime_blooms: Optional[Dict[str, BloomFilter]],
+) -> VectorBatch:
+    """Apply runtime-filter bloom probes to one decoded stripe (§4.6)."""
+    mask = None
+    if runtime_blooms:
+        for col, bf in runtime_blooms.items():
+            if col in stripe_cols:
+                m = bf.might_contain(stripe_cols[col])
+                mask = m if mask is None else (mask & m)
+    if mask is None:
+        return VectorBatch({c: stripe_cols[c] for c in cols})
+    return VectorBatch({c: stripe_cols[c][mask] for c in cols})
+
+
+def _concat_file_chunks(chunks, cols, meta: FileMeta) -> VectorBatch:
+    if chunks:
+        return VectorBatch.concat(chunks)
+    return VectorBatch({
+        c: np.empty(0, dtype=meta.dtypes.get(c, "f8")) for c in cols
+    })
 
 
 @dataclass
@@ -248,20 +274,8 @@ class AcidTable:
         write_stripe_file(path, full, writeid=wid, bloom_columns=bloom_columns)
 
     # ---------------------------------------------------------------- reads
-    def scan_partition(
-        self,
-        location: str,
-        part_values: tuple,
-        wid_list: WriteIdList,
-        columns: Optional[Sequence[str]] = None,
-        sarg_preds: Sequence[SargPredicate] = (),
-        runtime_blooms: Optional[Dict[str, BloomFilter]] = None,
-        io=None,
-        keep_acid_cols: bool = False,
-    ) -> VectorBatch:
-        io = io or PlainIO()
-        base, deltas, deletes = select_stores(location, wid_list)
-
+    def _partition_tombstones(self, deletes, wid_list: WriteIdList,
+                              io) -> np.ndarray:
         # Deletes are usually small: load tombstones fully in memory (§3.2)
         tomb_keys = []
         for store in deletes:
@@ -275,7 +289,27 @@ class AcidTable:
                     tomb_keys.append(
                         _rowkey(tb.cols[T_WRITEID_COL], tb.cols[T_ROWID_COL])
                     )
-        tombs = np.concatenate(tomb_keys) if tomb_keys else np.empty(0, np.int64)
+        return np.concatenate(tomb_keys) if tomb_keys else np.empty(0, np.int64)
+
+    def iter_partition_chunks(
+        self,
+        location: str,
+        part_values: tuple,
+        wid_list: WriteIdList,
+        columns: Optional[Sequence[str]] = None,
+        sarg_preds: Sequence[SargPredicate] = (),
+        runtime_blooms: Optional[Dict[str, BloomFilter]] = None,
+        io=None,
+        keep_acid_cols: bool = False,
+    ) -> Iterator[VectorBatch]:
+        """Stream one partition's visible rows stripe-by-stripe.
+
+        The merge-on-read pipeline (WriteId visibility mask + tombstone
+        anti-join + partition-column injection) applies per decoded stripe
+        chunk, so a scan never materializes a whole partition."""
+        io = io or PlainIO()
+        base, deltas, deletes = select_stores(location, wid_list)
+        tombs = self._partition_tombstones(deletes, wid_list, io)
 
         data_cols = None
         if columns is not None:
@@ -285,34 +319,59 @@ class AcidTable:
                 if c not in data_cols:
                     data_cols = data_cols + [c]
 
-        chunks = []
+        def finish(tb: VectorBatch) -> VectorBatch:
+            # inject directory-encoded partition columns (§3.1 / Figure 3)
+            for col, val in zip(self.desc.partition_cols, part_values):
+                if columns is None or col in columns:
+                    dtype = _np_dtype(self.desc.dtype_of(col))
+                    tb = tb.with_column(
+                        col, np.full(tb.num_rows, val, dtype=dtype))
+            return tb if keep_acid_cols else tb.drop_acid_cols()
+
         stores = ([base] if base else []) + deltas
         for store in stores:
             for f in self._store_files(store.path):
-                _meta, tb = io.read_file(f, data_cols, sarg_preds, runtime_blooms)
-                mask = wid_list.valid_mask(tb.cols[WRITEID_COL])
-                if len(tombs):  # anti-join against delete tombstones
-                    keys = _rowkey(tb.cols[WRITEID_COL], tb.cols[ROWID_COL])
-                    mask &= ~np.isin(keys, tombs)
-                tb = tb.select(mask)
-                if tb.num_rows:
-                    chunks.append(tb)
+                for tb in io.read_file_chunks(f, data_cols, sarg_preds,
+                                              runtime_blooms):
+                    mask = wid_list.valid_mask(tb.cols[WRITEID_COL])
+                    if len(tombs):  # anti-join against delete tombstones
+                        keys = _rowkey(tb.cols[WRITEID_COL],
+                                       tb.cols[ROWID_COL])
+                        mask &= ~np.isin(keys, tombs)
+                    tb = tb.select(mask)
+                    if tb.num_rows:
+                        yield finish(tb)
 
-        out = (
-            VectorBatch.concat(chunks)
-            if chunks
-            else self._empty_batch(data_cols)
-        )
-        # inject directory-encoded partition columns (paper §3.1 / Figure 3)
+    def scan_partition(
+        self,
+        location: str,
+        part_values: tuple,
+        wid_list: WriteIdList,
+        columns: Optional[Sequence[str]] = None,
+        sarg_preds: Sequence[SargPredicate] = (),
+        runtime_blooms: Optional[Dict[str, BloomFilter]] = None,
+        io=None,
+        keep_acid_cols: bool = False,
+    ) -> VectorBatch:
+        chunks = list(self.iter_partition_chunks(
+            location, part_values, wid_list, columns, sarg_preds,
+            runtime_blooms, io, keep_acid_cols,
+        ))
+        if chunks:
+            return VectorBatch.concat(chunks)
+        data_cols = None
+        if columns is not None:
+            pcols = set(self.desc.partition_cols)
+            data_cols = [c for c in columns if c not in pcols]
+            for c in (WRITEID_COL, ROWID_COL):
+                if c not in data_cols:
+                    data_cols = data_cols + [c]
+        out = self._empty_batch(data_cols)
         for col, val in zip(self.desc.partition_cols, part_values):
             if columns is None or col in columns:
                 dtype = _np_dtype(self.desc.dtype_of(col))
-                out = out.with_column(col, np.full(out.num_rows, val, dtype=dtype))
-        if not keep_acid_cols:
-            out = out.drop_acid_cols()
-        elif columns is not None:
-            pass
-        return out
+                out = out.with_column(col, np.full(0, val, dtype=dtype))
+        return out if keep_acid_cols else out.drop_acid_cols()
 
     def scan(
         self,
@@ -339,6 +398,37 @@ class AcidTable:
                     self.desc.location, (), wid_list, columns, sarg_preds,
                     runtime_blooms, io, keep_acid_cols,
                 )
+        finally:
+            self._release_lease(wid_list.hwm)
+
+    def scan_chunks(
+        self,
+        wid_list: WriteIdList,
+        columns: Optional[Sequence[str]] = None,
+        sarg_preds: Sequence[SargPredicate] = (),
+        runtime_blooms: Optional[Dict[str, BloomFilter]] = None,
+        partition_filter=None,  # callable(part_values_tuple) -> bool
+        io=None,
+        keep_acid_cols: bool = False,
+    ) -> Iterator[Tuple[tuple, VectorBatch]]:
+        """Streaming variant of :meth:`scan`: yields ``(part_values, chunk)``
+        per decoded stripe chunk instead of one batch per partition."""
+        self._register_lease(wid_list.hwm)
+        try:
+            if self.desc.partition_cols:
+                targets = [
+                    (pvals, loc)
+                    for pvals, loc in self.hms.list_partitions(self.desc.name)
+                    if partition_filter is None or partition_filter(pvals)
+                ]
+            else:
+                targets = [((), self.desc.location)]
+            for pvals, loc in targets:
+                for chunk in self.iter_partition_chunks(
+                    loc, pvals, wid_list, columns, sarg_preds,
+                    runtime_blooms, io, keep_acid_cols,
+                ):
+                    yield pvals, chunk
         finally:
             self._release_lease(wid_list.hwm)
 

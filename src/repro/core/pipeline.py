@@ -402,9 +402,10 @@ class ExecuteStage(Stage):
                 q.info["wlm_pool"] = slot.pool
             q.batch = self._run_dag(q, qid, slot)
             if q.task is not None:
-                # stream the root output to the handle while still RUNNING;
-                # a consumer in fetch_stream() sees batches before the cache
-                # fill and the SUCCEEDED transition
+                # fallback for paths that produced no live chunk stream (a
+                # barrier-mode run, or a consumer that attached late): the
+                # emit path already claimed the stream otherwise, so this
+                # first-wins publish never double-streams
                 q.task.stream.publish(q.batch, stream_batch_rows(cfg),
                                       q.cancel_token)
             if q.cacheable and q.filling:
@@ -424,26 +425,45 @@ class ExecuteStage(Stage):
         if q.task is not None:
             q.task.note_vertices_total(len(q.dag.vertices))
 
-        def on_vertex(vid, batch):
+        def on_vertex(vid, rows, stats):
             if q.task is not None:
-                q.task.note_vertex_done()
+                q.task.note_vertex_done(vid, stats)
             if slot is not None:
-                s.wh.wlm.update_metrics(qid, rows_produced=batch.num_rows)
+                s.wh.wlm.update_metrics(qid, rows_produced=rows)
+
+        def on_root_chunk(chunk):
+            # thread root-vertex morsels to the handle's stream while the
+            # DAG is still running: first rows reach fetch_stream() before
+            # upstream vertices finish
+            if q.task is not None:
+                q.task.stream.emit(chunk, stream_batch_rows(cfg),
+                                   q.cancel_token)
 
         try:
-            batch = sched.execute(q.dag, ctx, on_vertex_done=on_vertex)
+            batch = sched.execute(q.dag, ctx, on_vertex_done=on_vertex,
+                                  on_root_chunk=on_root_chunk)
             s._persist_runtime_stats(q.plan, ctx)
             return batch
-        except MemoryPressureError:
+        except MemoryPressureError as mem_err:
             mode = cfg["reopt_mode"]
             if mode == "off":
                 raise
+            if q.task is not None:
+                # a live consumer may hold a partial chunk prefix; fail the
+                # stream rather than splicing re-executed output onto it
+                # (result()/replay consumers get the re-executed result)
+                q.task.stream.abort_live(mem_err)
             q.info["reexecuted"] = True
             q.info["reopt_mode"] = mode
             s._persist_runtime_stats(q.plan, ctx)
+            # re-executions run with materialized (barrier) exchanges: the
+            # pressure signal may have come from a spill-disabled exchange
+            # overflow, which an unchanged budget would deterministically
+            # hit again
             if mode == "overlay":
                 # §4.2 overlay: re-run every re-execution with config overrides
-                cfg2 = {**cfg, **cfg.get("overlay", {}), "reopt_mode": "off"}
+                cfg2 = {**cfg, **cfg.get("overlay", {}), "reopt_mode": "off",
+                        "exchange.pipeline": False}
                 plan2, _ = s._plan_query(q.stmt, config=cfg2)
             else:
                 # §4.2 reoptimize: feed captured actual cardinalities back in;
@@ -451,6 +471,7 @@ class ExecuteStage(Stage):
                 cfg2 = {
                     **cfg,
                     "reopt_mode": "off",
+                    "exchange.pipeline": False,
                     "broadcast_threshold_rows": min(
                         cfg["broadcast_threshold_rows"],
                         float(cfg["mapjoin_max_rows"]),

@@ -30,7 +30,12 @@ FORWARD, BROADCAST, SHUFFLE = "FORWARD", "BROADCAST", "SHUFFLE"
 
 
 class MaterializedNode(P.PlanNode):
-    """Vertex-input placeholder; filled with the upstream vertex's output."""
+    """Vertex-input placeholder for one DAG edge.
+
+    In barrier (materialized) mode the upstream vertex's whole output batch
+    is assigned to ``batch``; in pipelined mode ``source`` points at the
+    upstream vertex's spill-aware :class:`~repro.core.runtime.exchange.Exchange`
+    and every consumer replays its chunk stream through a fresh reader."""
 
     _counter = [0]
 
@@ -38,6 +43,7 @@ class MaterializedNode(P.PlanNode):
         self.names = names
         self.tag = tag
         self.batch: Optional[VectorBatch] = None
+        self.source = None  # Exchange (pipelined scheduling)
         self.inputs = []
 
     def output_names(self):
@@ -178,9 +184,32 @@ class VertexMetrics:
     rows: int
     seconds: float
     speculated: bool = False
+    spilled_rows: int = 0
+    spilled_bytes: int = 0
+    peak_buffered_rows: int = 0
 
 
 class DAGScheduler:
+    """Runs a task DAG in one of two modes.
+
+    *Pipelined* (the default): every vertex is submitted in topological
+    order and starts as soon as a worker is free; vertices exchange
+    ``VectorBatch`` morsels through spill-aware :class:`Exchange` buffers,
+    so a consumer processes its producer's first chunks while the producer
+    is still running, and the root's chunks reach ``on_root_chunk`` (and
+    from there the client's ``fetch_stream``) before the DAG finishes.
+    Submission in topo order onto a FIFO pool guarantees progress: the
+    earliest unfinished vertex always has every producer already running or
+    done, and ``Exchange.put`` never blocks (overflow spills to scratch),
+    so no producer can deadlock behind its consumers.
+
+    *Barrier* (``exchange.pipeline = False``, and always under speculative
+    execution): the pre-streaming behavior — each vertex materializes its
+    whole output and downstream vertices start only when every dependency
+    has finished.  Operators still stream morsels internally, so cancel/kill
+    latency stays bounded by one morsel either way.
+    """
+
     def __init__(
         self,
         pool: Optional[ThreadPoolExecutor] = None,
@@ -197,24 +226,42 @@ class DAGScheduler:
         self.metrics: List[VertexMetrics] = []
 
     def execute(self, dag: TaskDAG, ctx: ExecContext,
-                on_vertex_done: Optional[Callable] = None) -> VectorBatch:
+                on_vertex_done: Optional[Callable] = None,
+                on_root_chunk: Optional[Callable] = None) -> VectorBatch:
         own_pool = False
         pool = self.pool
         if pool is None:
             pool = ThreadPoolExecutor(max_workers=4, thread_name_prefix="container")
             own_pool = True
-        cancel_token = getattr(ctx, "cancel_token", None)
+        pipelined = bool(ctx.config.get("exchange.pipeline", True)) \
+            and not self.speculative
         try:
-            results: Dict[str, VectorBatch] = {}
-            done: Set[str] = set()
-            order = dag.topo_order()
-            pending: Dict[str, Future] = {}
-            durations: List[float] = []
-            lock = threading.Lock()
+            if pipelined:
+                return self._execute_pipelined(dag, ctx, pool,
+                                               on_vertex_done, on_root_chunk)
+            return self._execute_barrier(dag, ctx, pool,
+                                         on_vertex_done, on_root_chunk)
+        finally:
+            if own_pool:
+                pool.shutdown(wait=False)
 
-            def run_vertex(vid: str) -> VectorBatch:
-                # vertex boundaries are the cancellation points (§5.2): a
-                # tripped token stops the query without mid-operator state
+    # ------------------------------------------------------------ pipelined
+    def _execute_pipelined(self, dag: TaskDAG, ctx: ExecContext, pool,
+                           on_vertex_done, on_root_chunk) -> VectorBatch:
+        from .exchange import Exchange, ExchangeConfig
+
+        cancel_token = getattr(ctx, "cancel_token", None)
+        excfg = ExchangeConfig(ctx.config,
+                               ctx.config.get("exchange.spill_dir"))
+        exchanges: Dict[str, Exchange] = {
+            vid: Exchange(vid, excfg) for vid in dag.vertices
+        }
+        lock = threading.Lock()
+        errors: List[BaseException] = []
+
+        def run_vertex(vid: str) -> None:
+            out_ex = exchanges[vid]
+            try:
                 if cancel_token is not None:
                     cancel_token.check()
                 if vid in self.injected_delays:
@@ -223,53 +270,133 @@ class DAGScheduler:
                     time.sleep(self.vertex_delay)
                 v = dag.vertices[vid]
                 for mn in _walk_materialized(v.plan):
-                    mn.batch = results[mn.tag]
+                    mn.source = exchanges[mn.tag]
                 t0 = time.perf_counter()
                 ex = _VertexExecutor(ctx)
-                out = ex.execute(v.plan)
+                rows = 0
+                for chunk in ex.stream(v.plan):
+                    rows += chunk.num_rows
+                    out_ex.put(chunk)
+                    if vid == dag.root and on_root_chunk is not None:
+                        on_root_chunk(chunk)
+                out_ex.close()
                 dt = time.perf_counter() - t0
+                st = out_ex.stats()
                 with lock:
-                    durations.append(dt)
-                    self.metrics.append(VertexMetrics(vid, out.num_rows, dt))
-                return out
+                    self.metrics.append(VertexMetrics(
+                        vid, rows, dt,
+                        spilled_rows=st["spilled_rows"],
+                        spilled_bytes=st["spilled_bytes"],
+                        peak_buffered_rows=st["peak_buffered_rows"],
+                    ))
+                if on_vertex_done is not None:
+                    on_vertex_done(vid, rows, st)
+            except BaseException as exc:  # noqa: BLE001 - re-raised below
+                with lock:
+                    errors.append(exc)
+                out_ex.close(error=exc)
+                if cancel_token is not None and not cancel_token.is_set():
+                    # wake sibling vertices blocked on other exchanges
+                    cancel_token.cancel(f"vertex {vid} failed: {exc}")
 
-            remaining = list(order)
-            while remaining or pending:
-                if cancel_token is not None:
-                    cancel_token.check()
-                # launch every vertex whose deps are satisfied
-                for vid in list(remaining):
-                    v = dag.vertices[vid]
-                    if all(d in done for d in v.deps):
-                        pending[vid] = pool.submit(run_vertex, vid)
-                        remaining.remove(vid)
-                if not pending:
-                    raise RuntimeError("DAG deadlock (cyclic dependencies?)")
-                completed, _ = wait(list(pending.values()), return_when=FIRST_COMPLETED,
-                                    timeout=self._speculation_timeout(durations))
-                if not completed and self.speculative:
-                    # straggler: speculatively clone the slowest pending vertex
-                    vid = next(iter(pending))
-                    self.injected_delays.pop(vid, None)
-                    spec = pool.submit(run_vertex, vid)
-                    old = pending[vid]
-                    pending[vid] = spec
-                    old.cancel()
-                    with lock:
-                        self.metrics.append(VertexMetrics(vid, -1, 0.0, True))
-                    continue
-                for vid in list(pending):
-                    fut = pending[vid]
-                    if fut.done():
-                        results[vid] = fut.result()
-                        done.add(vid)
-                        del pending[vid]
-                        if on_vertex_done is not None:
-                            on_vertex_done(vid, results[vid])
-            return results[dag.root]
+        futures = [pool.submit(run_vertex, vid) for vid in dag.topo_order()]
+        try:
+            for fut in futures:
+                fut.result()
+            if errors:
+                raise self._primary_error(errors)
+            return exchanges[dag.root].read_all()
         finally:
-            if own_pool:
-                pool.shutdown(wait=False)
+            for ex in exchanges.values():
+                ex.discard()
+            excfg.cleanup()
+
+    @staticmethod
+    def _primary_error(errors: List[BaseException]) -> BaseException:
+        # surface the root cause, not a secondary cancellation triggered by
+        # the failure-propagation cancel above
+        from .cancel import QueryCancelledError
+
+        for exc in errors:
+            if not isinstance(exc, QueryCancelledError):
+                return exc
+        return errors[0]
+
+    # ------------------------------------------------------------ barrier
+    def _execute_barrier(self, dag: TaskDAG, ctx: ExecContext, pool,
+                         on_vertex_done, on_root_chunk) -> VectorBatch:
+        cancel_token = getattr(ctx, "cancel_token", None)
+        results: Dict[str, VectorBatch] = {}
+        done: Set[str] = set()
+        order = dag.topo_order()
+        pending: Dict[str, Future] = {}
+        durations: List[float] = []
+        lock = threading.Lock()
+
+        def run_vertex(vid: str) -> VectorBatch:
+            # the vertex start is a cancellation point; operator loops also
+            # observe the token at every batch boundary, so even speculated
+            # clones of a cancelled vertex stop within one morsel
+            if cancel_token is not None:
+                cancel_token.check()
+            if vid in self.injected_delays:
+                time.sleep(self.injected_delays[vid])
+            if self.vertex_delay:
+                time.sleep(self.vertex_delay)
+            v = dag.vertices[vid]
+            for mn in _walk_materialized(v.plan):
+                mn.batch = results[mn.tag]
+            t0 = time.perf_counter()
+            ex = _VertexExecutor(ctx)
+            out = ex.execute(v.plan)
+            dt = time.perf_counter() - t0
+            with lock:
+                durations.append(dt)
+                self.metrics.append(VertexMetrics(vid, out.num_rows, dt))
+            return out
+
+        remaining = list(order)
+        while remaining or pending:
+            if cancel_token is not None:
+                cancel_token.check()
+            # launch every vertex whose deps are satisfied
+            for vid in list(remaining):
+                v = dag.vertices[vid]
+                if all(d in done for d in v.deps):
+                    pending[vid] = pool.submit(run_vertex, vid)
+                    remaining.remove(vid)
+            if not pending:
+                raise RuntimeError("DAG deadlock (cyclic dependencies?)")
+            completed, _ = wait(list(pending.values()), return_when=FIRST_COMPLETED,
+                                timeout=self._speculation_timeout(durations))
+            if not completed and self.speculative:
+                # straggler: speculatively clone the slowest pending vertex
+                vid = next(iter(pending))
+                self.injected_delays.pop(vid, None)
+                spec = pool.submit(run_vertex, vid)
+                old = pending[vid]
+                pending[vid] = spec
+                old.cancel()
+                with lock:
+                    self.metrics.append(VertexMetrics(vid, -1, 0.0, True))
+                continue
+            for vid in list(pending):
+                fut = pending[vid]
+                if fut.done():
+                    results[vid] = fut.result()
+                    done.add(vid)
+                    del pending[vid]
+                    if on_vertex_done is not None:
+                        # barrier mode buffers each vertex's whole output
+                        on_vertex_done(vid, results[vid].num_rows, {
+                            "spilled_rows": 0, "spilled_bytes": 0,
+                            "peak_buffered_rows": results[vid].num_rows,
+                        })
+        root = results[dag.root]
+        if on_root_chunk is not None:
+            for chunk in root.iter_chunks():
+                on_root_chunk(chunk)
+        return root
 
     def _speculation_timeout(self, durations: List[float]) -> Optional[float]:
         if not self.speculative or not durations:
@@ -279,6 +406,9 @@ class DAGScheduler:
 
 
 class _VertexExecutor(Executor):
-    def _exec_materializednode(self, node: MaterializedNode) -> VectorBatch:
+    def _stream_materializednode(self, node: MaterializedNode):
+        if node.source is not None:  # pipelined: replay the edge's exchange
+            yield from node.source.reader()
+            return
         assert node.batch is not None, f"edge {node.tag} not materialized"
-        return node.batch
+        yield from self._emit(node.batch)

@@ -1,0 +1,220 @@
+"""Spill-aware exchanges between DAG vertices (paper §2/§5 Tez edges).
+
+An :class:`Exchange` is the data-movement channel behind one DAG edge: the
+producer vertex appends ``VectorBatch`` morsels as it streams them, and any
+number of downstream readers replay the chunk sequence (a vertex output can
+feed several consumers — shared-work reuse, semijoin producers — so chunks
+are retained until the whole query finishes).
+
+Memory is bounded: the in-memory buffer holds at most ``buffer_rows`` rows /
+``buffer_bytes`` bytes per exchange; overflow chunks spill to a per-query
+scratch directory and are transparently re-loaded when a reader reaches
+them.  With spill disabled (session config ``exchange.spill = False``) an
+overflowing exchange raises :class:`MemoryPressureError` instead, feeding
+the §4.2 re-optimization path.
+
+``put`` never blocks — downstream backpressure is absorbed by the
+spill-to-disk path, which is what lets upstream vertices keep running while
+the client drains first rows from the root.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from typing import Dict, Iterator, List, Optional
+
+import numpy as np
+
+from .exec import MemoryPressureError
+from .vector import VectorBatch
+
+# Defaults for the session config knobs (see session.DEFAULT_CONFIG).
+DEFAULT_BUFFER_ROWS = 1 << 16
+DEFAULT_BUFFER_BYTES = 64 << 20
+
+
+def batch_nbytes(batch: VectorBatch) -> int:
+    return int(sum(v.nbytes for v in batch.cols.values()))
+
+
+class ExchangeConfig:
+    """Per-query exchange policy, resolved once from the session config."""
+
+    def __init__(self, config: Optional[dict] = None, scratch_dir: Optional[str] = None):
+        config = config or {}
+        self.buffer_rows = int(
+            config.get("exchange.buffer_rows", DEFAULT_BUFFER_ROWS)
+            or DEFAULT_BUFFER_ROWS
+        )
+        self.buffer_bytes = int(
+            config.get("exchange.buffer_bytes", DEFAULT_BUFFER_BYTES)
+            or DEFAULT_BUFFER_BYTES
+        )
+        self.spill = bool(config.get("exchange.spill", True))
+        self.scratch_dir = scratch_dir
+        self._own_scratch = False
+
+    def make_scratch(self) -> str:
+        if self.scratch_dir is None:
+            import tempfile
+
+            self.scratch_dir = tempfile.mkdtemp(prefix="repro_exchange_")
+            self._own_scratch = True
+        os.makedirs(self.scratch_dir, exist_ok=True)
+        return self.scratch_dir
+
+    def cleanup(self) -> None:
+        """Remove an auto-created scratch directory (query teardown)."""
+        if self._own_scratch and self.scratch_dir is not None:
+            import shutil
+
+            shutil.rmtree(self.scratch_dir, ignore_errors=True)
+            self.scratch_dir = None
+            self._own_scratch = False
+
+
+class _MemSlot:
+    __slots__ = ("batch",)
+
+    def __init__(self, batch: VectorBatch):
+        self.batch = batch
+
+
+class _DiskSlot:
+    __slots__ = ("path",)
+
+    def __init__(self, path: str):
+        self.path = path
+
+
+def _save_chunk(path: str, batch: VectorBatch) -> None:
+    names = np.array(batch.column_names)
+    data = {f"c{i}": v for i, v in enumerate(batch.cols.values())}
+    with open(path, "wb") as f:
+        np.savez(f, __names__=names, **data)
+
+
+def _load_chunk(path: str) -> VectorBatch:
+    with np.load(path, allow_pickle=False) as z:
+        names = [str(n) for n in z["__names__"]]
+        return VectorBatch({n: z[f"c{i}"] for i, n in enumerate(names)})
+
+
+class Exchange:
+    """One producer, N replaying readers, bounded memory via spill."""
+
+    def __init__(self, tag: str, cfg: ExchangeConfig):
+        self.tag = tag
+        self.cfg = cfg
+        self._slots: List[object] = []
+        self._cond = threading.Condition()
+        self._closed = False
+        self._error: Optional[BaseException] = None
+        self._mem_rows = 0
+        self._mem_bytes = 0
+        self._spill_seq = 0
+        # metrics surfaced through DAGScheduler -> QueryHandle.poll()
+        self.total_rows = 0
+        self.spilled_rows = 0
+        self.spilled_bytes = 0
+        self.spilled_chunks = 0
+        self.peak_buffered_rows = 0
+
+    # ------------------------------------------------------------ producer
+    def put(self, batch: VectorBatch) -> None:
+        n = batch.num_rows
+        nbytes = batch_nbytes(batch)
+        with self._cond:
+            if self._closed:
+                return
+            overflow = n > 0 and (
+                self._mem_rows + n > self.cfg.buffer_rows
+                or self._mem_bytes + nbytes > self.cfg.buffer_bytes
+            )
+            if overflow and not self.cfg.spill:
+                raise MemoryPressureError(
+                    f"exchange {self.tag} over budget "
+                    f"({self._mem_rows + n} rows / "
+                    f"{self._mem_bytes + nbytes} bytes buffered, "
+                    f"budget {self.cfg.buffer_rows} rows / "
+                    f"{self.cfg.buffer_bytes} bytes) and exchange.spill is off"
+                )
+            if overflow:
+                # unique per process + exchange instance: vertex tags (v1,
+                # v2, ...) repeat across queries that may share a configured
+                # exchange.spill_dir
+                path = os.path.join(
+                    self.cfg.make_scratch(),
+                    f"{self.tag}_{os.getpid():x}_{id(self):x}"
+                    f"_{self._spill_seq:06d}.npz",
+                )
+                self._spill_seq += 1
+                _save_chunk(path, batch)
+                self._slots.append(_DiskSlot(path))
+                self.spilled_rows += n
+                self.spilled_bytes += nbytes
+                self.spilled_chunks += 1
+            else:
+                self._slots.append(_MemSlot(batch))
+                self._mem_rows += n
+                self._mem_bytes += nbytes
+                self.peak_buffered_rows = max(self.peak_buffered_rows,
+                                              self._mem_rows)
+            self.total_rows += n
+            self._cond.notify_all()
+
+    def close(self, error: Optional[BaseException] = None) -> None:
+        with self._cond:
+            if self._closed:
+                return
+            self._closed = True
+            self._error = error
+            self._cond.notify_all()
+
+    # ------------------------------------------------------------ consumers
+    def reader(self) -> Iterator[VectorBatch]:
+        """A fresh pass over the full chunk sequence (blocking iterator)."""
+        i = 0
+        while True:
+            with self._cond:
+                while i >= len(self._slots) and not self._closed:
+                    self._cond.wait(0.05)
+                if i < len(self._slots):
+                    slot = self._slots[i]
+                elif self._error is not None:
+                    raise self._error
+                else:
+                    return
+            i += 1
+            if isinstance(slot, _MemSlot):
+                yield slot.batch
+            else:
+                yield _load_chunk(slot.path)
+
+    def read_all(self) -> VectorBatch:
+        chunks = list(self.reader())
+        return VectorBatch.concat(chunks) if chunks else VectorBatch({})
+
+    # ------------------------------------------------------------ teardown
+    def stats(self) -> Dict[str, int]:
+        with self._cond:
+            return {
+                "rows": self.total_rows,
+                "spilled_rows": self.spilled_rows,
+                "spilled_bytes": self.spilled_bytes,
+                "spilled_chunks": self.spilled_chunks,
+                "peak_buffered_rows": self.peak_buffered_rows,
+            }
+
+    def discard(self) -> None:
+        """Release buffered chunks and delete this exchange's spill files."""
+        with self._cond:
+            slots, self._slots = self._slots, []
+            self._closed = True
+            self._mem_rows = self._mem_bytes = 0
+        for slot in slots:
+            if isinstance(slot, _DiskSlot):
+                try:
+                    os.unlink(slot.path)
+                except OSError:
+                    pass

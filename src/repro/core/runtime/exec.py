@@ -26,7 +26,7 @@ from ..metastore import Metastore, Snapshot, WriteIdList
 from ..optimizer import plan as P
 from ..sql import ast as A
 from ..storage import SargPredicate
-from .vector import ROWID_COL, WRITEID_COL, VectorBatch
+from .vector import DEFAULT_BATCH_ROWS, ROWID_COL, WRITEID_COL, VectorBatch
 
 
 class ExecError(Exception):
@@ -342,23 +342,170 @@ def _group_codes(batch: VectorBatch, keys: Sequence[str]) -> Tuple[np.ndarray, n
 # ===========================================================================
 # operators
 # ===========================================================================
+# how a partial aggregate folds into the running incremental-merge state:
+# partial SUMs and COUNTs add, partial MIN/MAX re-minimize/-maximize
+_FOLD_FN = {"sum": "sum", "count": "sum", "min": "min", "max": "max"}
+
+
+class _KernelBloomProbe:
+    """Adapter routing runtime-filter bloom probes through the kernel
+    registry (``bloom_probe`` under ``engine: pallas|ref``) while presenting
+    the ``might_contain`` surface the scan I/O layer expects."""
+
+    def __init__(self, bf: BloomFilter, engine: str):
+        self._bf = bf
+        self._engine = engine
+
+    def might_contain(self, values: np.ndarray) -> np.ndarray:
+        from ...kernels.bloom.ops import probe_bloom_filter
+
+        return np.asarray(probe_bloom_filter(self._bf, values,
+                                             engine=self._engine))
+
+
+class _BuildTable:
+    """Build-side dictionary state for streaming hash-join probes.
+
+    The build side's key columns are dictionary-encoded once (sorted
+    uniques); every probe chunk then maps its key values into build codes —
+    via the ``key_lookup`` kernel under ``engine: pallas|ref`` — so probing
+    is O(chunk) instead of re-factorizing the whole build side per morsel.
+    """
+
+    def __init__(self, rb: VectorBatch, right_keys, left_keys,
+                 lproto: VectorBatch, ctx: ExecContext):
+        self.ctx = ctx
+        self.left_keys = list(left_keys)
+        self.keys = []  # (uniq_sorted, cast, cardinality+1) per key column
+        rc = None
+        for rk, lk in zip(right_keys, left_keys):
+            rv, lv = rb.cols[rk], lproto.cols[lk]
+            if rv.dtype.kind in ("U", "S") or lv.dtype.kind in ("U", "S"):
+                cast: Optional[type] = str
+                rv = rv.astype(str)
+            elif rv.dtype != lv.dtype:
+                cast = float
+                rv = rv.astype(np.float64)
+            else:
+                cast = None
+            uniq, inv = np.unique(rv, return_inverse=True)
+            k = np.int64(len(uniq) + 1)
+            self.keys.append((uniq, cast, k))
+            inv = inv.astype(np.int64)
+            rc = inv if rc is None else rc * k + inv
+        self.order = np.argsort(rc, kind="stable")
+        self.rc_sorted = rc[self.order]
+
+    def probe_codes(self, lb: VectorBatch) -> np.ndarray:
+        """Combined build codes for a probe chunk; -1 marks no-match rows."""
+        lc, valid = None, None
+        for (uniq, cast, k), lk in zip(self.keys, self.left_keys):
+            v = lb.cols[lk]
+            if cast is str:
+                v = v.astype(str)
+            elif cast is float:
+                v = v.astype(np.float64)
+            codes = self._lookup(uniq, v)
+            ok = codes >= 0
+            valid = ok if valid is None else (valid & ok)
+            c = np.where(ok, codes, 0)
+            lc = c if lc is None else lc * k + c
+        if lc is None:
+            return np.full(lb.num_rows, -1, dtype=np.int64)
+        return np.where(valid, lc, np.int64(-1))
+
+    def _lookup(self, uniq: np.ndarray, vals: np.ndarray) -> np.ndarray:
+        if len(uniq) == 0:
+            return np.full(len(vals), -1, dtype=np.int64)
+        if (self.ctx.engine != "auto" and uniq.dtype.kind in "iuf"
+                and vals.dtype.kind in "iuf"):
+            # kernel contract is float32: only when the cast round-trips
+            u32, v32 = uniq.astype(np.float32), vals.astype(np.float32)
+            if (np.array_equal(u32.astype(uniq.dtype), uniq)
+                    and np.array_equal(v32.astype(vals.dtype), vals)):
+                fn = self.ctx.kernel("key_lookup")
+                return np.asarray(fn(u32, v32)).astype(np.int64)
+        idx = np.minimum(np.searchsorted(uniq, vals), len(uniq) - 1)
+        found = uniq[idx] == vals
+        return np.where(found, idx, -1).astype(np.int64)
+
+
 class Executor:
+    """Pipelined interpreter: operators are generators over ``VectorBatch``
+    morsels (``exchange.batch_rows``, default ``DEFAULT_BATCH_ROWS``).
+
+    ``stream`` is the primary entry point; scans, filters, projects, limits
+    and UNION ALL pipeline chunk-by-chunk, while pipeline breakers (join
+    build sides, grouped aggregation, sort, window, DISTINCT union)
+    accumulate incremental-merge state and then stream their output in
+    morsels.  ``execute`` materializes a stream for callers that need the
+    whole relation (DML, MV maintenance).  The cancel token is observed at
+    every batch boundary, so kill/cancel latency is bounded by one morsel.
+    """
+
     def __init__(self, ctx: ExecContext):
         self.ctx = ctx
+        self.batch_rows = int(
+            ctx.config.get("exchange.batch_rows", DEFAULT_BATCH_ROWS)
+            or DEFAULT_BATCH_ROWS
+        )
 
     def execute(self, node: P.PlanNode) -> VectorBatch:
+        chunks = list(self.stream(node))
+        return chunks[0] if len(chunks) == 1 else VectorBatch.concat(chunks)
+
+    def stream(self, node: P.PlanNode):
+        """Yield the node's output as a sequence of morsels.
+
+        Every operator stream yields at least one (possibly empty) batch so
+        downstream operators always see the output schema.
+        """
         key = node.key()
-        if key in self.ctx.subplan_cache:  # shared-work reuse (§4.5)
-            return self.ctx.subplan_cache[key]
-        method = getattr(self, "_exec_" + type(node).__name__.lower())
-        out = method(node)
-        self.ctx.record(node, out.num_rows)
+        cached = self.ctx.subplan_cache.get(key)
+        if cached is not None:  # shared-work reuse (§4.5)
+            yield from self._emit(cached)
+            return
         if key in self.ctx.shared_keys:
+            # shared subplans materialize once, then replay per consumer
+            out = VectorBatch.concat(list(self._dispatch(node)))
+            self.ctx.record(node, out.num_rows)
             self.ctx.subplan_cache[key] = out
-        return out
+            yield from self._emit(out)
+            return
+        rows, first = 0, True
+        for chunk in self._dispatch(node):
+            self._checkpoint()
+            if chunk.num_rows == 0 and not first:
+                continue
+            first = False
+            rows += chunk.num_rows
+            yield chunk
+        self.ctx.record(node, rows)
+
+    def _dispatch(self, node: P.PlanNode):
+        method = getattr(self, "_stream_" + type(node).__name__.lower(), None)
+        if method is None:
+            raise ExecError(f"no operator for {type(node).__name__}")
+        return method(node)
+
+    def _checkpoint(self) -> None:
+        """Cancellation point at every batch boundary (bounds cancel/kill
+        latency — including inside speculated vertex clones — to one morsel)."""
+        token = self.ctx.cancel_token
+        if token is not None:
+            token.check()
+
+    def _emit(self, batch: VectorBatch):
+        if batch.num_rows == 0:
+            yield batch  # schema-carrying empty morsel
+            return
+        yield from batch.iter_chunks(self.batch_rows)
+
+    def _collect(self, node: P.PlanNode) -> VectorBatch:
+        return VectorBatch.concat(list(self.stream(node)))
 
     # ---- scans -------------------------------------------------------------
-    def _exec_scan(self, node: P.Scan) -> VectorBatch:
+    def _stream_scan(self, node: P.Scan):
         desc = node.table
         tbl = AcidTable(desc, self.ctx.hms)
         wid = self.ctx.widlist(desc.name)
@@ -367,14 +514,18 @@ class Executor:
         sargs = _extract_sargs(node.pushed_filter) if node.pushed_filter else []
 
         # dynamic semijoin reducers (§4.6): evaluate producers, build filters
-        runtime_blooms: Dict[str, BloomFilter] = {}
+        runtime_blooms: Dict[str, object] = {}
         part_value_sets: Dict[str, np.ndarray] = {}
         for rf in node.runtime_filters:
             res = self._runtime_filter_values(rf)
             if rf.kind == "partition":
                 part_value_sets[rf.target_column] = res["values"]
             else:
-                runtime_blooms[rf.target_column] = res["bloom"]
+                bloom = res["bloom"]
+                if self.ctx.engine != "auto":
+                    # route stripe-level probes through the kernel registry
+                    bloom = _KernelBloomProbe(bloom, self.ctx.engine)
+                runtime_blooms[rf.target_column] = bloom
                 sargs.append(SargPredicate(rf.target_column, ">=", res["min"]))
                 sargs.append(SargPredicate(rf.target_column, "<=", res["max"]))
 
@@ -397,8 +548,14 @@ class Executor:
 
         want = [c for c in node.columns]
         keep_acid = self.ctx.config.get("keep_acid_cols", False)
-        batches = []
-        for pvals, b in tbl.scan(
+        qualify = lambda b: b.rename(  # noqa: E731
+            {c: f"{node.alias}.{c}" for c in b.column_names
+             if not c.startswith("__")}
+        )
+        pushed = (_qualify(node.pushed_filter, node.alias)
+                  if node.pushed_filter is not None else None)
+        yielded = False
+        for pvals, b in tbl.scan_chunks(
             wid,
             columns=want,
             sarg_preds=[s for s in sargs if s.column not in pcols],
@@ -412,16 +569,30 @@ class Executor:
                 b = b.select(b.cols[WRITEID_COL] > node.min_writeid)
                 if not keep_acid:
                     b = b.drop_acid_cols()
-            batches.append(b)
-        out = VectorBatch.concat(batches) if batches else tbl._empty_batch(want)
-        out = out.rename({c: f"{node.alias}.{c}" for c in out.column_names
-                          if not c.startswith("__")})
-        if node.pushed_filter is not None and out.num_rows:
-            mask = eval_expr(
-                _qualify(node.pushed_filter, node.alias), out, self.ctx
-            ).astype(bool)
-            out = out.select(mask)
-        return out
+            b = qualify(b)
+            if pushed is not None and b.num_rows:
+                b = b.select(self._filter_mask(pushed, b))
+            if b.num_rows == 0:
+                if not yielded:
+                    yield b
+                    yielded = True
+                continue
+            for chunk in b.iter_chunks(self.batch_rows):
+                yield chunk
+                yielded = True
+        if not yielded:
+            # schema-carrying empty batch; _empty_batch holds only data
+            # columns, so directory-encoded partition columns are injected
+            # here (chunked scans yield nothing when every stripe filters
+            # out, unlike the old per-partition batches)
+            from ..acid import _np_dtype
+
+            out = tbl._empty_batch(want)
+            for col in desc.partition_cols:
+                if col in want and col not in out.cols:
+                    out = out.with_column(
+                        col, np.empty(0, dtype=_np_dtype(desc.dtype_of(col))))
+            yield qualify(out)
 
     def _runtime_filter_values(self, rf: P.RuntimeFilterSpec) -> dict:
         ck = rf.key()
@@ -441,7 +612,7 @@ class Executor:
         self.ctx.runtime_filter_cache[ck] = res
         return res
 
-    def _exec_federatedscan(self, node: P.FederatedScan) -> VectorBatch:
+    def _stream_federatedscan(self, node: P.FederatedScan):
         handler = self.ctx.handlers.get(node.table.handler)
         if handler is None:
             raise ExecError(f"no storage handler registered: {node.table.handler}")
@@ -451,15 +622,15 @@ class Executor:
             mapping = dict(zip(batch.column_names, node.output_names()))
         else:
             mapping = {c: f"{node.alias}.{c}" for c in batch.column_names}
-        return batch.rename(mapping)
+        yield from self._emit(batch.rename(mapping))
 
     # ---- relational ops ------------------------------------------------------
-    def _exec_filter(self, node: P.Filter) -> VectorBatch:
-        b = self.execute(node.input)
-        if b.num_rows == 0:
-            return b
-        mask = self._filter_mask(node.predicate, b)
-        return b.select(mask)
+    def _stream_filter(self, node: P.Filter):
+        for b in self.stream(node.input):
+            if b.num_rows == 0:
+                yield b
+                continue
+            yield b.select(self._filter_mask(node.predicate, b))
 
     def _filter_mask(self, predicate: A.Expr, b: VectorBatch) -> np.ndarray:
         # engine != auto routes sargable conjunctions through the registered
@@ -472,112 +643,207 @@ class Executor:
                 return np.asarray(fn(cols, ops, lits)).astype(bool)
         return eval_expr(predicate, b, self.ctx).astype(bool)
 
-    def _exec_project(self, node: P.Project) -> VectorBatch:
-        b = self.execute(node.input)
-        return VectorBatch({n: eval_expr(e, b, self.ctx) for e, n in node.exprs})
+    def _stream_project(self, node: P.Project):
+        for b in self.stream(node.input):
+            yield VectorBatch({n: eval_expr(e, b, self.ctx)
+                               for e, n in node.exprs})
 
-    def _exec_valuesnode(self, node: P.ValuesNode) -> VectorBatch:
+    def _stream_valuesnode(self, node: P.ValuesNode):
         one = VectorBatch({"__dummy__": np.zeros(1)})
         cols: Dict[str, list] = {n: [] for n in node.names}
         for row in node.rows:
             for n, e in zip(node.names, row):
                 cols[n].append(eval_expr(e, one, self.ctx)[0])
-        return VectorBatch({n: np.array(v) for n, v in cols.items()})
+        yield from self._emit(VectorBatch({n: np.array(v)
+                                           for n, v in cols.items()}))
 
-    def _exec_union(self, node: P.Union) -> VectorBatch:
-        outs = [self.execute(i) for i in node.inputs]
+    def _stream_union(self, node: P.Union):
         names = node.output_names()
-        aligned = []
-        for o in outs:
-            aligned.append(VectorBatch(dict(zip(names, (o.cols[c] for c in o.column_names)))))
+        if node.all:
+            # UNION ALL is streaming-safe: chunks pass through aligned
+            for i in node.inputs:
+                for o in self.stream(i):
+                    yield VectorBatch(dict(zip(
+                        names, (o.cols[c] for c in o.column_names))))
+            return
+        # DISTINCT union stays a pipeline breaker (dedup needs the full set)
+        aligned = [
+            VectorBatch(dict(zip(names, (o.cols[c] for c in o.column_names))))
+            for i in node.inputs for o in self.stream(i)
+        ]
         out = VectorBatch.concat(aligned)
-        if not node.all:
-            codes, first = _group_codes(out, names)
-            out = out.take(np.sort(first))
-        return out
+        codes, first = _group_codes(out, names)
+        yield from self._emit(out.take(np.sort(first)))
 
-    def _exec_limit(self, node: P.Limit) -> VectorBatch:
-        b = self.execute(node.input)
-        return b.slice(0, node.n)
+    def _stream_limit(self, node: P.Limit):
+        remaining = int(node.n)
+        gen = self.stream(node.input)
+        first = True
+        for b in gen:
+            take = b if b.num_rows <= remaining else b.slice(0, remaining)
+            remaining -= take.num_rows
+            if first or take.num_rows:
+                yield take
+            first = False
+            if remaining <= 0:
+                # early-out: stop pulling upstream morsels.  Abandoned
+                # upstream streams skip their ctx.record() on purpose — a
+                # partial row count would poison §4.2 reoptimization stats
+                gen.close()
+                return
 
-    def _exec_sort(self, node: P.Sort) -> VectorBatch:
-        b = self.execute(node.input)
-        return b.sort_by([k for k, _ in node.keys], [d for _, d in node.keys])
+    def _stream_sort(self, node: P.Sort):
+        # pipeline breaker: accumulate morsels, sort once, stream the output
+        b = self._collect(node.input)
+        yield from self._emit(
+            b.sort_by([k for k, _ in node.keys], [d for _, d in node.keys])
+        )
 
     # ---- join ----------------------------------------------------------------
-    def _exec_join(self, node: P.Join) -> VectorBatch:
-        lb = self.execute(node.left)
-        rb = self.execute(node.right)
-        if node.strategy == "broadcast":
-            limit = self.ctx.config.get("mapjoin_max_rows", 10_000_000)
-            if rb.num_rows > limit:
+    def _stream_join(self, node: P.Join):
+        # build side: the pipeline breaker.  Chunks accumulate incrementally
+        # and broadcast builds fail fast the moment they exceed the budget,
+        # instead of after materializing the whole side.
+        limit = (self.ctx.config.get("mapjoin_max_rows", 10_000_000)
+                 if node.strategy == "broadcast" else None)
+        build_chunks, build_rows = [], 0
+        for rb_chunk in self.stream(node.right):
+            build_rows += rb_chunk.num_rows
+            if limit is not None and build_rows > limit:
                 raise MemoryPressureError(
-                    f"broadcast build side {rb.num_rows} rows exceeds {limit}"
+                    f"broadcast build side {build_rows} rows exceeds {limit}"
                 )
+            build_chunks.append(rb_chunk)
+        rb = VectorBatch.concat(build_chunks)
+
         if node.kind == "cross":
-            li = np.repeat(np.arange(lb.num_rows), rb.num_rows)
-            ri = np.tile(np.arange(rb.num_rows), lb.num_rows)
-            out = _concat_sides(lb.take(li), rb.take(ri))
-            if node.residual is not None and out.num_rows:
-                out = out.select(eval_expr(node.residual, out, self.ctx).astype(bool))
-            return out
+            for lb in self.stream(node.left):
+                li = np.repeat(np.arange(lb.num_rows), rb.num_rows)
+                ri = np.tile(np.arange(rb.num_rows), lb.num_rows)
+                out = _concat_sides(lb.take(li), rb.take(ri))
+                if node.residual is not None and out.num_rows:
+                    out = out.select(
+                        eval_expr(node.residual, out, self.ctx).astype(bool))
+                yield out
+            return
 
-        pairs = [
-            _factorize_pair(lb.cols[lk], rb.cols[rk])
-            for lk, rk in zip(node.left_keys, node.right_keys)
-        ]
-        lc, rc = _combine_codes(pairs)
+        # probe side streams: each morsel joins against the build dictionary
+        probe: Optional[_BuildTable] = None
+        rmatched = np.zeros(rb.num_rows, dtype=bool)
+        lproto: Optional[VectorBatch] = None
+        for lb in self.stream(node.left):
+            if probe is None:
+                lproto = lb
+                probe = _BuildTable(rb, node.right_keys, node.left_keys,
+                                    lb, self.ctx)
+            lc = probe.probe_codes(lb)
+            lo = np.searchsorted(probe.rc_sorted, lc, side="left")
+            hi = np.searchsorted(probe.rc_sorted, lc, side="right")
+            counts = np.where(lc < 0, 0, hi - lo)
 
-        order = np.argsort(rc, kind="stable")
-        rc_sorted = rc[order]
-        lo = np.searchsorted(rc_sorted, lc, side="left")
-        hi = np.searchsorted(rc_sorted, lc, side="right")
-        counts = hi - lo
+            if node.kind in ("semi", "anti"):
+                mask = counts > 0 if node.kind == "semi" else counts == 0
+                if node.residual is not None and node.kind == "semi":
+                    li, ri = _expand_matches(lo, counts, probe.order)
+                    joined = _concat_sides(lb.take(li), rb.take(ri))
+                    ok = eval_expr(node.residual, joined, self.ctx).astype(bool)
+                    good_left = np.unique(li[ok])
+                    mask = np.zeros(lb.num_rows, dtype=bool)
+                    mask[good_left] = True
+                yield lb.select(mask)
+                continue
 
-        if node.kind == "semi" or node.kind == "anti":
-            mask = counts > 0 if node.kind == "semi" else counts == 0
-            if node.residual is not None and node.kind == "semi":
-                li, ri = _expand_matches(lo, counts, order)
-                joined = _concat_sides(lb.take(li), rb.take(ri))
+            li, ri = _expand_matches(lo, counts, probe.order)
+            joined = _concat_sides(lb.take(li), rb.take(ri))
+            if node.residual is not None and joined.num_rows:
                 ok = eval_expr(node.residual, joined, self.ctx).astype(bool)
-                good_left = np.unique(li[ok])
-                mask = np.zeros(lb.num_rows, dtype=bool)
-                mask[good_left] = True
-            out = lb.select(mask)
-            return out
+                joined = joined.select(ok)
+                li, ri = li[ok], ri[ok]
 
-        li, ri = _expand_matches(lo, counts, order)
-        joined = _concat_sides(lb.take(li), rb.take(ri))
-        if node.residual is not None and joined.num_rows:
-            ok = eval_expr(node.residual, joined, self.ctx).astype(bool)
-            joined = joined.select(ok)
-            li = li[ok]
-
-        if node.kind == "inner":
-            return joined
-        if node.kind in ("left", "full"):
+            if node.kind == "inner":
+                yield joined
+                continue
+            if node.kind not in ("left", "full"):
+                raise ExecError(f"join kind {node.kind} unsupported")
             matched = np.zeros(lb.num_rows, dtype=bool)
             if len(li):
                 matched[li] = True
             unmatched = lb.select(~matched)
             null_right = _null_batch(rb, unmatched.num_rows)
-            left_part = VectorBatch.concat(
-                [joined, _concat_sides(unmatched, null_right)]
-            )
-            if node.kind == "left":
-                return left_part
-            rmatched = np.zeros(rb.num_rows, dtype=bool)
-            if len(ri):
-                ok_ri = ri if node.residual is None else ri  # residual applied above
-                rmatched[ok_ri] = True
+            yield VectorBatch.concat(
+                [joined, _concat_sides(unmatched, null_right)])
+            if node.kind == "full" and len(ri):
+                rmatched[ri] = True
+        if node.kind == "full":
             runmatched = rb.select(~rmatched)
-            null_left = _null_batch(lb, runmatched.num_rows)
-            return VectorBatch.concat([left_part, _concat_sides(null_left, runmatched)])
-        raise ExecError(f"join kind {node.kind} unsupported")
+            null_left = _null_batch(lproto, runmatched.num_rows)
+            yield _concat_sides(null_left, runmatched)
 
     # ---- aggregate -------------------------------------------------------------
-    def _exec_aggregate(self, node: P.Aggregate) -> VectorBatch:
-        b = self.execute(node.input)
+    def _stream_aggregate(self, node: P.Aggregate):
+        mergeable = node.grouping_sets is None and all(
+            s.fn in _FOLD_FN and not s.distinct for s in node.aggs
+        )
+        if not mergeable:
+            yield from self._emit(self._aggregate_materialized(node))
+            return
+        # incremental-merge: per-morsel partial aggregates fold into a
+        # running state (keys + partial columns), never one giant concat
+        keys = node.group_keys
+        state: Optional[VectorBatch] = None
+        pending: List[VectorBatch] = []
+        pending_rows = 0
+        first_chunk: Optional[VectorBatch] = None
+        for chunk in self.stream(node.input):
+            if first_chunk is None:
+                first_chunk = chunk
+            if chunk.num_rows == 0:
+                continue
+            part = self._aggregate_once(chunk, keys, node.aggs)
+            pending.append(part)
+            pending_rows += part.num_rows
+            # doubling schedule: merge once pending outgrows the running
+            # state, so high-cardinality groupings pay O(n log n) total
+            # merge work instead of re-folding the full state per morsel
+            threshold = max(state.num_rows if state is not None else 0,
+                            self.batch_rows, 4096)
+            if pending_rows >= threshold:
+                state = self._merge_partials(state, pending, keys, node.aggs)
+                pending, pending_rows = [], 0
+        if pending:
+            state = self._merge_partials(state, pending, keys, node.aggs)
+        if state is None:
+            # empty input: global aggregates still produce their single row
+            src = first_chunk if first_chunk is not None else VectorBatch({})
+            state = self._aggregate_once(src, keys, node.aggs)
+        yield from self._emit(state.project(node.output_names()))
+
+    def _merge_partials(self, state: Optional[VectorBatch],
+                        partials: List[VectorBatch], keys: List[str],
+                        aggs) -> VectorBatch:
+        parts = ([state] if state is not None else []) + partials
+        if len(parts) == 1:
+            return parts[0]
+        cat = VectorBatch.concat(parts)
+        codes, first = _group_codes(cat, keys)
+        ng = len(first) if keys else 1
+        out: Dict[str, np.ndarray] = {}
+        for k in keys:
+            out[k] = cat.cols[k][np.sort(first)]
+        order_of_first = np.argsort(first) if keys else np.array([0])
+        remap = np.empty(ng, dtype=np.int64)
+        remap[order_of_first] = np.arange(ng)
+        codes2 = remap[codes] if cat.num_rows else codes
+        for spec in aggs:
+            fold = P.AggSpec(_FOLD_FN[spec.fn], None, False, spec.out_name)
+            out[spec.out_name] = _agg_column(
+                fold, cat.cols[spec.out_name], codes2, ng)
+        return VectorBatch(out)
+
+    def _aggregate_materialized(self, node: P.Aggregate) -> VectorBatch:
+        """Non-mergeable shapes (DISTINCT aggregates, grouping sets) fall
+        back to materializing the input."""
+        b = self._collect(node.input)
         if node.grouping_sets is not None:
             parts = []
             for keyset in node.grouping_sets:
@@ -624,9 +890,11 @@ class Executor:
 
     def _kernel_agg(self, spec, vals: Optional[np.ndarray],
                     codes: np.ndarray, ng: int) -> Optional[np.ndarray]:
-        """Grouped SUM/COUNT via ``ctx.kernel('hash_group')``; None when the
+        """Grouped SUM/COUNT (``hash_group``) and MIN/MAX
+        (``hash_group_minmax``) via the kernel registry; None when the
         aggregate is not kernel-shaped (then the numpy path runs)."""
-        if spec.fn not in ("sum", "count") or spec.distinct or vals is None:
+        if spec.fn not in ("sum", "count", "min", "max") or spec.distinct \
+                or vals is None:
             return None
         if ng <= 0 or vals.dtype.kind not in "iufb":
             return None
@@ -641,6 +909,16 @@ class Executor:
         # whose skip semantics the kernel does not implement)
         if not np.array_equal(f32.astype(vals.dtype), vals):
             return None
+        if spec.fn in ("min", "max"):
+            fn = self.ctx.kernel("hash_group_minmax")
+            mins, maxs = fn(codes.astype(np.int32), f32, int(ng))
+            out = np.asarray(mins if spec.fn == "min" else maxs,
+                             dtype=np.float64)
+            counts = np.bincount(codes, minlength=ng)
+            out[counts == 0] = np.nan  # MIN/MAX over an empty group is NULL
+            if vals.dtype.kind in "iu" and not np.isnan(out).any():
+                return out.astype(np.int64)
+            return out
         if spec.fn == "sum" and vals.dtype.kind in "iu" and vals.size:
             # integer sums must stay exact: every partial sum is an integer
             # bounded by sum(|v|), so < 2^24 keeps float32 accumulation exact
@@ -658,12 +936,12 @@ class Executor:
         return sums
 
     # ---- window functions --------------------------------------------------------
-    def _exec_windowop(self, node: P.WindowOp) -> VectorBatch:
-        b = self.execute(node.input)
+    def _stream_windowop(self, node: P.WindowOp):
+        b = self._collect(node.input)  # window frames need the full input
         out = b
         for wf, name in node.funcs:
             out = out.with_column(name, _eval_window(wf, b, self.ctx))
-        return out
+        yield from self._emit(out)
 
 
 # ---------------------------------------------------------------------------

@@ -162,13 +162,21 @@ class LlapIO:
     def read_meta(self, path: str) -> FileMeta:
         return self.daemon.file_meta(path)
 
-    def read_file(
+    def read_file_chunks(
         self,
         path: str,
         columns: Optional[Sequence[str]] = None,
         sarg_preds: Sequence[SargPredicate] = (),
         runtime_blooms: Optional[Dict[str, BloomFilter]] = None,
-    ) -> Tuple[FileMeta, VectorBatch]:
+    ):
+        """Stream one decoded ``VectorBatch`` per surviving stripe.
+
+        The I/O elevator fans stripe loads out on the I/O pool and hands each
+        column batch to the operator pipeline as soon as it lands — the
+        consumer processes stripe N while stripes N+1.. are still loading,
+        instead of waiting for the whole file to decode."""
+        from ..acid import _bloom_masked
+
         # metadata first — in bulk, before any data I/O (paper §5.1)
         meta = self.daemon.file_meta(path)
         cols = list(columns) if columns is not None else meta.columns
@@ -180,31 +188,28 @@ class LlapIO:
                 continue
             wanted_stripes.append(si)
 
-        # I/O elevator: stripe loads fan out on the I/O pool; each column
-        # batch is ready for the operator pipeline as soon as it lands.
         def load(si: int) -> Dict[str, np.ndarray]:
             return {c: self.daemon._get_chunk(path, meta, si, c) for c in cols}
 
         futures = [self.daemon.io_pool.submit(load, si) for si in wanted_stripes]
-        parts: Dict[str, list] = {c: [] for c in cols}
         for fut in futures:
             stripe_cols = fut.result()
             self.daemon.counters["stripes_read"] += 1
-            mask = None
-            if runtime_blooms:
-                for col, bf in runtime_blooms.items():
-                    if col in stripe_cols:
-                        m = bf.might_contain(stripe_cols[col])
-                        mask = m if mask is None else (mask & m)
-            for c in cols:
-                v = stripe_cols[c]
-                parts[c].append(v[mask] if mask is not None else v)
-        out = {
-            c: (
-                np.concatenate(parts[c])
-                if parts[c]
-                else np.empty(0, dtype=meta.dtypes.get(c, "f8"))
-            )
-            for c in cols
-        }
-        return meta, VectorBatch(out)
+            yield _bloom_masked(stripe_cols, cols, runtime_blooms)
+
+    def read_file(
+        self,
+        path: str,
+        columns: Optional[Sequence[str]] = None,
+        sarg_preds: Sequence[SargPredicate] = (),
+        runtime_blooms: Optional[Dict[str, BloomFilter]] = None,
+    ) -> Tuple[FileMeta, VectorBatch]:
+        meta = self.daemon.file_meta(path)
+        cols = list(columns) if columns is not None else meta.columns
+        chunks = list(self.read_file_chunks(path, columns, sarg_preds,
+                                            runtime_blooms))
+        if chunks:
+            return meta, VectorBatch.concat(chunks)
+        return meta, VectorBatch({
+            c: np.empty(0, dtype=meta.dtypes.get(c, "f8")) for c in cols
+        })

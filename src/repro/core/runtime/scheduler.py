@@ -69,6 +69,7 @@ class ResultStream:
         self._active = False          # a consumer is (or will be) iterating
         self._started = False         # a producer reached its emit point
         self._detached = False        # consumer abandoned the iterator
+        self._live = False            # incremental emit() streaming is on
         self.batch_rows: Optional[int] = None  # consumer-requested page size
 
     # -------------------------------------------------------- consumer side
@@ -116,6 +117,36 @@ class ResultStream:
             rows = self.batch_rows or default_batch_rows
         for piece in self.iter_slices(batch, rows):
             self._put(piece, cancel_token)
+
+    def emit(self, batch: VectorBatch, default_batch_rows: int,
+             cancel_token: Optional[CancelToken] = None) -> None:
+        """Incrementally stream one engine morsel to a live consumer.
+
+        Called by the executing worker for every root-vertex chunk as the
+        DAG produces it, so the consumer sees first rows while upstream
+        vertices are still running.  The first call claims the stream (the
+        post-completion ``publish`` fallback then no-ops); when no consumer
+        attached before the first chunk, emits are dropped and the finished
+        handle replays the final result instead."""
+        with self._lock:
+            if not self._started:
+                self._started = True
+                self._live = self._active
+            if not self._live:
+                return
+            rows = self.batch_rows or default_batch_rows
+        for piece in self.iter_slices(batch, rows) if batch.num_rows else ():
+            self._put(piece, cancel_token)
+
+    def abort_live(self, error: BaseException) -> None:
+        """Fail a live consumer mid-stream (e.g. §4.2 re-execution after
+        chunks already streamed): the partial prefix must not be silently
+        passed off as a complete result."""
+        with self._lock:
+            if not self._live or self._detached:
+                return
+            self._live = False
+        self._flush_error(error)
 
     def close(self) -> None:
         """Terminate the stream (always called by the worker, success or
@@ -170,12 +201,15 @@ class QueryTask:
         self.stream = ResultStream()
         self.submitted_at = time.time()
         self.admitted_at: Optional[float] = None
+        self.wlm = None                        # set by QueryScheduler.submit
         self._cond = threading.Condition()
         self._state = QUEUED
         self.result = None                     # QueryResult on SUCCEEDED
         self.error: Optional[BaseException] = None
         self._progress: Dict[str, object] = {
             "pool": None, "vertices_total": 0, "vertices_done": 0,
+            "rows_spilled": 0, "bytes_spilled": 0, "spill": {},
+            "peak_buffered_rows": 0,
         }
 
     # ------------------------------------------------------------- state
@@ -234,15 +268,19 @@ class QueryTask:
             return True
 
     def poll(self) -> Dict[str, object]:
-        """Progress snapshot: state, pool, vertices done/total, queue wait."""
+        """Progress snapshot: state, pool, vertices done/total, queue wait,
+        per-vertex spill (rows/bytes) and per-pool admission queue depth."""
         with self._cond:
             out = dict(self._progress)
+            out["spill"] = {k: dict(v) for k, v in out["spill"].items()}
             out["state"] = self._state
             out["queue_wait_ms"] = (
                 round((self.admitted_at - self.submitted_at) * 1e3, 3)
                 if self.admitted_at is not None else None
             )
-            return out
+        if self.wlm is not None:
+            out["pool_queue_depth"] = self.wlm.queue_depths()
+        return out
 
     # ------------------------------------------------------------- execution
     def note_pool(self, pool: Optional[str]) -> None:
@@ -254,11 +292,25 @@ class QueryTask:
             self._progress["vertices_total"] = total
             self._progress["vertices_done"] = 0
 
-    def note_vertex_done(self) -> None:
+    def note_vertex_done(self, vid: Optional[str] = None,
+                         stats: Optional[Dict[str, int]] = None) -> None:
         with self._cond:
             self._progress["vertices_done"] = (
                 int(self._progress["vertices_done"]) + 1
             )
+            if stats and vid is not None:
+                self._progress["spill"][vid] = {
+                    "rows": int(stats.get("spilled_rows", 0)),
+                    "bytes": int(stats.get("spilled_bytes", 0)),
+                }
+                self._progress["rows_spilled"] = sum(
+                    v["rows"] for v in self._progress["spill"].values())
+                self._progress["bytes_spilled"] = sum(
+                    v["bytes"] for v in self._progress["spill"].values())
+                self._progress["peak_buffered_rows"] = max(
+                    int(self._progress["peak_buffered_rows"]),
+                    int(stats.get("peak_buffered_rows", 0)),
+                )
 
 
 class QueryScheduler:
@@ -285,6 +337,7 @@ class QueryScheduler:
             raise RuntimeError("scheduler is shut down")
         qid = f"q{next(self.wh._qid)}"
         task = QueryTask(qid, sql, stmt, params, dict(session.config))
+        task.wlm = self.wh.wlm
         with self._lock:
             self._tasks[qid] = task
         self._pool.submit(self._run, session, task)

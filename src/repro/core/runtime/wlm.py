@@ -18,8 +18,9 @@ from __future__ import annotations
 
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Deque, Dict, List, Optional
 
 from ..metastore import Metastore
 
@@ -105,6 +106,8 @@ class WorkloadManager:
         self._active: Optional[ResourcePlan] = None
         self._running: Dict[str, QuerySlot] = {}
         self._pool_load: Dict[str, int] = {}
+        # per-pool FIFO admission queues (fair queueing; see wait_admit)
+        self._waiting: Dict[str, Deque[object]] = {}
         plan_dict = hms.active_resource_plan()
         if plan_dict:
             self._active = ResourcePlan.from_dict(plan_dict)
@@ -228,31 +231,70 @@ class WorkloadManager:
     def wait_admit(self, query_id: str, user=None, application=None,
                    cancel_token=None, timeout: Optional[float] = None,
                    poll_interval: float = 0.05) -> Optional[QuerySlot]:
-        """Blocking admission: queue until the routed pool frees a slot.
+        """Blocking admission through per-pool FIFO queues.
 
+        Each routed pool keeps its own queue and only the queue *head* may
+        probe for capacity, so admission within a pool is arrival-ordered
+        instead of FIFO-by-wakeup (a late waiter can no longer race an
+        earlier one to a freed slot); the per-pool heads round-robin over
+        borrowable idle capacity via the shared condition variable.
         Re-probes whenever a running query releases capacity (and at
-        ``poll_interval`` so a tripped ``cancel_token`` is observed promptly).
-        Raises the token's error when cancelled/killed while queued, and
-        :class:`QueryKilledError` on ``timeout``.
+        ``poll_interval`` so a tripped ``cancel_token`` is observed
+        promptly).  Raises the token's error when cancelled/killed while
+        queued, and :class:`QueryKilledError` on ``timeout``.
         """
         deadline = (time.monotonic() + timeout) if timeout is not None else None
+        ticket = object()
         with self._capacity_freed:
-            while True:
-                if cancel_token is not None:
-                    cancel_token.check()
+            if cancel_token is not None:
+                cancel_token.check()
+            pool = self.route(user, application)
+            # fast path only when nobody is queued for the routed pool —
+            # otherwise a new arrival could race the queue head to a slot
+            # that was freed between the release and the head's wakeup
+            if not self._waiting.get(pool):
                 slot, saturated = self.try_admit(query_id, user, application,
                                                  cancel_token)
                 if not saturated:
                     return slot
-                wait = poll_interval
-                if deadline is not None:
-                    remaining = deadline - time.monotonic()
-                    if remaining <= 0:
-                        raise QueryKilledError(
-                            f"query {query_id} timed out waiting for admission"
-                        )
-                    wait = min(wait, remaining)
-                self._capacity_freed.wait(wait)
+            queue = self._waiting.setdefault(pool, deque())
+            queue.append(ticket)
+            try:
+                while True:
+                    if cancel_token is not None:
+                        cancel_token.check()
+                    if queue[0] is ticket:
+                        slot, saturated = self.try_admit(
+                            query_id, user, application, cancel_token)
+                        if not saturated:
+                            return slot
+                    wait = poll_interval
+                    if deadline is not None:
+                        remaining = deadline - time.monotonic()
+                        if remaining <= 0:
+                            raise QueryKilledError(
+                                f"query {query_id} timed out waiting for "
+                                f"admission"
+                            )
+                        wait = min(wait, remaining)
+                    self._capacity_freed.wait(wait)
+            finally:
+                try:
+                    queue.remove(ticket)
+                except ValueError:  # pragma: no cover - defensive
+                    pass
+                if not queue:
+                    self._waiting.pop(pool, None)
+                # the next-in-line head (if any) probes immediately
+                self._capacity_freed.notify_all()
+
+    def queue_depths(self) -> Dict[str, int]:
+        """Admission queue depth per pool (for ``QueryHandle.poll()``
+        diagnostics: which pools have unplaceable queries right now)."""
+        with self._lock:
+            out = {p: 0 for p in (self._active.pools if self._active else ())}
+            out.update({p: len(q) for p, q in self._waiting.items()})
+            return out
 
     def executors_for(self, slot: Optional[QuerySlot]) -> int:
         if slot is None or self._active is None:

@@ -84,6 +84,20 @@ DEFAULT_CONFIG = {
     "application": None,
     # async handles: rows per batch handed to QueryHandle.fetch_stream()
     "stream_batch_rows": 4096,
+    # pipelined execution + spill-aware exchanges (§5): operators stream
+    # `exchange.batch_rows`-row morsels; each DAG edge buffers at most
+    # `exchange.buffer_rows` rows / `exchange.buffer_bytes` bytes in memory
+    # and spills overflow chunks to a per-query scratch directory.  With
+    # `exchange.spill` off an overflowing edge raises MemoryPressureError,
+    # feeding §4.2 re-optimization (which re-executes with materialized
+    # exchanges); `exchange.pipeline` off restores the
+    # materialize-every-vertex baseline (also used under speculation).
+    "exchange.pipeline": True,
+    "exchange.batch_rows": 1024,
+    "exchange.buffer_rows": 65536,
+    "exchange.buffer_bytes": 64 << 20,
+    "exchange.spill": True,
+    "exchange.spill_dir": None,
     # debug/test instrumentation: sleep this long at each DAG vertex, to make
     # concurrency observable (admission queueing, cancel, streaming)
     "debug_vertex_delay_s": 0.0,

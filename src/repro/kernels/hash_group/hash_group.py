@@ -38,6 +38,59 @@ def _group_kernel(codes_ref, vals_ref, sums_ref, counts_ref, *, num_groups):
     counts_ref[...] += jnp.sum(onehot, axis=0)
 
 
+def _minmax_kernel(codes_ref, vals_ref, mins_ref, maxs_ref, *, num_groups):
+    ri = pl.program_id(0)
+
+    @pl.when(ri == 0)
+    def _init():
+        mins_ref[...] = jnp.full_like(mins_ref, jnp.inf)
+        maxs_ref[...] = jnp.full_like(maxs_ref, -jnp.inf)
+
+    codes = codes_ref[...]  # (R,) int32; -1 = masked/padding
+    vals = vals_ref[...].astype(jnp.float32)  # (R,)
+    onehot = (codes[:, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (codes.shape[0], num_groups), 1))
+    mins_ref[...] = jnp.minimum(
+        mins_ref[...], jnp.min(jnp.where(onehot, vals[:, None], jnp.inf), axis=0))
+    maxs_ref[...] = jnp.maximum(
+        maxs_ref[...], jnp.max(jnp.where(onehot, vals[:, None], -jnp.inf), axis=0))
+
+
+def hash_group_minmax_pallas(codes, values, num_groups: int,
+                             interpret: bool = True):
+    """Grouped MIN/MAX as masked one-hot reductions over row blocks.
+
+    codes: (N,) int32 in [0, num_groups); values: (N,) float.
+    Returns (mins (G,), maxs (G,)) float32; empty groups hold +/-inf (the
+    caller maps them to NULL via group counts).
+    """
+    n = codes.shape[0]
+    g = ((num_groups + 127) // 128) * 128  # lane-align the group domain
+    block = min(ROW_BLOCK, max(((n + 7) // 8) * 8, 8))
+    pad = (-n) % block
+    codes_p = jnp.pad(codes.astype(jnp.int32), (0, pad), constant_values=-1)
+    vals_p = jnp.pad(values.astype(jnp.float32), (0, pad))
+    grid = ((n + pad) // block,)
+    mins, maxs = pl.pallas_call(
+        functools.partial(_minmax_kernel, num_groups=g),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((g,), lambda i: (0,)),
+            pl.BlockSpec((g,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g,), jnp.float32),
+            jax.ShapeDtypeStruct((g,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(codes_p, vals_p)
+    return mins[:num_groups], maxs[:num_groups]
+
+
 def hash_group_pallas(codes, values, num_groups: int, interpret: bool = True):
     """codes: (N,) int32 in [0, num_groups); values: (N,) float.
 

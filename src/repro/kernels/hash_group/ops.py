@@ -6,8 +6,8 @@ import functools
 import jax
 
 from ..registry import on_tpu, register, resolve
-from .hash_group import hash_group_pallas
-from .ref import hash_group_ref
+from .hash_group import hash_group_minmax_pallas, hash_group_pallas
+from .ref import hash_group_minmax_ref, hash_group_ref
 
 
 @register("hash_group", "pallas")
@@ -20,5 +20,19 @@ def _hash_group_pallas(codes, values, num_groups: int):
 register("hash_group", "ref", hash_group_ref)
 
 
+@register("hash_group_minmax", "pallas")
+@functools.partial(jax.jit, static_argnames=("num_groups",))
+def _hash_group_minmax_pallas(codes, values, num_groups: int):
+    return hash_group_minmax_pallas(codes, values, num_groups,
+                                    interpret=not on_tpu())
+
+
+register("hash_group_minmax", "ref", hash_group_minmax_ref)
+
+
 def hash_group(codes, values, num_groups: int, engine: str = "auto"):
     return resolve("hash_group", engine)(codes, values, num_groups)
+
+
+def hash_group_minmax(codes, values, num_groups: int, engine: str = "auto"):
+    return resolve("hash_group_minmax", engine)(codes, values, num_groups)

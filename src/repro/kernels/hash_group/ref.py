@@ -12,3 +12,14 @@ def hash_group_ref(codes, values, num_groups: int):
     counts = jnp.zeros(num_groups, jnp.float32).at[
         jnp.where(valid, codes, 0)].add(valid.astype(jnp.float32))
     return sums, counts
+
+
+def hash_group_minmax_ref(codes, values, num_groups: int):
+    valid = codes >= 0
+    safe = jnp.where(valid, codes, 0)
+    v = values.astype(jnp.float32)
+    mins = jnp.full(num_groups, jnp.inf, jnp.float32).at[safe].min(
+        jnp.where(valid, v, jnp.inf))
+    maxs = jnp.full(num_groups, -jnp.inf, jnp.float32).at[safe].max(
+        jnp.where(valid, v, -jnp.inf))
+    return mins, maxs

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: join-key dictionary lookup (factorized hash-join probe).
+
+The streaming hash join dictionary-encodes the build side's key columns once
+(sorted uniques); every probe morsel then maps its key values into build
+codes.  The TPU-native re-think of that hash lookup is a *vectorized binary
+search*: the sorted dictionary is replicated into VMEM (join-key
+dictionaries are small — bounded by the build side's distinct keys) and each
+probe block runs ``ceil(log2(G))`` gather/compare steps on the VPU, the same
+direct-load idiom the bloom-probe kernel uses for its bitset words.
+
+Returns, per probe value, the dictionary position of an exact match or -1 —
+i.e. ``searchsorted`` + equality in one fused kernel.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 1024
+
+
+def _lookup_kernel(sorted_ref, probe_ref, out_ref, *, n_real, steps):
+    svals = sorted_ref[...]  # (G,) float32, padded with +inf
+    probe = probe_ref[...]   # (B,) float32
+    lo = jnp.zeros(probe.shape, jnp.int32)
+    hi = jnp.full(probe.shape, n_real, jnp.int32)
+    for _ in range(steps):  # static unrolled binary search
+        mid = (lo + hi) // 2
+        go_right = svals[mid] < probe
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(go_right, hi, mid)
+    # lo == leftmost insertion point; an exact hit sits right there
+    probe_at = svals[jnp.minimum(lo, n_real - 1)]
+    found = (lo < n_real) & (probe_at == probe)
+    out_ref[...] = jnp.where(found, lo, -1)
+
+
+def key_lookup_pallas(sorted_vals, probe, interpret: bool = True):
+    """sorted_vals: (G,) float32 ascending (no NaN); probe: (N,) float32.
+
+    Returns (N,) int32: index of the exact match in ``sorted_vals``, or -1.
+    """
+    g = sorted_vals.shape[0]
+    n = probe.shape[0]
+    if g == 0 or n == 0:
+        return jnp.full((n,), -1, dtype=jnp.int32)
+    gpad = ((g + 127) // 128) * 128  # lane-align the dictionary
+    svals_p = jnp.pad(sorted_vals.astype(jnp.float32), (0, gpad - g),
+                      constant_values=jnp.inf)
+    block = min(ROW_BLOCK, max(((n + 7) // 8) * 8, 8))
+    pad = (-n) % block
+    probe_p = jnp.pad(probe.astype(jnp.float32), (0, pad))
+    steps = max(1, math.ceil(math.log2(g + 1)))
+    out = pl.pallas_call(
+        functools.partial(_lookup_kernel, n_real=g, steps=steps),
+        grid=((n + pad) // block,),
+        in_specs=[
+            pl.BlockSpec((gpad,), lambda i: (0,)),  # whole dictionary
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n + pad,), jnp.int32),
+        interpret=interpret,
+    )(svals_p, probe_p)
+    return out[:n]

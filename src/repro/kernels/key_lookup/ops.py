@@ -1,0 +1,22 @@
+"""Public wrapper for the join-key lookup kernel (registry-dispatched)."""
+from __future__ import annotations
+
+import jax
+
+from ..registry import on_tpu, register, resolve
+from .key_lookup import key_lookup_pallas
+from .ref import key_lookup_ref
+
+
+@register("key_lookup", "pallas")
+@jax.jit
+def _key_lookup_pallas(sorted_vals, probe):
+    return key_lookup_pallas(sorted_vals, probe, interpret=not on_tpu())
+
+
+register("key_lookup", "ref", key_lookup_ref)
+
+
+def key_lookup(sorted_vals, probe, engine: str = "auto"):
+    """Map probe values to positions in a sorted dictionary (-1 = miss)."""
+    return resolve("key_lookup", engine)(sorted_vals, probe)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the join-key dictionary lookup."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def key_lookup_ref(sorted_vals, probe):
+    g = sorted_vals.shape[0]
+    if g == 0:
+        return jnp.full(probe.shape, -1, dtype=jnp.int32)
+    idx = jnp.searchsorted(sorted_vals, probe)
+    found = (idx < g) & (sorted_vals[jnp.minimum(idx, g - 1)] == probe)
+    return jnp.where(found, idx, -1).astype(jnp.int32)

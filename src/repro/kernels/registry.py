@@ -1,8 +1,9 @@
 """Engine registry: resolves ``pallas`` vs ``ref`` kernel backends.
 
 Every kernel package registers its implementations here under a stable
-kernel name (``filter_eval``, ``hash_group``, ``bloom_probe``, ``ssd_scan``,
-``flash_attention``).  Callers resolve a backend by name + engine selector:
+kernel name (``filter_eval``, ``hash_group``, ``hash_group_minmax``,
+``bloom_probe``, ``key_lookup``, ``ssd_scan``, ``flash_attention``).
+Callers resolve a backend by name + engine selector:
 
   * ``auto``   — the Pallas implementation (interpret mode off-TPU), i.e. the
                  historical default previously encoded as per-file
@@ -83,5 +84,5 @@ def _import_all() -> None:
     import importlib
 
     for pkg in ("filter_eval", "hash_group", "bloom", "ssd_scan",
-                "flash_attention"):
+                "flash_attention", "key_lookup"):
         importlib.import_module(f"repro.kernels.{pkg}.ops")

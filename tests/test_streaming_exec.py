@@ -1,0 +1,327 @@
+"""Batch-pipelined vectorized execution (PR 3).
+
+Covers: chunked-operator parity against the materialized baseline on
+randomized inputs, spill-and-replay correctness under a tiny exchange
+budget, first-batch-before-root-completion streaming, cancellation at
+operator batch boundaries (including under speculative execution), WLM
+per-pool FIFO admission, and pallas/ref engine parity for the newly
+dispatched kernels (bloom_probe, MIN/MAX hash_group, key_lookup).
+"""
+import time
+
+import numpy as np
+import pytest
+
+import repro.api as db
+from repro.core.runtime.cancel import QueryCancelledError
+from repro.core.runtime.exec import Executor, MemoryPressureError
+from repro.core.sql.parser import parse
+
+TINY = {"exchange.batch_rows": 64, "result_cache": False}
+
+
+def wait_for(cond, timeout=10.0, interval=0.01, what="condition"):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if cond():
+            return
+        time.sleep(interval)
+    raise AssertionError(f"timed out after {timeout}s waiting for {what}")
+
+
+def rounded(rows):
+    def norm(x):
+        if isinstance(x, float):
+            return "NULL" if np.isnan(x) else round(x, 6)
+        return x
+
+    return sorted(tuple(norm(x) for x in r) for r in rows)
+
+
+@pytest.fixture()
+def conn(tmp_path):
+    c = db.connect(str(tmp_path / "wh"))
+    cur = c.cursor()
+    cur.execute("CREATE TABLE fact (fk INT, grp INT, v DOUBLE, s STRING)")
+    cur.execute("CREATE TABLE dim (dk INT, cat STRING, weight DOUBLE)")
+    rng = np.random.default_rng(7)
+    fk = rng.integers(0, 40, 3000)
+    grp = rng.integers(0, 13, 3000)
+    v = rng.uniform(-50, 50, 3000)
+    rows = ", ".join(
+        f"({int(a)}, {int(g)}, {float(x):.4f}, 's{int(a) % 5}')"
+        for a, g, x in zip(fk, grp, v)
+    )
+    cur.execute(f"INSERT INTO fact VALUES {rows}")
+    rows = ", ".join(f"({i}, 'c{i % 4}', {i * 0.25})" for i in range(35))
+    cur.execute(f"INSERT INTO dim VALUES {rows}")
+    yield c
+    c.close()
+
+
+PARITY_QUERIES = [
+    "SELECT grp, COUNT(*) AS n, SUM(v) AS s, MIN(v) AS mn, MAX(v) AS mx,"
+    " AVG(v) AS av FROM fact GROUP BY grp ORDER BY grp",
+    "SELECT s, COUNT(DISTINCT grp) AS d FROM fact GROUP BY s ORDER BY s",
+    "SELECT fk, v FROM fact WHERE v > 10 ORDER BY v DESC LIMIT 17",
+    "SELECT cat, SUM(v) AS s, MIN(fk) AS mn FROM fact JOIN dim ON fk = dk"
+    " WHERE weight > 2 GROUP BY cat ORDER BY cat",
+    "SELECT d.cat, f.v FROM dim d LEFT JOIN fact f ON d.dk = f.fk"
+    " WHERE d.dk >= 38",
+    "SELECT fk FROM fact WHERE fk IN (SELECT dk FROM dim WHERE weight > 8)"
+    " ORDER BY fk LIMIT 25",
+    "SELECT grp AS g FROM fact WHERE v > 45 UNION ALL"
+    " SELECT dk AS g FROM dim WHERE weight > 8",
+    "SELECT grp AS g FROM fact UNION SELECT dk AS g FROM dim",
+    "SELECT COUNT(*), SUM(v), MIN(v), MAX(v) FROM fact WHERE v > 1000",
+    "SELECT grp, v, row_number() OVER (PARTITION BY grp ORDER BY v) AS rn"
+    " FROM fact WHERE v > 40",
+]
+
+
+def test_chunked_operator_parity_vs_materialized(conn):
+    """Tiny-morsel pipelined execution returns exactly what the
+    materialize-every-vertex baseline returns, query by query."""
+    wh = conn.warehouse
+    piped = db.connect(warehouse=wh, **TINY)
+    mat = db.connect(warehouse=wh, result_cache=False,
+                     **{"exchange.pipeline": False})
+    for sql in PARITY_QUERIES:
+        a = piped.execute(sql).fetchall()
+        b = mat.execute(sql).fetchall()
+        assert rounded(a) == rounded(b), sql
+    for c in (piped, mat):
+        c.close()
+
+
+def test_spill_and_replay_matches_unconstrained(conn):
+    """A constrained exchange budget completes via spill with results
+    identical to the unconstrained run, and poll() reports the spill."""
+    wh = conn.warehouse
+    sql = ("SELECT cat, v FROM fact JOIN dim ON fk = dk"
+           " ORDER BY v DESC LIMIT 50")
+    free = db.connect(warehouse=wh, **TINY)
+    tight = db.connect(warehouse=wh, **TINY,
+                       **{"exchange.buffer_rows": 128,
+                          "exchange.buffer_bytes": 1 << 14})
+    expect = free.execute(sql).fetchall()
+    h = tight.execute_async(sql)
+    got = h.result(60).fetchall()
+    assert rounded(got) == rounded(expect)
+    p = h.poll()
+    assert p["rows_spilled"] > 0
+    assert p["bytes_spilled"] > 0
+    assert any(v["rows"] > 0 for v in p["spill"].values())
+    for c in (free, tight):
+        c.close()
+
+
+def test_partitioned_scan_all_filtered_keeps_schema(conn):
+    """A chunked scan whose every stripe filters out still yields a
+    schema-carrying empty batch including partition columns."""
+    cur = conn.cursor()
+    cur.execute("CREATE TABLE pt (x INT, y DOUBLE) PARTITIONED BY (p INT)")
+    cur.execute("INSERT INTO pt VALUES (1, 1.0, 10), (2, 2.0, 20)")
+    c = db.connect(warehouse=conn.warehouse, **TINY)
+    assert c.execute("SELECT p, x FROM pt WHERE x > 999").fetchall() == []
+    assert c.execute("SELECT p, SUM(x) FROM pt WHERE x > 999"
+                     " GROUP BY p").fetchall() == []
+    c.close()
+
+
+def test_spill_off_overflow_recovers_via_reopt(conn):
+    """With reopt enabled, a spill-disabled exchange overflow re-executes on
+    materialized exchanges and still returns correct results."""
+    s = conn.warehouse.session(
+        result_cache=False,
+        **{"exchange.batch_rows": 64, "exchange.buffer_rows": 128,
+           "exchange.spill": False})
+    r = s.execute("SELECT cat, COUNT(*) FROM fact JOIN dim ON fk = dk"
+                  " GROUP BY cat ORDER BY cat")
+    assert r.info.get("reexecuted") is True
+    baseline = conn.execute("SELECT cat, COUNT(*) FROM fact JOIN dim"
+                            " ON fk = dk GROUP BY cat ORDER BY cat").fetchall()
+    assert rounded(r.rows) == rounded(baseline)
+
+
+def test_spill_disabled_raises_memory_pressure(conn):
+    s = conn.warehouse.session(
+        result_cache=False, reopt_mode="off",
+        **{"exchange.batch_rows": 64, "exchange.buffer_rows": 128,
+           "exchange.spill": False})
+    with pytest.raises(MemoryPressureError):
+        s.execute("SELECT cat, v FROM fact JOIN dim ON fk = dk ORDER BY v")
+
+
+def test_fetch_stream_first_batch_before_root_finishes(conn):
+    """SSB-style scan-filter-project: the first streamed batch arrives while
+    the root (and only) vertex is still producing morsels."""
+    wh = conn.warehouse
+    c = db.connect(warehouse=wh, **TINY)
+    h = c.execute_async("SELECT fk, v * 2 FROM fact WHERE v > -100")
+    polls, batches = [], []
+    for batch in h.fetch_stream(batch_rows=64):
+        if not batches:
+            polls.append(h.poll())
+        batches.append(batch)
+    # backpressure (queue of 2 pages, 64 rows each) guarantees the producer
+    # was still mid-vertex when the consumer pulled the first page
+    assert polls[0]["vertices_done"] < max(polls[0]["vertices_total"], 1)
+    assert polls[0]["state"] == "RUNNING"
+    assert len(batches) > 10
+    assert sum(len(b) for b in batches) == 3000
+    c.close()
+
+
+def test_cancel_observed_at_batch_boundaries(conn):
+    """A tripped token stops an operator loop at the next morsel instead of
+    draining the stream (ROADMAP: speculated-clone cancel latency)."""
+    from repro.core.runtime.cancel import CancelToken
+
+    wh = conn.warehouse
+    s = wh.session(result_cache=False, **{"exchange.batch_rows": 64})
+    plan, _ = s._plan_query(parse("SELECT fk, v FROM fact WHERE v > -100"))
+    token = CancelToken()
+    ctx = s._make_ctx(dict(s.config), cancel_token=token)
+    gen = Executor(ctx).stream(plan)
+    first = next(gen)
+    assert first.num_rows > 0
+    token.cancel("test cancel mid-stream")
+    with pytest.raises(QueryCancelledError):
+        next(gen)
+
+
+def test_cancel_mid_vertex_under_speculation(conn):
+    """Speculative mode runs the barrier scheduler, but operator loops still
+    poll the token every morsel: cancelling mid-vertex (the speculated-clone
+    regression) terminates promptly."""
+    wh = conn.warehouse
+    calls = []
+
+    from repro.core.runtime.exec import _SCALAR_FUNCS
+
+    def slow_ident(args):
+        calls.append(1)
+        time.sleep(0.02)
+        return args[0]
+
+    _SCALAR_FUNCS["slow_ident_pr3"] = slow_ident
+    try:
+        c = db.connect(warehouse=wh, speculative_execution=True,
+                       result_cache=False, **{"exchange.batch_rows": 32})
+        h = c.execute_async("SELECT slow_ident_pr3(v) FROM fact")
+        wait_for(lambda: len(calls) >= 3, what="vertex mid-stream")
+        t0 = time.monotonic()
+        h.cancel()
+        wait_for(h.done, what="cancelled handle terminal")
+        assert time.monotonic() - t0 < 2.0  # ~one morsel, not 94 of them
+        assert h.state == "CANCELLED"
+        seen = len(calls)
+        time.sleep(0.1)
+        assert len(calls) <= seen + 2  # the loop stopped at a batch boundary
+        c.close()
+    finally:
+        _SCALAR_FUNCS.pop("slow_ident_pr3", None)
+
+
+# ---------------------------------------------------------------------------
+# WLM fair admission
+# ---------------------------------------------------------------------------
+def test_wlm_fifo_admission_and_queue_depth(conn):
+    cur = conn.cursor()
+    for ddl in [
+        "CREATE RESOURCE PLAN solo",
+        "CREATE POOL solo.only WITH alloc_fraction=1.0, query_parallelism=1",
+        "ALTER PLAN solo SET DEFAULT POOL = only",
+        "ALTER RESOURCE PLAN solo ENABLE ACTIVATE",
+    ]:
+        cur.execute(ddl)
+    slow = db.connect(warehouse=conn.warehouse, result_cache=False,
+                      debug_vertex_delay_s=0.25)
+    handles = [slow.execute_async("SELECT COUNT(*) FROM fact WHERE fk > ?",
+                                  (0,))]
+    wait_for(lambda: handles[0].state == "RUNNING", what="first running")
+    for i in range(1, 4):
+        depth_before = conn.warehouse.wlm.queue_depths().get("only", 0)
+        h = slow.execute_async("SELECT COUNT(*) FROM fact WHERE fk > ?", (i,))
+        # wait until this handle is measurably parked in its pool's queue,
+        # so arrival order into the per-pool FIFO is deterministic
+        wait_for(lambda: conn.warehouse.wlm.queue_depths().get("only", 0)
+                 > depth_before, what=f"handle {i} queued")
+        handles.append(h)
+    depths = [p.poll().get("pool_queue_depth", {}).get("only", 0)
+              for p in handles]
+    assert max(depths) >= 1  # queue depth surfaced through poll()
+    for h in handles:
+        h.result(60)
+    admitted = [h._task.admitted_at for h in handles]
+    assert admitted == sorted(admitted)  # per-pool FIFO, not FIFO-by-wakeup
+    slow.close()
+
+
+# ---------------------------------------------------------------------------
+# widened kernel dispatch: pallas/ref parity
+# ---------------------------------------------------------------------------
+def test_bloom_probe_engine_parity():
+    from repro.core.bloomfilter import BloomFilter
+    from repro.kernels.bloom.ops import probe_bloom_filter
+
+    rng = np.random.default_rng(3)
+    keys = rng.integers(0, 100_000, 4000)
+    bf = BloomFilter.for_expected(len(keys))
+    bf.add(keys)
+    queries = rng.integers(0, 200_000, 8192)
+    host = bf.might_contain(queries)
+    pallas = np.asarray(probe_bloom_filter(bf, queries, engine="pallas"))
+    ref = np.asarray(probe_bloom_filter(bf, queries, engine="ref"))
+    assert np.array_equal(pallas, ref)
+    assert np.array_equal(pallas, host)
+
+
+def test_minmax_kernel_engine_parity():
+    from repro.kernels.hash_group.ops import hash_group_minmax
+
+    rng = np.random.default_rng(5)
+    codes = rng.integers(0, 200, 10_000).astype(np.int32)
+    vals = rng.integers(-1000, 1000, 10_000).astype(np.float32)
+    out = {}
+    for eng in ("pallas", "ref"):
+        mins, maxs = hash_group_minmax(codes, vals, 200, engine=eng)
+        out[eng] = (np.asarray(mins), np.asarray(maxs))
+    assert np.array_equal(out["pallas"][0], out["ref"][0])
+    assert np.array_equal(out["pallas"][1], out["ref"][1])
+    for g in (0, 17, 199):
+        sel = vals[codes == g]
+        assert out["ref"][0][g] == sel.min()
+        assert out["ref"][1][g] == sel.max()
+
+
+def test_key_lookup_engine_parity():
+    from repro.kernels.key_lookup.ops import key_lookup
+
+    rng = np.random.default_rng(11)
+    uniq = np.unique(rng.integers(0, 3000, 900)).astype(np.float32)
+    probe = rng.integers(-50, 3500, 5000).astype(np.float32)
+    got = {eng: np.asarray(key_lookup(uniq, probe, engine=eng))
+           for eng in ("pallas", "ref")}
+    assert np.array_equal(got["pallas"], got["ref"])
+    hit = got["ref"] >= 0
+    assert np.array_equal(uniq[got["ref"][hit]], probe[hit])
+    assert not np.isin(probe[~hit], uniq).any()
+
+
+def test_engine_parity_full_query_path(conn):
+    """bloom_probe (semijoin reducers), MIN/MAX + SUM/COUNT (hash_group*),
+    key_lookup (join probes), filter_eval: one SSB-shaped query, all
+    engines, identical rows."""
+    wh = conn.warehouse
+    sql = ("SELECT cat, COUNT(*) AS n, SUM(fk) AS s, MIN(fk) AS mn,"
+           " MAX(fk) AS mx FROM fact JOIN dim ON fk = dk"
+           " WHERE weight > 6 AND fk >= 0 GROUP BY cat ORDER BY cat")
+    results = {}
+    for eng in ("auto", "pallas", "ref"):
+        c = db.connect(warehouse=wh, engine=eng, **TINY)
+        results[eng] = c.execute(sql).fetchall()
+        c.close()
+    assert results["auto"] == results["pallas"] == results["ref"]
+    assert len(results["auto"]) > 0
