@@ -12,9 +12,13 @@ Prints ``name,us_per_call,derived`` CSV rows plus per-section summaries.
   bench_pr3              : pipelined streaming vs materialized baseline
                            (wall, time-to-first-batch, peak buffered rows,
                            spill counts) -> BENCH_PR3.json
+  bench_pr4              : federated scans through the capability-negotiated
+                           DataSource API (wall + time-to-first-batch,
+                           pushdown on/off, split parallelism)
+                           -> BENCH_PR4.json
 
-``python -m benchmarks.run pr3 [--scale N] [--out PATH]`` runs only the
-PR 3 streaming benchmark (the CI smoke invocation).
+``python -m benchmarks.run pr3|pr4 [--scale N] [--out PATH]`` runs only
+that PR's benchmark (the CI smoke invocations).
 """
 from __future__ import annotations
 
@@ -365,6 +369,98 @@ def bench_pr3(scale=60_000, out_path=None):
     return report
 
 
+def bench_pr4(scale=60_000, out_path=None):
+    """Federated-scan trajectory (PR 4): wall time and time-to-first-batch
+    for split-parallel streaming scans over a memtable catalog and an
+    aggregate query over the jdbc connector, with capability-negotiated
+    pushdown on vs off.  Writes BENCH_PR4.json.
+    """
+    import repro.api as db
+    from repro.core.runtime.vector import VectorBatch
+    from repro.core.session import Warehouse
+
+    rng = np.random.default_rng(0)
+    wh = Warehouse(tempfile.mkdtemp(prefix="bench_pr4_"))
+    boot = wh.session()
+    boot.execute("CREATE CATALOG mem USING memtable"
+                 " WITH (latency_s = '0.0005', batch_rows = '1024')")
+    mem = wh.catalogs.get("mem").handler
+    mem.load("events", VectorBatch({
+        "uid": rng.integers(0, 5000, scale),
+        "amount": rng.uniform(0, 100, scale).round(4),
+        "region": np.array(["emea", "apac", "amer", "anz"])[
+            rng.integers(0, 4, scale)],
+    }))
+    jd = wh.handlers.get("jdbc")
+    jd.load_table("orders", VectorBatch({
+        "uid": rng.integers(0, 5000, scale),
+        "price": rng.uniform(0, 50, scale).round(4),
+    }))
+    boot.execute("CREATE EXTERNAL TABLE orders (uid INT, price DOUBLE)"
+                 " STORED BY 'jdbc' TBLPROPERTIES ('jdbc.table'='orders')")
+
+    queries = {
+        "mem_scan_filter": "SELECT uid, amount FROM mem.default.events"
+                           " WHERE amount < 75",
+        "mem_topn": "SELECT uid, amount FROM mem.default.events LIMIT 2048",
+        "jdbc_agg": "SELECT uid, SUM(price) sp FROM orders"
+                    " WHERE uid < 2500 GROUP BY uid",
+    }
+    pushdown_off = {
+        "federation.push_filters": False,
+        "federation.push_projection": False,
+        "federation.push_aggregate": False,
+        "federation.push_limit": False,
+    }
+    modes = {"pushdown_on": {}, "pushdown_off": pushdown_off}
+    report = {"scale_rows": scale,
+              "config": {"federation.splits": 4,
+                         "memtable_latency_s": 0.0005},
+              "queries": {}}
+    for name, sql in queries.items():
+        per_query = {}
+        for mode, overrides in modes.items():
+            conn = db.connect(warehouse=wh, result_cache=False, **overrides)
+            _pr3_measure(conn, sql)  # warm-up
+            runs = [_pr3_measure(conn, sql) for _ in range(2)]
+            best = min(runs, key=lambda r: r["wall_ms"])
+            h = conn.execute_async(sql)
+            h.result(600)
+            best["pushed"] = h.info.get("federated_pushdown")
+            per_query[mode] = best
+            conn.close()
+            emit(f"pr4.{name}.{mode}", best["wall_ms"] * 1e3,
+                 f"ttfb_ms={best['time_to_first_batch_ms']},"
+                 f"rows={best['rows']}")
+        assert per_query["pushdown_on"]["rows"] == \
+            per_query["pushdown_off"]["rows"], name
+        per_query["wall_speedup_pushdown"] = round(
+            per_query["pushdown_off"]["wall_ms"]
+            / max(per_query["pushdown_on"]["wall_ms"], 1e-3), 3)
+        per_query["ttfb_speedup_pushdown"] = round(
+            per_query["pushdown_off"]["time_to_first_batch_ms"]
+            / max(per_query["pushdown_on"]["time_to_first_batch_ms"],
+                  1e-3), 3)
+        report["queries"][name] = per_query
+    report["summary"] = {
+        "scan_ttfb_ms_pushdown_on": report["queries"]["mem_scan_filter"][
+            "pushdown_on"]["time_to_first_batch_ms"],
+        "scan_wall_speedup_pushdown": report["queries"]["mem_scan_filter"][
+            "wall_speedup_pushdown"],
+        "jdbc_agg_wall_speedup_pushdown": report["queries"]["jdbc_agg"][
+            "wall_speedup_pushdown"],
+        "peak_parallel_split_readers": mem.peak_active_readers,
+    }
+    out_path = out_path or os.path.join(os.path.dirname(__file__),
+                                        "BENCH_PR4.json")
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    emit("pr4.peak_parallel_split_readers", mem.peak_active_readers)
+    wh.close()
+    return report
+
+
 def roofline_summary():
     d = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
     if not os.path.isdir(d):
@@ -397,6 +493,7 @@ def main() -> None:
     sw = q88_shared_work()
     kernel_micro()
     bench_pr3()
+    bench_pr4()
     roofline_summary()
     print()
     print(f"# paper-claims summary: v3-vs-v1 speedup {v1v3:.2f}x (paper: 4.6x avg),"
@@ -410,14 +507,17 @@ if __name__ == "__main__":
 
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("section", nargs="?", default="all",
-                        choices=["all", "pr3"])
+                        choices=["all", "pr3", "pr4"])
     parser.add_argument("--scale", type=int, default=60_000,
-                        help="SSB lineorder rows (pr3 section)")
+                        help="row scale (pr3: SSB lineorder, pr4: external)")
     parser.add_argument("--out", default=None,
-                        help="BENCH_PR3.json output path (pr3 section)")
+                        help="BENCH_PRn.json output path (pr3/pr4 sections)")
     args = parser.parse_args()
     if args.section == "pr3":
         print("name,us_per_call,derived")
         bench_pr3(scale=args.scale, out_path=args.out)
+    elif args.section == "pr4":
+        print("name,us_per_call,derived")
+        bench_pr4(scale=args.scale, out_path=args.out)
     else:
         main()

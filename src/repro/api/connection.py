@@ -74,6 +74,19 @@ class Connection:
         self._check_open()
         return Cursor(self)
 
+    def catalogs(self) -> dict:
+        """Mounted federated catalogs: ``{name: connector}`` (paper §6).
+
+        Catalogs are created with ``CREATE CATALOG name USING connector
+        [WITH (...)]`` and queried with three-part names
+        (``catalog.schema.table``); schemas are discovered lazily from the
+        remote system.  Use ``conn.warehouse.catalogs.get(name)`` for the
+        full :class:`~repro.core.federation.catalog.Catalog` object
+        (``list_schemas()`` / ``list_tables()``)."""
+        self._check_open()
+        return {name: cat.connector
+                for name, cat in self._wh.catalogs.items()}
+
     def prepare(self, sql: str) -> PreparedStatement:
         """Parse + bind + optimize ``sql`` once; re-executions reuse the
         cached plan (see ``repro.core.pipeline.PlanCache``)."""

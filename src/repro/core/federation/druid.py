@@ -1,28 +1,30 @@
-"""Druid storage handler (paper §6.1-§6.2, Figures 6 & 8).
+"""Druid connector (paper §6.1-§6.2, Figures 6 & 8).
 
 An embedded columnar mini-OLAP store standing in for Apache Druid: data
 sources are time-partitioned columnar segments optimized for filtered
-groupBy/topN aggregations.  The handler supports:
+groupBy/topN aggregations.  The :class:`DruidScanBuilder` negotiates:
 
-  * registering existing data sources (schema inferred from Druid metadata),
-  * creating data sources from Hive (output format),
-  * Calcite-style computation pushdown: the optimizer matches
-    Scan->Filter?->Aggregate->Sort?->Limit? plan prefixes over Druid tables
-    and translates them into Druid JSON queries (groupBy / timeseries / scan
-    query types), which the input format executes split-parallel.
+  * filters -> Druid filter JSON, conjunct-by-conjunct (untranslatable
+    conjuncts stay local as a residual Filter);
+  * projection -> scan-query column list;
+  * aggregates -> groupBy / timeseries queries.  With multiple segments the
+    pushdown is **partial**: each segment split returns per-segment partial
+    aggregates and the warehouse's local Aggregate merges them (the paper's
+    "handlers may split pushed queries into parallel sub-queries");
+  * limit (+sort) -> ``limitSpec``, full only over a single split.
+
+Splits map to segments and stream morsels through the exchange layer.
 """
 from __future__ import annotations
 
-import json
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
 from ..metastore import TableDesc
-from ..optimizer import plan as P
-from ..runtime.vector import VectorBatch
+from ..runtime.vector import DEFAULT_BATCH_ROWS, VectorBatch
 from ..sql import ast as A
-from ..sql.binder import split_conjuncts
+from .datasource import FULL, NONE, PARTIAL, AggPush, ScanBuilder, Writer
 from .handler import StorageHandler
 
 
@@ -74,74 +76,160 @@ class DruidStore:
 
 class DruidHandler(StorageHandler):
     name = "druid"
-    supports_pushdown = True
 
     def __init__(self, store: Optional[DruidStore] = None):
         self.store = store or DruidStore()
 
-    # ---- input format ----------------------------------------------------------
-    def splits(self, table: TableDesc, pushed_query):
-        src = table.props.get("druid.datasource", table.name)
-        segs = self.store.datasources.get(src, [])
-        # queries with ordering/limit can't split blindly; aggregate queries
-        # split per-segment and merge (the paper notes handlers may split
-        # pushed queries into parallel sub-queries)
-        if pushed_query and pushed_query.get("limitSpec"):
-            return [("all", None)]
-        return [("seg", i) for i in range(len(segs))] or [("all", None)]
+    @classmethod
+    def from_props(cls, props: Dict[str, str]) -> "DruidHandler":
+        return cls(DruidStore(int(props.get("segment_rows", 100_000))))
 
-    def read_split(self, table: TableDesc, split, pushed_query):
-        src = table.props.get("druid.datasource", table.name)
-        segs = self.store.datasources.get(src, [])
-        if split is None or split[0] == "all":
-            batch = VectorBatch.concat([s.batch for s in segs]) if segs else VectorBatch({})
-            return self._run_query(batch, pushed_query, final=True)
-        batch = segs[split[1]].batch
-        return self._run_query(batch, pushed_query, final=False)
+    # ---- scan path -------------------------------------------------------------
+    def scan_builder(self, table: TableDesc, config=None) -> "DruidScanBuilder":
+        return DruidScanBuilder(self, table, config)
 
-    def read(self, table: TableDesc, pushed_query: Optional[dict] = None) -> VectorBatch:
-        if pushed_query is not None:
-            self.store.queries_served.append(pushed_query)
-        parts = [
-            self.read_split(table, s, pushed_query)
-            for s in self.splits(table, pushed_query)
-        ]
-        out = VectorBatch.concat([p for p in parts if p.cols]) if parts else VectorBatch({})
-        # merge partial per-segment aggregates
-        if pushed_query and pushed_query.get("queryType") in ("groupBy", "timeseries") \
-           and len(parts) > 1:
-            out = _merge_partials(out, pushed_query)
-        if pushed_query and pushed_query.get("limitSpec"):
-            out = _apply_limitspec(out, pushed_query["limitSpec"])
-        return out
+    # ---- write path ------------------------------------------------------------
+    def writer(self, table: TableDesc) -> "DruidWriter":
+        return DruidWriter(self, table)
 
-    # ---- output format -----------------------------------------------------------
-    def write(self, table: TableDesc, batch: VectorBatch) -> None:
-        src = table.props.get("druid.datasource", table.name)
-        self.store.append(src, batch)
-
+    # ---- schema inference / catalog surface -------------------------------------
     def infer_schema(self, props: Dict[str, str]):
         src = props.get("druid.datasource")
         return self.store.schema(src) if src else None
 
-    # ---- pushdown translation (paper §6.2, Figure 6) ---------------------------------
-    def try_pushdown(self, plan: P.PlanNode, table: TableDesc) -> Optional[dict]:
-        return translate_to_druid(plan, table)
+    def list_tables(self, schema: str) -> List[str]:
+        return sorted(self.store.datasources)
 
-    # ---- execution of Druid JSON over a segment -----------------------------------------
-    def _run_query(self, batch: VectorBatch, q: Optional[dict], final: bool) -> VectorBatch:
-        if q is None:
+    def discover(self, schema: str, table: str):
+        return self.store.schema(table)
+
+    def table_props(self, schema: str, table: str) -> Dict[str, str]:
+        return {"druid.datasource": table}
+
+
+class DruidScanBuilder(ScanBuilder):
+    """Plan -> Druid JSON negotiation (paper §6.2, Figure 6)."""
+
+    def __init__(self, handler: DruidHandler, table: TableDesc, config=None):
+        super().__init__(handler, table, config)
+        self._dfilters: List[dict] = []
+        self._recorded = False
+
+    def _segments(self) -> List[DruidSegment]:
+        src = self.table.props.get("druid.datasource", self.table.name)
+        return self.handler.store.datasources.get(src, [])
+
+    # ---- negotiation ------------------------------------------------------
+    def push_filters(self, conjuncts: List[A.Expr]) -> List[A.Expr]:
+        residual = []
+        for c in conjuncts:
+            f = _one_filter(c)
+            if f is None:
+                residual.append(c)
+            else:
+                self.spec.filters.append(c)
+                self._dfilters.append(f)
+        return residual
+
+    def push_projection(self, columns: List[str]) -> bool:
+        self.spec.projection = list(columns)
+        return True
+
+    def push_aggregate(self, group_keys, aggs) -> str:
+        druid_aggs = []
+        for fn, arg, out in aggs:
+            if fn == "count" and arg is None:
+                druid_aggs.append({"type": "count", "name": out})
+                continue
+            ty = {"sum": "doubleSum", "min": "doubleMin", "max": "doubleMax",
+                  "count": "count"}.get(fn)
+            if ty is None or arg is None:
+                return NONE
+            druid_aggs.append({"type": ty, "name": out, "fieldName": arg})
+        mode = PARTIAL if len(self._segments()) > 1 else FULL
+        self.spec.agg = AggPush(list(group_keys), list(aggs), mode)
+        self._druid_aggs = druid_aggs
+        return mode
+
+    def push_limit(self, n: int, sort) -> str:
+        if self.spec.agg is not None and self.spec.agg.mode != FULL:
+            return NONE  # per-segment partial aggregates can't be top-n'd
+        if self.spec.agg is None and sort:
+            return NONE  # scan queries return segment order
+        mode = FULL if len(self.to_splits()) <= 1 or self.spec.agg is not None \
+            else PARTIAL
+        self.spec.limit = int(n)
+        self.spec.sort = list(sort)
+        self.spec.limit_mode = mode
+        return mode
+
+    # ---- the native query -------------------------------------------------
+    def native_query(self) -> dict:
+        spec = self.spec
+        src = self.table.props.get("druid.datasource", self.table.name)
+        q: dict = {"queryType": "scan", "dataSource": src, "granularity": "all"}
+        if self._dfilters:
+            q["filter"] = (self._dfilters[0] if len(self._dfilters) == 1
+                           else {"type": "and", "fields": list(self._dfilters)})
+        if spec.agg is not None:
+            q["queryType"] = "groupBy" if spec.agg.group_keys else "timeseries"
+            q["dimensions"] = list(spec.agg.group_keys)
+            q["aggregations"] = list(self._druid_aggs)
+        else:
+            q["columns"] = self.output_columns()
+        if spec.limit is not None:
+            names = self.output_columns()
+            q["limitSpec"] = {
+                "limit": spec.limit,
+                "columns": [
+                    {"dimension": names[pos],
+                     "direction": "descending" if d else "ascending"}
+                    for pos, d in spec.sort
+                ],
+            }
+        return q
+
+    # ---- execution --------------------------------------------------------
+    def to_splits(self) -> List[object]:
+        segs = self._segments()
+        if (self.spec.agg is not None and self.spec.agg.mode == FULL) or \
+                self.spec.limit_mode == FULL:
+            return [("all", None)]
+        return [("seg", i) for i in range(len(segs))] or [("all", None)]
+
+    def read_split(self, split) -> Iterator[VectorBatch]:
+        q = self.native_query()
+        if not self._recorded:
+            self.handler.store.queries_served.append(q)
+            self._recorded = True
+        segs = self._segments()
+        if split is None or split[0] == "all":
+            batch = (VectorBatch.concat([s.batch for s in segs])
+                     if segs else VectorBatch({}))
+        else:
+            batch = segs[split[1]].batch
+        out = self._run_query(batch, q)
+        if out.cols:
+            out = out.project(self.output_columns())
+        batch_rows = int(self.config.get("exchange.batch_rows",
+                                         DEFAULT_BATCH_ROWS) or DEFAULT_BATCH_ROWS)
+        if out.num_rows == 0:
+            yield out if out.cols else self.empty_batch()
+            return
+        yield from out.iter_chunks(batch_rows)
+
+    # ---- execution of Druid JSON over a segment ----------------------------
+    def _run_query(self, batch: VectorBatch, q: dict) -> VectorBatch:
+        if not batch.cols:
             return batch
         if q.get("filter"):
             mask = _eval_druid_filter(batch, q["filter"])
             batch = batch.select(mask)
         if q["queryType"] in ("groupBy", "timeseries"):
-            dims = q.get("dimensions", [])
             from ..optimizer.plan import AggSpec
-            from .handler import VectorBatch as _VB  # noqa
+            from ..runtime.exec import _agg_column, _group_codes
 
-            from ..runtime.exec import _group_codes, _agg_column
-
+            dims = q.get("dimensions", [])
             codes, first = _group_codes(batch, dims) if dims else (
                 np.zeros(batch.num_rows, dtype=np.int64),
                 np.array([0] if batch.num_rows else [], dtype=np.int64),
@@ -159,157 +247,43 @@ class DruidHandler(StorageHandler):
                       "count": "count", "doubleMin": "min", "doubleMax": "max",
                       "longMin": "min", "longMax": "max"}[agg["type"]]
                 arg = batch.cols.get(agg.get("fieldName")) if agg.get("fieldName") else None
-                spec = AggSpec(fn, A.Col("x") if arg is not None else None, False, agg["name"])
+                spec = AggSpec(fn, A.Col("x") if arg is not None else None,
+                               False, agg["name"])
                 out[agg["name"]] = _agg_column(spec, arg, codes, ng)
-            return VectorBatch(out)
-        if q["queryType"] == "scan":
+            result = VectorBatch(out)
+        elif q["queryType"] == "scan":
             cols = q.get("columns") or batch.column_names
-            return batch.project([c for c in cols if c in batch.cols])
-        raise ValueError(f"unsupported druid queryType {q['queryType']}")
+            result = batch.project([c for c in cols if c in batch.cols])
+        else:  # pragma: no cover - defensive
+            raise ValueError(f"unsupported druid queryType {q['queryType']}")
+        if q.get("limitSpec"):
+            result = _apply_limitspec(result, q["limitSpec"])
+        return result
+
+
+class DruidWriter(Writer):
+    def __init__(self, handler: DruidHandler, table: TableDesc):
+        self.handler = handler
+        self.table = table
+        self._pending: List[VectorBatch] = []
+
+    def write_batch(self, batch: VectorBatch) -> None:
+        if batch.num_rows:
+            self._pending.append(batch)
+
+    def commit(self) -> None:
+        if not self._pending:
+            return
+        src = self.table.props.get("druid.datasource", self.table.name)
+        self.handler.store.append(src, VectorBatch.concat(self._pending))
+        self._pending = []
 
 
 # ---------------------------------------------------------------------------
-# plan -> Druid JSON translation
+# filter translation + evaluation
 # ---------------------------------------------------------------------------
-def translate_to_druid(plan: P.PlanNode, table: TableDesc) -> Optional[dict]:
-    """Match Aggregate(Project?(Filter?(FederatedScan))) / Filter?(FederatedScan)
-    prefixes and emit Druid JSON.  Sort+Limit over the aggregate fold into
-    ``limitSpec`` (Figure 6)."""
-    node = plan
-    limit_spec = None
-    if isinstance(node, P.Limit):
-        limit = node.n
-        inner = node.input
-        columns = []
-        if isinstance(inner, P.Sort):
-            columns = [
-                {"dimension": k, "direction": "descending" if d else "ascending"}
-                for k, d in inner.keys
-            ]
-            inner = inner.input
-        limit_spec = {"limit": limit, "columns": columns}
-        node = inner
-
-    # the binder's final projection may sit between sort/limit and the
-    # aggregate: unwrap it, remembering the output renames (Figure 6 shape)
-    rename: Dict[str, str] = {}
-    if isinstance(node, P.Project) and not isinstance(node, P.FederatedScan):
-        if all(isinstance(e, A.Col) for e, _ in node.exprs) and any(
-            isinstance(c, P.Aggregate) for c in node.inputs
-        ):
-            rename = {n: e.qualified for e, n in node.exprs}
-            node = node.input
-    if limit_spec is not None and rename:
-        for col in limit_spec["columns"]:
-            col["dimension"] = rename.get(col["dimension"], col["dimension"])
-
-    agg_node = None
-    if isinstance(node, P.Aggregate) and not node.grouping_sets:
-        agg_node = node
-        node = node.input
-    proj_defs: Dict[str, A.Expr] = {}
-    if isinstance(node, P.Project):
-        ok = all(isinstance(e, A.Col) for e, _ in node.exprs)
-        if not ok:
-            return None
-        proj_defs = {n: e for e, n in node.exprs}
-        node = node.input
-    filt = None
-    if isinstance(node, P.Filter):
-        filt = node.predicate
-        node = node.input
-    if not isinstance(node, P.FederatedScan) or node.table.name != table.name:
-        return None
-    if node.pushed_query is not None:
-        return None
-
-    alias = node.alias
-    src = table.props.get("druid.datasource", table.name)
-
-    def raw(col_name: str) -> Optional[str]:
-        e = proj_defs.get(col_name, None)
-        if e is not None and isinstance(e, A.Col) and e.qualified != col_name:
-            return raw(e.qualified)
-        if col_name.startswith(alias + "."):
-            return col_name[len(alias) + 1:]
-        return col_name if "." not in col_name else None
-
-    dfilter = None
-    if filt is not None:
-        dfilter = _filter_to_druid(filt, raw)
-        if dfilter is None:
-            return None
-
-    q: dict = {"queryType": "scan", "dataSource": src, "granularity": "all"}
-    if dfilter is not None:
-        q["filter"] = dfilter
-
-    if agg_node is not None:
-        dims = []
-        for k in agg_node.group_keys:
-            r = raw(k)
-            if r is None:
-                return None
-            dims.append(r)
-        aggs = []
-        for spec in agg_node.aggs:
-            if spec.distinct:
-                return None
-            if spec.arg is None:
-                aggs.append({"type": "count", "name": spec.out_name})
-                continue
-            if not isinstance(spec.arg, A.Col):
-                return None
-            r = raw(spec.arg.qualified)
-            if r is None:
-                return None
-            ty = {"sum": "doubleSum", "min": "doubleMin", "max": "doubleMax",
-                  "count": "count"}.get(spec.fn)
-            if ty is None:
-                return None
-            aggs.append({"type": ty, "name": spec.out_name, "fieldName": r})
-        q["queryType"] = "groupBy" if dims else "timeseries"
-        q["dimensions"] = dims
-        q["aggregations"] = aggs
-        inner_names = list(agg_node.group_keys) + [a.out_name for a in agg_node.aggs]
-        if rename:  # surface the outer projection's output names
-            inv = {v: k for k, v in rename.items()}
-            q["outputNames"] = [inv.get(n, n) for n in inner_names]
-        else:
-            q["outputNames"] = inner_names
-        q["dimensionOutputs"] = dict(zip(dims, agg_node.group_keys))
-    else:
-        if limit_spec is not None:
-            return None  # plain scan+limit not worth pushing
-        out_names = plan.output_names()
-        cols = []
-        for n in out_names:
-            r = raw(n)
-            if r is None:
-                return None
-            cols.append(r)
-        q["columns"] = cols
-        q["outputNames"] = out_names
-
-    if limit_spec is not None:
-        # limitSpec column names refer to aggregate outputs
-        q["limitSpec"] = limit_spec
-    return q
-
-
-def _filter_to_druid(pred: A.Expr, raw) -> Optional[dict]:
-    fields = []
-    for c in split_conjuncts(pred):
-        f = _one_filter(c, raw)
-        if f is None:
-            return None
-        fields.append(f)
-    if len(fields) == 1:
-        return fields[0]
-    return {"type": "and", "fields": fields}
-
-
-def _one_filter(c: A.Expr, raw) -> Optional[dict]:
+def _one_filter(c: A.Expr) -> Optional[dict]:
+    """One raw-column conjunct -> Druid filter JSON; None if untranslatable."""
     if isinstance(c, A.BinOp) and c.op in ("=", "<", "<=", ">", ">=", "!="):
         col, lit, op = None, None, c.op
         if isinstance(c.left, A.Col) and isinstance(c.right, A.Lit):
@@ -317,11 +291,9 @@ def _one_filter(c: A.Expr, raw) -> Optional[dict]:
         elif isinstance(c.right, A.Col) and isinstance(c.left, A.Lit):
             flip = {"<": ">", "<=": ">=", ">": "<", ">=": "<=", "=": "=", "!=": "!="}
             col, lit, op = c.right, c.left.value, flip[c.op]
-        if col is None:
+        if col is None or col.table is not None:
             return None
-        dim = raw(col.qualified)
-        if dim is None:
-            return None
+        dim = col.name
         if op == "=":
             return {"type": "selector", "dimension": dim, "value": lit}
         if op == "!=":
@@ -334,18 +306,15 @@ def _one_filter(c: A.Expr, raw) -> Optional[dict]:
             bound["lower"] = lit
             bound["lowerStrict"] = op == ">"
         return bound
-    if isinstance(c, A.Between) and not c.negated and isinstance(c.expr, A.Col):
-        dim = raw(c.expr.qualified)
-        if dim is None or not isinstance(c.low, A.Lit) or not isinstance(c.high, A.Lit):
+    if isinstance(c, A.Between) and not c.negated and isinstance(c.expr, A.Col) \
+            and c.expr.table is None:
+        if not isinstance(c.low, A.Lit) or not isinstance(c.high, A.Lit):
             return None
-        return {"type": "bound", "dimension": dim, "ordering": "numeric",
+        return {"type": "bound", "dimension": c.expr.name, "ordering": "numeric",
                 "lower": c.low.value, "upper": c.high.value,
                 "lowerStrict": False, "upperStrict": False}
-    if isinstance(c, A.InList) and isinstance(c.expr, A.Col):
-        dim = raw(c.expr.qualified)
-        if dim is None:
-            return None
-        f = {"type": "in", "dimension": dim,
+    if isinstance(c, A.InList) and isinstance(c.expr, A.Col) and c.expr.table is None:
+        f = {"type": "in", "dimension": c.expr.name,
              "values": [v.value for v in c.values if isinstance(v, A.Lit)]}
         return {"type": "not", "field": f} if c.negated else f
     return None
@@ -380,33 +349,6 @@ def _eval_druid_filter(batch: VectorBatch, f: dict) -> np.ndarray:
             m &= (col < f["upper"]) if f.get("upperStrict") else (col <= f["upper"])
         return m
     raise ValueError(f"unknown druid filter {t}")
-
-
-def _merge_partials(out: VectorBatch, q: dict) -> VectorBatch:
-    from ..optimizer.plan import AggSpec
-    from ..runtime.exec import _agg_column, _group_codes
-
-    dims = q.get("dimensions", [])
-    codes, first = _group_codes(out, dims) if dims else (
-        np.zeros(out.num_rows, dtype=np.int64),
-        np.array([0] if out.num_rows else [], dtype=np.int64),
-    )
-    ng = len(first) if dims else 1
-    order_of_first = np.argsort(first) if dims else np.array([0])
-    remap = np.empty(max(ng, 1), dtype=np.int64)
-    remap[order_of_first] = np.arange(ng)
-    codes = remap[codes] if out.num_rows else codes
-    merged = {}
-    for d in dims:
-        merged[d] = out.cols[d][np.sort(first)]
-    for agg in q.get("aggregations", []):
-        # partials merge with SUM for sums/counts, MIN/MAX for min/max
-        fold = {"doubleSum": "sum", "floatSum": "sum", "longSum": "sum",
-                "count": "sum", "doubleMin": "min", "doubleMax": "max",
-                "longMin": "min", "longMax": "max"}[agg["type"]]
-        spec = AggSpec(fold, A.Col("x"), False, agg["name"])
-        merged[agg["name"]] = _agg_column(spec, out.cols[agg["name"]], codes, ng)
-    return VectorBatch(merged)
 
 
 def _apply_limitspec(out: VectorBatch, spec: dict) -> VectorBatch:

@@ -1,24 +1,28 @@
-"""Storage-handler interface (paper §6.1).
+"""Storage-handler / DataSource interface (paper §6.1, redesigned).
 
-A handler consists of (i) an *input format* — how to read (and split) data
-from the external engine, (ii) an *output format* — how to write to it,
-(iii) a *SerDe* translating between Hive's internal columnar representation
-and the engine's, and (iv) a *metastore hook* receiving notifications for
-transactions against HMS (table creation, row inserts, ...).
+A handler (connector) consists of (i) a *scan builder* — the
+capability-negotiated read path (filter/projection/aggregate/limit pushdown
+plus split-parallel streaming readers; see
+:mod:`repro.core.federation.datasource`), (ii) a *writer* — a batched
+``write_batch``/``commit`` output channel, (iii) a *SerDe* translating
+between the warehouse's columnar representation and the engine's rows, and
+(iv) a *metastore hook* receiving notifications for transactions against
+HMS (table creation, row inserts, ...).
 
-The minimum usable handler implements the input format + deserializer; a
-handler that supports Calcite-generated pushdown additionally accepts a
-``pushed_query`` (engine-native query object) in its input format and may
-split it into parallel sub-queries (paper §6.2).
+Handlers also expose a *catalog surface* (``list_schemas`` /
+``list_tables`` / ``discover``) so a whole external system can be mounted
+at once via ``CREATE CATALOG`` instead of table-by-table ``STORED BY``
+(which stays supported on the same API).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from ..metastore import TableDesc
 from ..runtime.vector import VectorBatch
+from .datasource import ScanBuilder, Writer
 
 
 class SerDe:
@@ -29,49 +33,69 @@ class SerDe:
         return [dict(zip(names, row)) for row in batch.to_rows()]
 
     def deserialize(self, rows: List[dict], dtypes: Optional[Dict[str, str]] = None) -> VectorBatch:
+        """Rows may have heterogeneous keys: columns are the *union* of the
+        keys across all rows (not just ``rows[0]``), with missing values
+        null-filled (NaN for numerics, empty string otherwise)."""
         if not rows:
             return VectorBatch({})
-        cols = {k: np.array([r[k] for r in rows]) for k in rows[0]}
+        keys: List[str] = []
+        seen = set()
+        for r in rows:
+            for k in r:
+                if k not in seen:
+                    seen.add(k)
+                    keys.append(k)
+        cols: Dict[str, np.ndarray] = {}
+        for k in keys:
+            vals = [r.get(k) for r in rows]
+            present = [v for v in vals if v is not None]
+            numeric = all(isinstance(v, (int, float, np.integer, np.floating))
+                          and not isinstance(v, bool) for v in present)
+            if numeric and present:
+                cols[k] = np.array(
+                    [float(v) if v is not None else np.nan for v in vals])
+            elif present:
+                cols[k] = np.array(["" if v is None else str(v) for v in vals])
+            else:  # all-null column: no type evidence, default numeric NULLs
+                cols[k] = np.full(len(vals), np.nan)
         return VectorBatch(cols)
 
 
 class StorageHandler:
-    """Base class; subclasses register under a handler name."""
+    """Base connector; subclasses register under a handler name."""
 
     name: str = "base"
     serde: SerDe = SerDe()
-    supports_pushdown: bool = False
+    default_schema: str = "default"
 
-    # ---- input format -------------------------------------------------------
-    def splits(self, table: TableDesc, pushed_query: Optional[dict]) -> List[object]:
-        """Work units for parallel reads; default: one split."""
-        return [None]
+    # ---- scan path (capability negotiation + split-parallel streams) -------
+    def scan_builder(self, table: TableDesc,
+                     config: Optional[dict] = None) -> ScanBuilder:
+        """A fresh negotiation context for one scan of ``table``."""
+        return ScanBuilder(self, table, config)
 
-    def read_split(self, table: TableDesc, split: object,
-                   pushed_query: Optional[dict]) -> VectorBatch:
-        raise NotImplementedError
-
-    def read(self, table: TableDesc, pushed_query: Optional[dict] = None) -> VectorBatch:
-        parts = [
-            self.read_split(table, s, pushed_query)
-            for s in self.splits(table, pushed_query)
-        ]
-        parts = [p for p in parts if p.num_rows or len(parts) == 1]
-        return VectorBatch.concat(parts) if parts else VectorBatch({})
-
-    # ---- output format -------------------------------------------------------
-    def write(self, table: TableDesc, batch: VectorBatch) -> None:
+    # ---- write path ----------------------------------------------------------
+    def writer(self, table: TableDesc) -> Writer:
         raise NotImplementedError(f"{self.name} handler is read-only")
 
     # ---- schema inference (CREATE EXTERNAL TABLE without column list) --------
     def infer_schema(self, props: Dict[str, str]) -> Optional[List[tuple]]:
         return None
 
-    # ---- pushdown (paper §6.2) -------------------------------------------------
-    def try_pushdown(self, plan, table: TableDesc) -> Optional[dict]:
-        """Translate a plan subtree rooted over this table's scan into an
-        engine-native query; None if unsupported."""
+    # ---- catalog surface (CREATE CATALOG ... USING <name>) -------------------
+    def list_schemas(self) -> List[str]:
+        return [self.default_schema]
+
+    def list_tables(self, schema: str) -> List[str]:
+        return []
+
+    def discover(self, schema: str, table: str) -> Optional[List[Tuple[str, str]]]:
+        """Remote schema of ``schema.table``; None when it does not exist."""
         return None
+
+    def table_props(self, schema: str, table: str) -> Dict[str, str]:
+        """Connector props identifying ``schema.table`` in a TableDesc."""
+        return {}
 
     # ---- metastore hook --------------------------------------------------------
     def metastore_hook(self):

@@ -1,32 +1,41 @@
-"""JDBC storage handler (paper §6.2 "multiple engines with JDBC support").
+"""JDBC connector (paper §6.2 "multiple engines with JDBC support").
 
 Calcite can generate SQL in many dialects; here the external RDBMS is an
-embedded sqlite3 database and the handler translates plan subtrees into SQL
-text pushed down over the "JDBC" connection.
+embedded sqlite3 database.  The :class:`JdbcScanBuilder` negotiates pushdown
+capability-by-capability — filters translate conjunct-by-conjunct into SQL
+(untranslatable ones stay local), projection narrows the SELECT list,
+aggregates/sort/limit fold into the generated statement — and plain scans
+split into ``rowid % N`` shards that stream morsels through a server-side
+cursor (``fetchmany``), so large remote tables never materialize in one
+batch.
 """
 from __future__ import annotations
 
 import sqlite3
 import threading
-from typing import Dict, List, Optional
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
 from ..metastore import TableDesc
-from ..optimizer import plan as P
-from ..runtime.vector import VectorBatch
+from ..runtime.vector import DEFAULT_BATCH_ROWS, VectorBatch
 from ..sql import ast as A
+from .datasource import FULL, NONE, ScanBuilder, Writer
 from .handler import StorageHandler
 
 
 class JdbcHandler(StorageHandler):
     name = "jdbc"
-    supports_pushdown = True
+    default_schema = "main"
 
     def __init__(self, db_path: str = ":memory:"):
         self.conn = sqlite3.connect(db_path, check_same_thread=False)
         self._lock = threading.Lock()
         self.queries_served: List[str] = []
+
+    @classmethod
+    def from_props(cls, props: Dict[str, str]) -> "JdbcHandler":
+        return cls(props.get("db", props.get("jdbc.db", ":memory:")))
 
     # ---- external-side table management (for tests/benchmarks) ----------------
     def load_table(self, name: str, batch: VectorBatch) -> None:
@@ -41,136 +50,180 @@ class JdbcHandler(StorageHandler):
                                   [tuple(_py(v) for v in r) for r in rows])
             self.conn.commit()
 
-    # ---- input format -----------------------------------------------------------
-    def read_split(self, table: TableDesc, split, pushed_query) -> VectorBatch:
-        remote = table.props.get("jdbc.table", table.name)
-        sql = pushed_query["sql"] if pushed_query else f'SELECT * FROM "{remote}"'
-        with self._lock:
-            cur = self.conn.execute(sql)
-            names = [d[0] for d in cur.description]
-            rows = cur.fetchall()
-        self.queries_served.append(sql)
-        if not rows:
-            return VectorBatch({n: np.empty(0) for n in names})
-        cols = {n: np.array([r[i] for r in rows]) for i, n in enumerate(names)}
-        return VectorBatch(cols)
+    # ---- scan path ------------------------------------------------------------
+    def scan_builder(self, table: TableDesc, config=None) -> "JdbcScanBuilder":
+        return JdbcScanBuilder(self, table, config)
 
-    def write(self, table: TableDesc, batch: VectorBatch) -> None:
-        remote = table.props.get("jdbc.table", table.name)
-        with self._lock:
-            existing = self.conn.execute(
-                "SELECT name FROM sqlite_master WHERE type='table' AND name=?",
-                (remote,),
-            ).fetchone()
-        if existing is None:
-            self.load_table(remote, batch)
-        else:
-            cols = batch.column_names
-            ph = ",".join("?" * len(cols))
-            with self._lock:
-                self.conn.executemany(
-                    f'INSERT INTO "{remote}" VALUES ({ph})',
-                    [tuple(_py(v) for v in r) for r in batch.to_rows()],
-                )
-                self.conn.commit()
+    # ---- write path -----------------------------------------------------------
+    def writer(self, table: TableDesc) -> "JdbcWriter":
+        return JdbcWriter(self, table)
 
+    # ---- schema inference / catalog surface -----------------------------------
     def infer_schema(self, props: Dict[str, str]):
         remote = props.get("jdbc.table")
-        if not remote:
-            return None
+        return self.discover(self.default_schema, remote) if remote else None
+
+    def list_tables(self, schema: str) -> List[str]:
         with self._lock:
-            rows = self.conn.execute(f'PRAGMA table_info("{remote}")').fetchall()
+            rows = self.conn.execute(
+                "SELECT name FROM sqlite_master WHERE type='table'"
+                " ORDER BY name").fetchall()
+        return [r[0] for r in rows]
+
+    def discover(self, schema: str, table: str):
+        with self._lock:
+            rows = self.conn.execute(f'PRAGMA table_info("{table}")').fetchall()
         if not rows:
             return None
         m = {"INTEGER": "BIGINT", "REAL": "DOUBLE", "TEXT": "STRING"}
         return [(r[1], m.get((r[2] or "TEXT").upper(), "STRING")) for r in rows]
 
-    # ---- SQL generation pushdown (paper §6.2 footnote 4) ---------------------------
-    def try_pushdown(self, plan: P.PlanNode, table: TableDesc) -> Optional[dict]:
-        node = plan
-        limit = None
-        order = []
-        if isinstance(node, P.Limit):
-            limit = node.n
-            node = node.input
-        if isinstance(node, P.Sort):
-            order = node.keys
-            node = node.input
-        agg = None
-        if isinstance(node, P.Aggregate) and not node.grouping_sets:
-            agg = node
-            node = node.input
-        projs = None
-        if isinstance(node, P.Project):
-            if not all(isinstance(e, A.Col) for e, _ in node.exprs):
-                return None
-            projs = node.exprs
-            node = node.input
-        filt = None
-        if isinstance(node, P.Filter):
-            filt = node.predicate
-            node = node.input
-        if not isinstance(node, P.FederatedScan) or node.table.name != table.name \
-           or node.pushed_query is not None:
-            return None
-        alias = node.alias
-        remote = table.props.get("jdbc.table", table.name)
+    def table_props(self, schema: str, table: str) -> Dict[str, str]:
+        return {"jdbc.table": table}
 
-        def raw(q: str) -> str:
-            if projs is not None:
-                for e, n in projs:
-                    if n == q and isinstance(e, A.Col) and e.qualified != q:
-                        return raw(e.qualified)
-            return q.split(".", 1)[1] if q.startswith(alias + ".") else q
 
-        out_names: List[str] = []
-        if agg is not None:
-            sel = []
-            for k in agg.group_keys:
-                sel.append(f'"{raw(k)}"')
-                out_names.append(k)
-            for s in agg.aggs:
-                if s.distinct:
-                    return None
-                arg = f'"{raw(s.arg.qualified)}"' if s.arg is not None else "*"
-                sel.append(f"{s.fn.upper()}({arg})")
-                out_names.append(s.out_name)
-            group = ", ".join(f'"{raw(k)}"' for k in agg.group_keys)
-            sql = f'SELECT {", ".join(sel)} FROM "{remote}"'
-            if filt is not None:
-                w = _expr_to_sql(filt, raw)
-                if w is None:
-                    return None
-                sql += f" WHERE {w}"
-            if group:
-                sql += f" GROUP BY {group}"
+class JdbcScanBuilder(ScanBuilder):
+    """SQL-generating negotiation (paper §6.2 footnote 4)."""
+
+    def __init__(self, handler: JdbcHandler, table: TableDesc, config=None):
+        super().__init__(handler, table, config)
+        self._where: List[str] = []
+
+    # ---- negotiation ------------------------------------------------------
+    def push_filters(self, conjuncts: List[A.Expr]) -> List[A.Expr]:
+        residual = []
+        for c in conjuncts:
+            sql = _expr_to_sql(c)
+            if sql is None:
+                residual.append(c)
+            else:
+                self.spec.filters.append(c)
+                self._where.append(sql)
+        return residual
+
+    def push_projection(self, columns: List[str]) -> bool:
+        self.spec.projection = list(columns)
+        return True
+
+    def push_aggregate(self, group_keys, aggs) -> str:
+        if any(fn not in ("sum", "count", "min", "max") for fn, _, _ in aggs):
+            return NONE
+        from .datasource import AggPush
+
+        self.spec.agg = AggPush(list(group_keys), list(aggs), FULL)
+        return FULL
+
+    def push_limit(self, n: int, sort) -> str:
+        self.spec.limit = int(n)
+        self.spec.limit_mode = FULL
+        self.spec.sort = list(sort)
+        return FULL
+
+    # ---- execution --------------------------------------------------------
+    def _remote(self) -> str:
+        return self.table.props.get("jdbc.table", self.table.name)
+
+    def _sql(self, split) -> str:
+        spec = self.spec
+        if spec.agg is not None:
+            sel = [f'"{k}"' for k in spec.agg.group_keys]
+            for fn, arg, _out in spec.agg.aggs:
+                sel.append(f"{fn.upper()}({_quote(arg) if arg else '*'})")
+            group = ", ".join(f'"{k}"' for k in spec.agg.group_keys)
         else:
-            cols = [n for n in (projs and [n for _, n in projs] or node.output_names())]
-            sel = ", ".join(f'"{raw(c)}"' for c in cols)
-            out_names = cols
-            sql = f'SELECT {sel} FROM "{remote}"'
-            if filt is not None:
-                w = _expr_to_sql(filt, raw)
-                if w is None:
-                    return None
-                sql += f" WHERE {w}"
-        if order:
-            try:
-                terms = []
-                for k, d in order:
-                    idx = out_names.index(k) + 1
-                    terms.append(f"{idx} {'DESC' if d else 'ASC'}")
-                sql += " ORDER BY " + ", ".join(terms)
-            except ValueError:
-                return None
-        if limit is not None:
-            sql += f" LIMIT {limit}"
-        return {"sql": sql, "outputNames": out_names}
+            sel = [f'"{c}"' for c in self.output_columns()]
+            group = ""
+        where = list(self._where)
+        if split is not None and split[0] == "mod":
+            _, i, n = split
+            where.append(f"(rowid % {n}) = {i}")
+        sql = f'SELECT {", ".join(sel)} FROM "{self._remote()}"'
+        if where:
+            sql += " WHERE " + " AND ".join(where)
+        if group:
+            sql += f" GROUP BY {group}"
+        if spec.sort:
+            sql += " ORDER BY " + ", ".join(
+                f"{pos + 1} {'DESC' if d else 'ASC'}" for pos, d in spec.sort)
+        if spec.limit is not None:
+            sql += f" LIMIT {spec.limit}"
+        return sql
+
+    def to_splits(self) -> List[object]:
+        spec = self.spec
+        if spec.agg is not None or spec.limit is not None:
+            return [("all",)]
+        n = max(int(self.config.get("federation.splits", 1) or 1), 1)
+        if n <= 1:
+            return [("all",)]
+        return [("mod", i, n) for i in range(n)]
+
+    def read_split(self, split) -> Iterator[VectorBatch]:
+        sql = self._sql(split)
+        self.handler.queries_served.append(sql)
+        batch_rows = int(self.config.get("exchange.batch_rows",
+                                         DEFAULT_BATCH_ROWS) or DEFAULT_BATCH_ROWS)
+        names = self.output_columns()
+        # hold the connection lock only around each fetch, never across a
+        # yield: concurrent split readers (and writers) interleave instead
+        # of serializing behind one suspended generator
+        with self.handler._lock:
+            cur = self.handler.conn.execute(sql)
+        while True:
+            with self.handler._lock:
+                rows = cur.fetchmany(batch_rows)
+            if not rows:
+                break
+            yield VectorBatch({
+                n: _column([r[i] for r in rows])
+                for i, n in enumerate(names)
+            })
 
 
-def _expr_to_sql(e: A.Expr, raw) -> Optional[str]:
+class JdbcWriter(Writer):
+    def __init__(self, handler: JdbcHandler, table: TableDesc):
+        self.handler = handler
+        self.table = table
+        self._created = False
+        self._pending: List[VectorBatch] = []
+
+    def write_batch(self, batch: VectorBatch) -> None:
+        if batch.num_rows == 0:
+            return
+        remote = self.table.props.get("jdbc.table", self.table.name)
+        h = self.handler
+        with h._lock:
+            if not self._created:
+                exists = h.conn.execute(
+                    "SELECT name FROM sqlite_master WHERE type='table'"
+                    " AND name=?", (remote,)).fetchone()
+                if exists is None:
+                    decls = ", ".join(
+                        f'"{c}" {_sqlite_type(batch.cols[c])}'
+                        for c in batch.column_names)
+                    h.conn.execute(f'CREATE TABLE "{remote}" ({decls})')
+                self._created = True
+            ph = ",".join("?" * len(batch.column_names))
+            h.conn.executemany(
+                f'INSERT INTO "{remote}" VALUES ({ph})',
+                [tuple(_py(v) for v in r) for r in batch.to_rows()],
+            )
+
+    def commit(self) -> None:
+        with self.handler._lock:
+            self.handler.conn.commit()
+
+    def abort(self) -> None:
+        """Roll back uncommitted batches so a failed multi-batch write
+        cannot be made durable by the next unrelated commit."""
+        with self.handler._lock:
+            self.handler.conn.rollback()
+
+
+def _expr_to_sql(e: A.Expr) -> Optional[str]:
+    """Raw-column expression -> sqlite SQL; None when untranslatable."""
     if isinstance(e, A.Col):
-        return f'"{raw(e.qualified)}"'
+        return f'"{e.name}"' if e.table is None else None
     if isinstance(e, A.Lit):
         if isinstance(e.value, str):
             return "'" + e.value.replace("'", "''") + "'"
@@ -180,7 +233,7 @@ def _expr_to_sql(e: A.Expr, raw) -> Optional[str]:
             return "1" if e.value else "0"
         return repr(e.value)
     if isinstance(e, A.BinOp):
-        l, r = _expr_to_sql(e.left, raw), _expr_to_sql(e.right, raw)
+        l, r = _expr_to_sql(e.left), _expr_to_sql(e.right)
         if l is None or r is None:
             return None
         op = {"AND": "AND", "OR": "OR", "=": "=", "!=": "<>", "LIKE": "LIKE"}.get(
@@ -188,24 +241,37 @@ def _expr_to_sql(e: A.Expr, raw) -> Optional[str]:
         )
         return f"({l} {op} {r})"
     if isinstance(e, A.UnOp):
-        v = _expr_to_sql(e.operand, raw)
+        v = _expr_to_sql(e.operand)
         return None if v is None else (f"(NOT {v})" if e.op == "NOT" else f"(-{v})")
     if isinstance(e, A.Between):
-        v = _expr_to_sql(e.expr, raw)
-        lo = _expr_to_sql(e.low, raw)
-        hi = _expr_to_sql(e.high, raw)
+        v = _expr_to_sql(e.expr)
+        lo = _expr_to_sql(e.low)
+        hi = _expr_to_sql(e.high)
         if None in (v, lo, hi):
             return None
         neg = "NOT " if e.negated else ""
         return f"({v} {neg}BETWEEN {lo} AND {hi})"
     if isinstance(e, A.InList):
-        v = _expr_to_sql(e.expr, raw)
-        vals = [_expr_to_sql(x, raw) for x in e.values]
+        v = _expr_to_sql(e.expr)
+        vals = [_expr_to_sql(x) for x in e.values]
         if v is None or None in vals:
             return None
         neg = "NOT " if e.negated else ""
         return f"({v} {neg}IN ({', '.join(vals)}))"
     return None
+
+
+def _column(vals: list) -> np.ndarray:
+    """SQL NULLs -> NaN (numeric) / "" (text), keeping dtypes non-object."""
+    if any(v is None for v in vals):
+        if all(v is None or isinstance(v, (int, float)) for v in vals):
+            return np.array([np.nan if v is None else float(v) for v in vals])
+        return np.array(["" if v is None else str(v) for v in vals])
+    return np.array(vals)
+
+
+def _quote(name: str) -> str:
+    return '"' + name.replace('"', '""') + '"'
 
 
 def _sqlite_type(arr: np.ndarray) -> str:

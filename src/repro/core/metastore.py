@@ -145,6 +145,8 @@ CREATE TABLE IF NOT EXISTS notifications(
 CREATE TABLE IF NOT EXISTS runtime_stats(
   query_fingerprint TEXT, op_id TEXT, est_rows REAL, actual_rows REAL,
   at REAL);
+CREATE TABLE IF NOT EXISTS catalogs(
+  name TEXT PRIMARY KEY, connector TEXT, props TEXT);
 """
 
 
@@ -266,6 +268,29 @@ class Metastore:
             (t.table_id,),
         )
         return [(tuple(json.loads(pv)), loc) for pv, loc in rows]
+
+    # ======================================================================
+    # Catalogs (paper §6: whole external systems mounted at once)
+    # ======================================================================
+    def create_catalog(self, name: str, connector: str,
+                       props: Optional[Dict[str, str]] = None) -> None:
+        if self._q1("SELECT COUNT(*) FROM catalogs WHERE name=?", (name,)):
+            raise ValueError(f"catalog {name!r} already exists")
+        self._exec(
+            "INSERT INTO catalogs(name, connector, props) VALUES (?,?,?)",
+            (name, connector, json.dumps(props or {})),
+        )
+        self._notify("CREATE_CATALOG", {"catalog": name, "connector": connector})
+
+    def drop_catalog(self, name: str) -> None:
+        self._exec("DELETE FROM catalogs WHERE name=?", (name,))
+        self._notify("DROP_CATALOG", {"catalog": name})
+
+    def list_catalogs(self) -> List[Tuple[str, str, Dict[str, str]]]:
+        return [
+            (n, c, json.loads(p)) for n, c, p in
+            self._q("SELECT name, connector, props FROM catalogs ORDER BY name")
+        ]
 
     # ======================================================================
     # Statistics (additive merge, §4.1)

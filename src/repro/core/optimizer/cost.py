@@ -81,7 +81,13 @@ class CostModel:
     # -- internals --------------------------------------------------------------
     def _table_stats(self, name: str):
         if name not in self._stats_cache:
-            self._stats_cache[name] = self.hms.get_stats(name)
+            try:
+                self._stats_cache[name] = self.hms.get_stats(name)
+            except KeyError:
+                # catalog-mounted external table: no HMS stats (§6)
+                from ..stats import TableStats
+
+                self._stats_cache[name] = TableStats()
         return self._stats_cache[name]
 
     def _estimate(self, node: P.PlanNode) -> Estimate:

@@ -100,18 +100,26 @@ class Scan(PlanNode):
 
 
 class FederatedScan(PlanNode):
-    """Scan against a storage handler, optionally with pushed computation
-    (paper §6.2): ``pushed_query`` is the handler-native query (e.g. Druid
-    JSON); ``pushed_plan_key`` keeps optimizer identity."""
+    """Scan against an external DataSource (paper §6.2, redesigned).
+
+    ``spec`` is the capability-negotiated
+    :class:`~repro.core.federation.datasource.ScanSpec` — the filters /
+    projection / (partial) aggregate / limit the connector agreed to absorb;
+    whatever it declined stays above this node as ordinary plan operators,
+    so ``EXPLAIN`` shows pushed-vs-residual directly.  ``split`` (set by
+    compile-time split expansion) pins the node to one of the connector's
+    parallel work units."""
 
     def __init__(self, table: TableDesc, alias: str, columns: List[str],
-                 pushed_query: Optional[dict] = None,
-                 output_cols: Optional[List[str]] = None):
+                 spec=None, output_cols: Optional[List[str]] = None,
+                 split=None, total_splits: Optional[int] = None):
         self.table = table
         self.alias = alias
         self.columns = columns
-        self.pushed_query = pushed_query
+        self.spec = spec
         self._output_cols = output_cols
+        self.split = split
+        self.total_splits = total_splits
         self.inputs = []
 
     def output_names(self) -> List[str]:
@@ -119,15 +127,32 @@ class FederatedScan(PlanNode):
             return list(self._output_cols)
         return [f"{self.alias}.{c}" for c in self.columns]
 
-    def key(self) -> str:
-        import json
+    @property
+    def pushed_filter(self) -> Optional[A.Expr]:
+        """Conjunction of pushed raw-column filters (cost estimation)."""
+        if self.spec is None or not self.spec.filters:
+            return None
+        out = self.spec.filters[0]
+        for c in self.spec.filters[1:]:
+            out = A.BinOp("AND", out, c)
+        return out
 
-        pq = json.dumps(self.pushed_query, sort_keys=True) if self.pushed_query else ""
-        return f"fedscan({self.table.name} as {self.alias},{pq})"
+    def key(self) -> str:
+        sp = self.spec.key() if self.spec is not None else ""
+        split = f",split={self.split!r}" if self.split is not None else ""
+        return f"fedscan({self.table.name} as {self.alias},{sp}{split})"
 
     def describe(self) -> str:
+        extra = []
+        if self.spec is not None:
+            pushed = self.spec.summary()
+            if pushed:
+                extra.append("pushed=" + ",".join(
+                    f"{k}:{v}" for k, v in pushed.items()))
+        if self.split is not None and self.total_splits:
+            extra.append(f"split={self.split!r}/{self.total_splits}")
         return f"FederatedScan[{self.table.name} via {self.table.handler}]" + (
-            f" pushed={self.pushed_query.get('queryType')}" if self.pushed_query else ""
+            " (" + " ".join(extra) + ")" if extra else ""
         )
 
 

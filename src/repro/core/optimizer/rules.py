@@ -312,6 +312,14 @@ class Optimizer:
                     rf.producer, set(rf.producer.output_names()))
             return node
         if isinstance(node, P.FederatedScan):
+            # narrow the logical column set; whether the narrowing reaches
+            # the remote system is decided later by push_projection during
+            # the capability negotiation
+            if node.spec is None and node._output_cols is None:
+                needed = [c for c in node.columns
+                          if f"{node.alias}.{c}" in required]
+                if needed:
+                    node.columns = needed
             return node
         if isinstance(node, P.Project):
             node.exprs = [(e, n) for e, n in node.exprs if n in required] or \

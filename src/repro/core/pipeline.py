@@ -48,6 +48,8 @@ _PLANNING_KEYS = (
     "cbo", "pushdown", "prune_columns", "join_reorder",
     "transitive_inference", "partition_pruning", "broadcast_threshold_rows",
     "mv_rewriting", "semijoin_reduction",
+    "federation.push_filters", "federation.push_projection",
+    "federation.push_aggregate", "federation.push_limit",
 )
 
 
@@ -67,13 +69,19 @@ class PlanCacheEntry:
 
 def table_state(hms, tables) -> Dict[str, Tuple]:
     """Per-table (hwm, invalid WriteIds): the transactional identity used to
-    validate both the result cache and the plan cache."""
+    validate both the result cache and the plan cache.  Tables the metastore
+    does not know (catalog-mounted external tables, §6) have no WriteId
+    state and map to a constant — the warehouse cannot observe remote
+    changes, so they neither validate nor invalidate an entry."""
     snap = hms.get_snapshot()
-    return {
-        t: (wl.hwm, wl.invalid)
-        for t in tables
-        for wl in [hms.writeid_list(t, snap)]
-    }
+    out: Dict[str, Tuple] = {}
+    for t in tables:
+        try:
+            wl = hms.writeid_list(t, snap)
+            out[t] = (wl.hwm, wl.invalid)
+        except KeyError:
+            out[t] = (0, frozenset())
+    return out
 
 
 def table_row_counts(hms, tables) -> Dict[str, float]:
@@ -262,7 +270,7 @@ class BindStage(Stage):
             q.info.update(entry.info)  # mv_used / semijoin_reducers / ...
             q.info["plan_cache_hit"] = True
             return
-        q.plan = Binder(s.hms).bind(q.stmt)
+        q.plan = Binder(s.hms, catalogs=getattr(s.wh, "catalogs", None)).bind(q.stmt)
         q.bound_key = q.plan.key()
         q.tables = [sc.table.name for sc in P.walk_plan(q.plan)
                     if isinstance(sc, (P.Scan, P.FederatedScan))]
@@ -281,8 +289,17 @@ class CacheProbeStage(Stage):
         # must never be handed from the cache
         q.result_key = q.bound_key + f"|mv={bool(cfg['mv_rewriting'])}" + (
             f"|params={q.params!r}" if q.params else "")
+        # catalog-mounted external tables have no WriteId identity, so the
+        # warehouse cannot detect remote changes: never cache their results
+        # (detected from the plan — no extra metastore roundtrips)
+        uses_catalog = any(
+            isinstance(n, P.FederatedScan)
+            and (n.table.handler or "").startswith("catalog:")
+            for n in P.walk_plan(q.plan)
+        )
         q.cacheable = bool(
             cfg["result_cache"] and is_cacheable(q.stmt) and q.tables
+            and not uses_catalog
         )
         if not q.cacheable:
             return
@@ -337,11 +354,9 @@ class OptimizeStage(Stage):
             added = insert_semijoin_reducers(q.plan, opt.cost_model,
                                              SemijoinConfig(enabled=True))
             q.info["semijoin_reducers"] = added
-        pushed = s._push_federated(q.plan)
+        q.plan, pushed = s._push_federated(q.plan, cfg)
         if pushed:
             q.info["federated_pushdown"] = pushed
-            q.plan = pushed.get("__plan__", q.plan)
-            pushed.pop("__plan__", None)
         if q.plan_cache_key is not None:
             planning_info = {k: q.info[k] for k in
                              ("mv_used", "mv_mode", "semijoin_reducers",
@@ -366,6 +381,9 @@ class CompileStage(Stage):
     def run(self, q: QueryContext) -> None:
         s, cfg = q.session, q.config
         ctx = s._make_ctx(cfg, params=q.params, cancel_token=q.cancel_token)
+        # fan federated scans out over their connectors' splits (compile
+        # time so cached plans re-enumerate fresh splits per execution)
+        q.plan = s._expand_federated(q.plan, cfg)
         if cfg["shared_work"]:
             ctx.shared_keys = find_shared_subplans(q.plan)
             q.info["shared_subplans"] = len(ctx.shared_keys)
@@ -484,7 +502,7 @@ class ExecuteStage(Stage):
                                cancel_token=q.cancel_token)
             if cfg2["shared_work"]:
                 ctx2.shared_keys = find_shared_subplans(plan2)
-            dag2 = compile_dag(plan2)
+            dag2 = compile_dag(s._expand_federated(plan2, cfg2))
             if q.task is not None:
                 q.task.note_vertices_total(len(dag2.vertices))
             return DAGScheduler(

@@ -92,7 +92,10 @@ class TaskDAG:
         return counts
 
 
-_BLOCKING = (P.Join, P.Aggregate, P.Sort, P.Union, P.WindowOp)
+# FederatedScan counts as a vertex boundary so compile-time split expansion
+# (UNION ALL of per-split scans) fans external reads out across concurrently
+# scheduled vertices — splits stream through exchanges in parallel.
+_BLOCKING = (P.Join, P.Aggregate, P.Sort, P.Union, P.WindowOp, P.FederatedScan)
 
 
 def compile_dag(plan: P.PlanNode) -> TaskDAG:
@@ -256,6 +259,16 @@ class DAGScheduler:
         exchanges: Dict[str, Exchange] = {
             vid: Exchange(vid, excfg) for vid in dag.vertices
         }
+        # refcount readers per edge: a single-consumer FORWARD edge frees
+        # chunks (and unlinks spill files) as they are consumed instead of
+        # retaining them until query end; multi-consumer edges (shared-work
+        # reuse) and the root (replayed by read_all) keep full retention
+        readers: Dict[str, int] = {vid: 0 for vid in dag.vertices}
+        for v in dag.vertices.values():
+            for mn in _walk_materialized(v.plan):
+                readers[mn.tag] += 1
+        for vid, ex in exchanges.items():
+            ex.retain = readers[vid] != 1 or vid == dag.root
         lock = threading.Lock()
         errors: List[BaseException] = []
 

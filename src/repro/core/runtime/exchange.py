@@ -113,12 +113,18 @@ class Exchange:
         self._mem_rows = 0
         self._mem_bytes = 0
         self._spill_seq = 0
+        # multi-consumer edges replay the full chunk sequence, so chunks are
+        # retained until query teardown; the DAG scheduler flips this off
+        # for single-consumer FORWARD edges, which then free each chunk
+        # (memory and spill file) the moment its one reader consumes it
+        self.retain = True
         # metrics surfaced through DAGScheduler -> QueryHandle.poll()
         self.total_rows = 0
         self.spilled_rows = 0
         self.spilled_bytes = 0
         self.spilled_chunks = 0
         self.peak_buffered_rows = 0
+        self.freed_chunks = 0
 
     # ------------------------------------------------------------ producer
     def put(self, batch: VectorBatch) -> None:
@@ -173,7 +179,12 @@ class Exchange:
 
     # ------------------------------------------------------------ consumers
     def reader(self) -> Iterator[VectorBatch]:
-        """A fresh pass over the full chunk sequence (blocking iterator)."""
+        """A pass over the full chunk sequence (blocking iterator).
+
+        With ``retain`` off (single-consumer edges) each slot is released
+        as soon as it is handed to the reader: buffered memory is returned
+        to the budget and spill files are unlinked after loading.
+        """
         i = 0
         while True:
             with self._cond:
@@ -181,6 +192,17 @@ class Exchange:
                     self._cond.wait(0.05)
                 if i < len(self._slots):
                     slot = self._slots[i]
+                    if slot is None:
+                        raise RuntimeError(
+                            f"exchange {self.tag}: chunk {i} already freed "
+                            f"(single-consumer edge read twice)"
+                        )
+                    if not self.retain:
+                        self._slots[i] = None
+                        self.freed_chunks += 1
+                        if isinstance(slot, _MemSlot):
+                            self._mem_rows -= slot.batch.num_rows
+                            self._mem_bytes -= batch_nbytes(slot.batch)
                 elif self._error is not None:
                     raise self._error
                 else:
@@ -189,7 +211,13 @@ class Exchange:
             if isinstance(slot, _MemSlot):
                 yield slot.batch
             else:
-                yield _load_chunk(slot.path)
+                batch = _load_chunk(slot.path)
+                if not self.retain:
+                    try:
+                        os.unlink(slot.path)
+                    except OSError:  # pragma: no cover - already gone
+                        pass
+                yield batch
 
     def read_all(self) -> VectorBatch:
         chunks = list(self.reader())
@@ -204,6 +232,7 @@ class Exchange:
                 "spilled_bytes": self.spilled_bytes,
                 "spilled_chunks": self.spilled_chunks,
                 "peak_buffered_rows": self.peak_buffered_rows,
+                "freed_chunks": self.freed_chunks,
             }
 
     def discard(self) -> None:

@@ -613,16 +613,45 @@ class Executor:
         return res
 
     def _stream_federatedscan(self, node: P.FederatedScan):
+        """Split-parallel streaming reads through the DataSource API.
+
+        The connector's :class:`ScanBuilder` is rebuilt from the negotiated
+        spec; each split's reader is a generator yielding morsels, so
+        external rows stream through the exchange layer (and observe the
+        cancel token at every batch boundary) like native scans.  Compile-
+        time split expansion pins one split per vertex; an unexpanded node
+        (synchronous helpers, MV maintenance) drains every split inline.
+        """
+        from ..federation.datasource import apply_spec
+
         handler = self.ctx.handlers.get(node.table.handler)
         if handler is None:
             raise ExecError(f"no storage handler registered: {node.table.handler}")
-        batch = handler.read(node.table, node.pushed_query)
-        if node.pushed_query:
-            # handler output columns are already the pushed query's outputs
-            mapping = dict(zip(batch.column_names, node.output_names()))
-        else:
-            mapping = {c: f"{node.alias}.{c}" for c in batch.column_names}
-        yield from self._emit(batch.rename(mapping))
+        builder = handler.scan_builder(node.table, self.ctx.config)
+        apply_spec(builder, node.spec)
+        splits = [node.split] if node.split is not None \
+            else (builder.to_splits() or [None])
+        out_names = node.output_names()
+        yielded = False
+        for split in splits:
+            for batch in builder.read_split(split):
+                if node.spec is not None:
+                    # connector outputs follow the spec's column order
+                    b = batch.rename(dict(zip(batch.column_names, out_names)))
+                else:
+                    b = batch.rename(
+                        {c: f"{node.alias}.{c}" for c in batch.column_names})
+                if b.num_rows == 0:
+                    if not yielded:
+                        yield b
+                        yielded = True
+                    continue
+                for chunk in b.iter_chunks(self.batch_rows):
+                    yield chunk
+                    yielded = True
+        if not yielded:
+            empty = builder.empty_batch()
+            yield empty.rename(dict(zip(empty.column_names, out_names)))
 
     # ---- relational ops ------------------------------------------------------
     def _stream_filter(self, node: P.Filter):

@@ -108,6 +108,10 @@ class WorkloadManager:
         self._pool_load: Dict[str, int] = {}
         # per-pool FIFO admission queues (fair queueing; see wait_admit)
         self._waiting: Dict[str, Deque[object]] = {}
+        # round-robin rotation among pool heads contending for borrowed
+        # idle capacity: the pool that borrowed last yields to the next
+        # contending pool in cyclic (sorted-name) order
+        self._borrow_last: Optional[str] = None
         plan_dict = hms.active_resource_plan()
         if plan_dict:
             self._active = ResourcePlan.from_dict(plan_dict)
@@ -213,11 +217,18 @@ class WorkloadManager:
                 return None, False
             slot = QuerySlot(query_id, pool, cancel_token=cancel_token)
             if self._pool_load.get(pool, 0) >= plan.pools[pool].query_parallelism:
-                # pool saturated: borrow idle capacity from another pool (§5.2)
+                # pool saturated: borrow idle capacity from another pool
+                # (§5.2).  When several pools' queue heads contend for the
+                # same idle capacity, grants rotate round-robin across the
+                # contending pools instead of going to whichever head woke
+                # first.
+                if not self._borrow_turn(pool):
+                    return None, True
                 for other, pdef in plan.pools.items():
                     if other != pool and self._pool_load.get(other, 0) < pdef.query_parallelism:
                         slot.borrowed_from = other
                         pool_to_charge = other
+                        self._borrow_last = pool
                         break
                 else:
                     return None, True
@@ -227,6 +238,24 @@ class WorkloadManager:
             slot.metrics["charged_pool"] = pool_to_charge
             self._running[query_id] = slot
             return slot, False
+
+    def _borrow_turn(self, pool: str) -> bool:
+        """May ``pool``'s queue head borrow idle capacity right now?
+
+        With zero or one pool queueing there is no contention and any
+        borrower may proceed.  With several, the grant rotates cyclically
+        (sorted pool order) starting after the pool that borrowed last —
+        arrival at the shared condition variable no longer decides."""
+        contenders = sorted(p for p, q in self._waiting.items() if q)
+        if len(contenders) <= 1 or pool not in contenders:
+            return True
+        last = self._borrow_last
+        if last is None:
+            allowed = contenders[0]
+        else:
+            after = [p for p in contenders if p > last]
+            allowed = after[0] if after else contenders[0]
+        return pool == allowed
 
     def wait_admit(self, query_id: str, user=None, application=None,
                    cancel_token=None, timeout: Optional[float] = None,

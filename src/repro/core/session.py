@@ -30,9 +30,12 @@ import numpy as np
 from ..kernels.registry import VALID_ENGINES as _VALID_ENGINES
 from .acid import AcidTable, PlainIO
 from .compaction import CompactionConfig, compact_partition, maybe_compact
+from .federation.catalog import CatalogRegistry
+from .federation.datasource import expand_federated_splits, negotiate_federated
 from .federation.druid import DruidHandler
 from .federation.handler import HandlerRegistry
 from .federation.jdbc import JdbcHandler
+from .federation.memtable import MemTableHandler
 from .metastore import Metastore, TxnAborted, WriteConflict
 from .optimizer import plan as P
 from .optimizer.result_cache import QueryResultCache
@@ -98,6 +101,16 @@ DEFAULT_CONFIG = {
     "exchange.buffer_bytes": 64 << 20,
     "exchange.spill": True,
     "exchange.spill_dir": None,
+    # federation (§6): capability-negotiated pushdown gates — each kind can
+    # be toggled independently (the connector may still decline piecewise;
+    # whatever is not pushed stays as local Filter/Project/Aggregate/Limit
+    # residuals, shown by EXPLAIN) — and the split fan-out width for
+    # parallel external reads through the exchange layer
+    "federation.push_filters": True,
+    "federation.push_projection": True,
+    "federation.push_aggregate": True,
+    "federation.push_limit": True,
+    "federation.splits": 4,
     # debug/test instrumentation: sleep this long at each DAG vertex, to make
     # concurrency observable (admission queueing, cancel, streaming)
     "debug_vertex_delay_s": 0.0,
@@ -134,11 +147,26 @@ class Warehouse:
         self.handlers = HandlerRegistry()
         self.handlers.register(DruidHandler(), self.hms)
         self.handlers.register(JdbcHandler(), self.hms)
+        self.handlers.register(MemTableHandler(), self.hms)
+        # federated catalogs (§6): whole external systems mounted at once,
+        # re-instantiated from metastore persistence on reopen
+        self.catalogs = CatalogRegistry(self.hms)
         self.result_cache = QueryResultCache()
         self.plan_cache = PlanCache()
         self.wlm = WorkloadManager(self.hms, total_executors=llap_executors)
         self._qid = itertools.count()
         self.scheduler = QueryScheduler(self, max_workers=query_workers)
+
+    def resolve_handler(self, name: Optional[str]):
+        """Resolve a TableDesc.handler reference: either a globally
+        registered handler name or a mounted catalog's connector instance
+        (``catalog:<name>``)."""
+        if not name:
+            return None
+        if name.startswith("catalog:"):
+            cat = self.catalogs.get(name.split(":", 1)[1])
+            return cat.handler if cat is not None else None
+        return self.handlers.get(name)
 
     def session(self, **config) -> "Session":
         cfg = {**DEFAULT_CONFIG, **config}
@@ -199,7 +227,7 @@ class Session:
             stmt = stmt.stmt
         plan, info = self._plan_query(stmt)
         pretty = plan.pretty()  # before DAG compilation mutates the tree
-        dag = compile_dag(plan)
+        dag = compile_dag(self._expand_federated(plan))
         lines = [pretty, "", f"DAG edges: {dag.edge_summary()}"]
         for k, v in info.items():
             lines.append(f"{k}: {v}")
@@ -237,6 +265,15 @@ class Session:
         if params:
             # DML/DDL take the substitution path: placeholders become literals
             stmt = A.substitute_params(stmt, params)
+        if isinstance(stmt, A.CreateCatalog):
+            self.wh.catalogs.create(stmt.name, stmt.connector, stmt.props)
+            self.wh.plan_cache.invalidate_all()
+            return QueryResult(VectorBatch({}), {"catalog": stmt.name})
+        if isinstance(stmt, A.DropCatalog):
+            self.wh.catalogs.drop(stmt.name, if_exists=stmt.if_exists)
+            self.wh.plan_cache.invalidate_all()
+            self.wh.result_cache.invalidate_all()
+            return QueryResult(VectorBatch({}))
         if isinstance(stmt, A.CreateTable):
             return self._create_table(stmt)
         if isinstance(stmt, A.CreateMaterializedView):
@@ -294,7 +331,7 @@ class Session:
     def explain_stmt(self, stmt) -> str:
         plan, info = self._plan_query(stmt)
         pretty = plan.pretty()
-        dag = compile_dag(plan)
+        dag = compile_dag(self._expand_federated(plan))
         return pretty + f"\nDAG edges: {dag.edge_summary()}\ninfo: {info}"
 
     def _only_plan(self) -> str:
@@ -317,33 +354,20 @@ class Session:
                 if k not in ("stage_times_ms", "seconds")}
         return q.plan, info
 
-    def _push_federated(self, plan: P.PlanNode) -> Optional[dict]:
-        """Find FederatedScan nodes; ask handlers to absorb plan prefixes."""
-        out = {}
+    def _push_federated(self, plan: P.PlanNode,
+                        config: Optional[dict] = None):
+        """Capability-negotiated pushdown for every federated scan: returns
+        ``(new_plan, summary)``; declined work stays as local residual
+        operators (see ``core.federation.datasource``)."""
+        return negotiate_federated(plan, self.wh.resolve_handler,
+                                   config or self.config)
 
-        def try_at(node: P.PlanNode, parent: Optional[P.PlanNode], idx: int):
-            fed = _leaf_federated(node)
-            if fed is not None:
-                handler = self.wh.handlers.get(fed.table.handler)
-                if handler is not None and handler.supports_pushdown:
-                    q = handler.try_pushdown(node, fed.table)
-                    if q is not None:
-                        new_scan = P.FederatedScan(
-                            fed.table, fed.alias, fed.columns,
-                            pushed_query=q,
-                            output_cols=q.get("outputNames") or node.output_names(),
-                        )
-                        out[fed.table.name] = q.get("queryType") or "sql"
-                        if parent is None:
-                            out["__plan__"] = new_scan
-                        else:
-                            parent.inputs[idx] = new_scan
-                        return
-            for i, c in enumerate(node.inputs):
-                try_at(c, node, i)
-
-        try_at(plan, None, 0)
-        return out if out else None
+    def _expand_federated(self, plan: P.PlanNode,
+                          config: Optional[dict] = None) -> P.PlanNode:
+        """Fan federated scans out over their connectors' splits (one DAG
+        vertex per split; compile-time, never cached)."""
+        return expand_federated_splits(plan, self.wh.resolve_handler,
+                                       config or self.config)
 
     def _run_pipeline(self, stmt, sql_text: str = "", params: Tuple = (),
                       config: Optional[dict] = None, task=None,
@@ -404,7 +428,8 @@ class Session:
             self.hms.get_snapshot(),
             config=cfg,
             io=LlapIO(self.wh.llap) if cfg["llap"] else PlainIO(),
-            handlers=self.wh.handlers.as_dict(),
+            handlers={**self.wh.handlers.as_dict(),
+                      **self.wh.catalogs.handler_map()},
             params=params,
             cancel_token=cancel_token,
         )
@@ -470,14 +495,14 @@ class Session:
             is_mv=True, mv_sql=_mv_sql_of(stmt),
         )
         if handler_name:
-            self.wh.handlers.get(handler_name).write(desc, batch)
+            self._write_external(desc, batch)
         else:
             txn = self.hms.open_txn()
             AcidTable(desc, self.hms).insert(txn, batch)
             self.hms.commit_txn(txn)
 
         snap = self.hms.get_snapshot()
-        build = {t: self.hms.writeid_list(t, snap).hwm for t in source_tables}
+        build = {t: self._hwm_of(t, snap) for t in source_tables}
         window = float(stmt.props.get("staleness_window", 0) or 0)
         self.hms.register_mv(stmt.name, _mv_sql_of(stmt), source_tables, build,
                              staleness_window=window)
@@ -493,8 +518,13 @@ class Session:
         snap = self.hms.get_snapshot()
 
         # which sources changed, and did any change involve deletes?
+        # (catalog-mounted external sources have no WriteId state: remote
+        # changes are undetectable, so they never trigger an incremental
+        # path on their own — ALTER ... REBUILD still recomputes via "full")
         changed, has_deletes = [], False
         for t in mv["source_tables"]:
+            if not self.hms.table_exists(t):
+                continue
             wl = self.hms.writeid_list(t, snap)
             old = mv["build_snapshot"].get(t, 0)
             if wl.hwm != old:
@@ -531,11 +561,17 @@ class Session:
             delta = Executor(ctx).execute(plan)
             self._merge_mv_delta(desc, stmt, delta, plan.output_names())
 
-        build = {t: self.hms.writeid_list(t, snap).hwm for t in mv["source_tables"]}
+        build = {t: self._hwm_of(t, snap) for t in mv["source_tables"]}
         self.hms.update_mv_snapshot(name, build)
         self.wh.result_cache.invalidate_all()
         self.wh.plan_cache.invalidate_all()
         return QueryResult(VectorBatch({}), {"rebuild_mode": mode})
+
+    def _hwm_of(self, table: str, snap) -> int:
+        try:
+            return self.hms.writeid_list(table, snap).hwm
+        except KeyError:  # catalog-mounted external table: no WriteIds
+            return 0
 
     def _replace_mv_contents(self, desc, stmt) -> None:
         plan, _ = self._plan_query(stmt, config={**self.config,
@@ -623,6 +659,23 @@ class Session:
     # ==================================================================
     # DML (§3.2: single-statement transactions, update = delete + insert)
     # ==================================================================
+    def _write_external(self, desc, batch: VectorBatch) -> None:
+        """Batched write path: morsels stream through the connector's
+        :class:`~repro.core.federation.datasource.Writer` and become visible
+        atomically on ``commit`` (replaces the one-shot ``write``)."""
+        handler = self.wh.resolve_handler(desc.handler)
+        if handler is None:
+            raise ValueError(f"no storage handler registered: {desc.handler}")
+        writer = handler.writer(desc)
+        rows = int(self.config.get("exchange.batch_rows", 1024) or 1024)
+        try:
+            for chunk in batch.iter_chunks(rows):
+                writer.write_batch(chunk)
+            writer.commit()
+        except Exception:
+            writer.abort()
+            raise
+
     def _post_write(self, table: str) -> None:
         desc = self.hms.get_table(table)
         if not desc.handler and self.config["compaction_enabled"]:
@@ -653,7 +706,7 @@ class Session:
         batch = _coerce_schema(batch, desc)
 
         if desc.handler:
-            self.wh.handlers.get(desc.handler).write(desc, batch)
+            self._write_external(desc, batch)
             return QueryResult(VectorBatch({}), {"inserted": batch.num_rows})
         txn = self.hms.open_txn()
         try:
@@ -890,15 +943,6 @@ _is_cacheable = is_cacheable  # moved to repro.core.pipeline; alias kept
 
 def _has_subquery(e: A.Expr) -> bool:
     return any(isinstance(x, A.SubqueryExpr) for x in A.walk(e))
-
-
-def _leaf_federated(node: P.PlanNode) -> Optional[P.FederatedScan]:
-    n = node
-    while n.inputs:
-        if len(n.inputs) != 1:
-            return None
-        n = n.inputs[0]
-    return n if isinstance(n, P.FederatedScan) else None
 
 
 def _dml_scope(alias: str, cols: List[str]):

@@ -219,6 +219,8 @@ def contains_aggregate(expr: Expr) -> bool:
 class TableRef:
     name: str
     alias: Optional[str] = None
+    catalog: Optional[str] = None  # federated catalog qualifier (paper §6)
+    schema: Optional[str] = None   # schema within the catalog
 
 
 @dataclass
@@ -335,6 +337,20 @@ class DropTable:
     if_exists: bool = False
 
 
+# federated catalogs (paper §6): mount a whole external system at once
+@dataclass
+class CreateCatalog:
+    name: str
+    connector: str  # registered connector name (jdbc | druid | memtable | ...)
+    props: dict = field(default_factory=dict)
+
+
+@dataclass
+class DropCatalog:
+    name: str
+    if_exists: bool = False
+
+
 @dataclass
 class RebuildMaterializedView:
     name: str
@@ -396,7 +412,7 @@ Statement = Union[
     Select, SetOp, Insert, Update, Delete, Merge, CreateTable,
     CreateMaterializedView, DropTable, RebuildMaterializedView, Explain,
     CreateResourcePlan, CreatePool, CreateWMRule, AddWMRuleToPool,
-    CreateWMMapping, AlterResourcePlan,
+    CreateWMMapping, AlterResourcePlan, CreateCatalog, DropCatalog,
 ]
 
 

@@ -81,8 +81,9 @@ def conjoin(es: Sequence[A.Expr]) -> Optional[A.Expr]:
 
 
 class Binder:
-    def __init__(self, hms: Metastore):
+    def __init__(self, hms: Metastore, catalogs=None):
         self.hms = hms
+        self.catalogs = catalogs  # CatalogRegistry (three-part names, §6)
         self._counter = itertools.count()
 
     def _fresh(self, prefix: str) -> str:
@@ -283,6 +284,25 @@ class Binder:
     # ======================================================================
     def _bind_from(self, node, outer: Optional[Scope]):
         if isinstance(node, A.TableRef):
+            if node.catalog is not None:
+                # catalog.schema.table: resolve through the mounted catalog's
+                # connector with lazy remote-schema discovery (paper §6)
+                if self.catalogs is None:
+                    raise BindError(
+                        f"no catalog registry to resolve "
+                        f"{node.catalog}.{node.name}"
+                    )
+                cat = self.catalogs.get(node.catalog)
+                if cat is None:
+                    raise BindError(f"unknown catalog {node.catalog!r}")
+                try:
+                    desc = cat.table_desc(node.schema, node.name)
+                except KeyError as exc:
+                    raise BindError(str(exc)) from exc
+                alias = node.alias or node.name
+                cols = [c for c, _ in desc.schema]
+                return (P.FederatedScan(desc, alias, cols),
+                        Scope({alias: cols}, outer))
             desc = self.hms.get_table(node.name)
             alias = node.alias or node.name
             if desc.is_mv and desc.mv_sql is None:

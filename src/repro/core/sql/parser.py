@@ -37,6 +37,7 @@ KEYWORDS = {
     "partition", "rows", "grouping", "sets", "resource", "plan", "pool",
     "with", "rule", "move", "kill", "add", "to", "mapping", "application",
     "user", "default", "enable", "activate", "true", "false", "by",
+    "catalog",
 }
 
 
@@ -148,6 +149,12 @@ class Parser:
             return self._create()
         if self.at_kw("drop"):
             self.next()
+            if self.accept_kw("catalog"):
+                if_exists = False
+                if self.accept_kw("if"):
+                    self.expect_kw("exists")
+                    if_exists = True
+                return A.DropCatalog(self.ident(), if_exists)
             self.expect_kw("table")
             if_exists = False
             if self.accept_kw("if"):
@@ -298,13 +305,23 @@ class Parser:
             self.accept_kw("as")
             alias = self.ident()
             return A.SubqueryRef(q, alias)
-        name = self.ident()
+        # one-, two-, or three-part names: table | catalog.table |
+        # catalog.schema.table (federated catalogs, paper §6)
+        parts = [self.ident()]
+        while len(parts) < 3 and self.peek().kind == "op" \
+                and self.peek().value == ".":
+            self.next()
+            parts.append(self.ident())
         alias = None
         if self.accept_kw("as"):
             alias = self.ident()
         elif self.peek().kind == "ident":
             alias = self.ident()
-        return A.TableRef(name, alias)
+        if len(parts) == 1:
+            return A.TableRef(parts[0], alias)
+        if len(parts) == 2:
+            return A.TableRef(parts[1], alias, catalog=parts[0])
+        return A.TableRef(parts[2], alias, catalog=parts[0], schema=parts[1])
 
     # -- DML --------------------------------------------------------------
     def _insert(self) -> A.Insert:
@@ -413,6 +430,15 @@ class Parser:
     # -- DDL ---------------------------------------------------------------
     def _create(self):
         self.expect_kw("create")
+        if self.accept_kw("catalog"):
+            # CREATE CATALOG name USING connector [WITH (k = v, ...)]
+            name = self.ident()
+            self.expect_kw("using")
+            connector = self.next().value  # ident or quoted string
+            props = {}
+            if self.accept_kw("with"):
+                props = self._props()
+            return A.CreateCatalog(name, connector, props)
         if self.accept_kw("materialized"):
             self.expect_kw("view")
             name = self.ident()

@@ -157,3 +157,57 @@ def test_wlm_idle_capacity_borrowing(star_schema):
     for i in range(5):
         wlm.release(f"q{i}")
     wlm.release("q-extra")
+
+
+def test_wlm_cross_pool_borrow_round_robin(warehouse):
+    """Queue heads from several pools contending for borrowed idle capacity
+    are granted round-robin across pools, not in wakeup order."""
+    import time
+
+    s = warehouse.session()
+    for ddl in [
+        "CREATE RESOURCE PLAN rr",
+        "CREATE POOL rr.a WITH alloc_fraction=0.3, query_parallelism=1",
+        "CREATE POOL rr.b WITH alloc_fraction=0.3, query_parallelism=1",
+        "CREATE POOL rr.spare WITH alloc_fraction=0.4, query_parallelism=1",
+        "CREATE USER MAPPING ua IN rr TO a",
+        "CREATE USER MAPPING ub IN rr TO b",
+        "ALTER PLAN rr SET DEFAULT POOL = spare",
+        "ALTER RESOURCE PLAN rr ENABLE ACTIVATE",
+    ]:
+        s.execute(ddl)
+    wlm = warehouse.wlm
+    # saturate every pool so all further admissions must queue
+    wlm.admit("a0", user="ua")
+    wlm.admit("b0", user="ub")
+    wlm.admit("sp0")
+
+    grants = []  # (qid, granted pool) in admission order
+    done = threading.Semaphore(0)
+
+    def waiter(qid, user):
+        slot = wlm.wait_admit(qid, user=user, timeout=30)
+        grants.append((qid, slot.pool))
+        done.release()
+
+    threads = [threading.Thread(target=waiter, args=(f"{p}{i}", f"u{p}"))
+               for i in (1, 2) for p in ("a", "b")]
+    for t in threads:
+        t.start()
+    deadline = time.monotonic() + 10
+    while not all(wlm.queue_depths().get(p, 0) == 2 for p in ("a", "b")):
+        assert time.monotonic() < deadline, "admission queues never formed"
+        time.sleep(0.01)
+
+    # free the spare slot; each released borrower frees it again for the
+    # next contending head -- grants must alternate a, b, a, b
+    wlm.release("sp0")
+    for k in range(4):
+        assert done.acquire(timeout=10), f"grant {k} never arrived"
+        qid, _pool = grants[k]
+        wlm.release(qid)  # frees the borrowed spare capacity for the next
+    for t in threads:
+        t.join(timeout=10)
+    assert [pool for _, pool in grants] == ["a", "b", "a", "b"]
+    wlm.release("a0")
+    wlm.release("b0")
