@@ -46,7 +46,7 @@ from .pipeline import (
     is_cacheable,
     plan_only_stages,
 )
-from .runtime.dag import compile_dag
+from .runtime.dag import compile_dag, describe_exchanges
 from .runtime.exec import ExecContext, Executor, eval_expr
 from .runtime.llap import LlapDaemon, LlapIO
 from .runtime.scheduler import QueryScheduler, QueryTask
@@ -101,6 +101,18 @@ DEFAULT_CONFIG = {
     "exchange.buffer_bytes": 64 << 20,
     "exchange.spill": True,
     "exchange.spill_dir": None,
+    # partitioned shuffle service (§4/§5): SHUFFLE edges hash-partition the
+    # producer stream into per-consumer lanes and pipeline-breaker consumers
+    # (shuffle joins, grouped aggregation, global DISTINCT) clone per
+    # partition, merging through UNION/fold vertices.  An int fixes the lane
+    # count; "auto" derives it from CBO row estimates (1 for small inputs);
+    # 1 disables expansion.  Part of the plan-cache key.
+    "shuffle.partitions": "auto",
+    # rows the ShuffleWriter coalesces per lane before handing a morsel to
+    # the lane exchange: routed rows arrive fragmented (a 1/N slice of each
+    # producer morsel), and consumer clones pay fixed per-morsel operator
+    # costs, so lanes re-batch into large morsels
+    "shuffle.lane_batch_rows": 8192,
     # federation (§6): capability-negotiated pushdown gates — each kind can
     # be toggled independently (the connector may still decline piecewise;
     # whatever is not pushed stays as local Filter/Project/Aggregate/Limit
@@ -227,8 +239,9 @@ class Session:
             stmt = stmt.stmt
         plan, info = self._plan_query(stmt)
         pretty = plan.pretty()  # before DAG compilation mutates the tree
-        dag = compile_dag(self._expand_federated(plan))
-        lines = [pretty, "", f"DAG edges: {dag.edge_summary()}"]
+        dag = compile_dag(self._expand_for_compile(plan))
+        lines = [pretty, "", f"DAG edges: {dag.edge_summary()}",
+                 "exchanges:"] + describe_exchanges(dag)
         for k, v in info.items():
             lines.append(f"{k}: {v}")
         return "\n".join(lines)
@@ -331,8 +344,10 @@ class Session:
     def explain_stmt(self, stmt) -> str:
         plan, info = self._plan_query(stmt)
         pretty = plan.pretty()
-        dag = compile_dag(self._expand_federated(plan))
-        return pretty + f"\nDAG edges: {dag.edge_summary()}\ninfo: {info}"
+        dag = compile_dag(self._expand_for_compile(plan))
+        edge_lines = "\n".join(describe_exchanges(dag))
+        return (pretty + f"\nDAG edges: {dag.edge_summary()}"
+                + f"\nexchanges:\n{edge_lines}\ninfo: {info}")
 
     def _only_plan(self) -> str:
         if self.wh.wlm.active_plan:
@@ -368,6 +383,23 @@ class Session:
         vertex per split; compile-time, never cached)."""
         return expand_federated_splits(plan, self.wh.resolve_handler,
                                        config or self.config)
+
+    def _expand_shuffle(self, plan: P.PlanNode,
+                        config: Optional[dict] = None) -> P.PlanNode:
+        """Clone pipeline-breaker consumers per shuffle partition (compile
+        time, like split expansion — cached plans re-expand per execution)."""
+        from .optimizer.cost import CostModel
+        from .runtime.shuffle import expand_shuffle_partitions
+
+        cfg = config or self.config
+        cm = CostModel(self.hms, handler_resolver=self.wh.resolve_handler)
+        return expand_shuffle_partitions(plan, cfg, cost_model=cm)
+
+    def _expand_for_compile(self, plan: P.PlanNode,
+                            config: Optional[dict] = None) -> P.PlanNode:
+        """The full compile-time expansion pipeline (splits, then lanes)."""
+        return self._expand_shuffle(self._expand_federated(plan, config),
+                                    config)
 
     def _run_pipeline(self, stmt, sql_text: str = "", params: Tuple = (),
                       config: Optional[dict] = None, task=None,

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: hash-partition bucket assignment (shuffle service).
+
+The partitioned shuffle service routes every row of a producer morsel into
+one of N consumer lanes by hashing its partition-key columns.  On TPU that
+assignment is a pure VPU map: each key column block is bitcast to uint32
+lanes, folded FNV-style into a running hash word, finished with a Knuth
+multiplicative mix, and reduced modulo the lane count — no gathers, no
+scatters, one pass over the rows.
+
+The float32 bit pattern is the canonical numeric representation (the host
+side canonicalizes every numeric key column the same way, so a value that
+compares equal always lands in the same lane; distinct float64 values that
+collapse to one float32 merely share a bucket, which hash partitioning
+tolerates by construction).  ``-0.0`` is normalized to ``+0.0`` before the
+bitcast so the two equal zeros agree on a lane.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 2048
+
+# FNV-1a style column fold + lowbias32 avalanche finisher (uint32 wrap).
+# The avalanche matters: float32 bit patterns of small integers have all-zero
+# low mantissa bits, so without it every row of an integer key column would
+# agree modulo any power-of-two lane count.
+FNV_PRIME = 16777619
+MIX1 = 0x7FEB352D
+MIX2 = 0x846CA68B
+
+
+def _avalanche(h):
+    h = h ^ (h >> jnp.uint32(16))
+    h = h * jnp.uint32(MIX1)
+    h = h ^ (h >> jnp.uint32(15))
+    h = h * jnp.uint32(MIX2)
+    return h ^ (h >> jnp.uint32(16))
+
+
+def _partition_kernel(*refs, num_partitions):
+    col_refs, out_ref = refs[:-1], refs[-1]
+    h = jnp.zeros(out_ref.shape, jnp.uint32)
+    for ref in col_refs:
+        v = ref[...].astype(jnp.float32)
+        v = jnp.where(v == 0.0, jnp.float32(0.0), v)  # -0.0 == +0.0
+        w = jax.lax.bitcast_convert_type(v, jnp.uint32)
+        h = h * jnp.uint32(FNV_PRIME) ^ w
+    h = _avalanche(h)
+    out_ref[...] = (h % jnp.uint32(num_partitions)).astype(jnp.int32)
+
+
+def hash_partition_pallas(cols, num_partitions: int, interpret: bool = True):
+    """cols: tuple of (N,) float32 key columns; returns (N,) int32 buckets
+    in ``[0, num_partitions)``."""
+    cols = tuple(cols)
+    n = cols[0].shape[0]
+    if n == 0:
+        return jnp.zeros((0,), dtype=jnp.int32)
+    block = min(ROW_BLOCK, max(((n + 7) // 8) * 8, 8))
+    pad = (-n) % block
+    padded = [jnp.pad(c.astype(jnp.float32), (0, pad)) for c in cols]
+    out = pl.pallas_call(
+        functools.partial(_partition_kernel, num_partitions=num_partitions),
+        grid=((n + pad) // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)) for _ in padded],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n + pad,), jnp.int32),
+        interpret=interpret,
+    )(*padded)
+    return out[:n]

@@ -1,0 +1,29 @@
+"""Public wrapper for the shuffle bucket-assignment kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from ..registry import on_tpu, register, resolve
+from .hash_partition import hash_partition_pallas
+from .ref import hash_partition_ref
+
+
+@register("hash_partition", "pallas")
+@functools.partial(jax.jit, static_argnames=("num_partitions",))
+def _hash_partition_pallas(cols, num_partitions: int):
+    return hash_partition_pallas(cols, num_partitions,
+                                 interpret=not on_tpu())
+
+
+@register("hash_partition", "ref")
+@functools.partial(jax.jit, static_argnames=("num_partitions",))
+def _hash_partition_ref(cols, num_partitions: int):
+    return hash_partition_ref(cols, num_partitions)
+
+
+def hash_partition(cols, num_partitions: int, engine: str = "auto"):
+    """Map rows to shuffle lanes: cols is a tuple of (N,) float32 key
+    columns; returns (N,) int32 bucket ids in ``[0, num_partitions)``."""
+    return resolve("hash_partition", engine)(tuple(cols), num_partitions)

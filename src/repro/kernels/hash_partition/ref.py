@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for shuffle bucket assignment.
+
+Bit-for-bit the same hash as the Pallas kernel (and as the numpy host path
+in ``repro.core.runtime.shuffle``): float32 bitcast, FNV-style column fold,
+Knuth multiplicative finisher, modulo lane count.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .hash_partition import FNV_PRIME, _avalanche
+
+
+def hash_partition_ref(cols, num_partitions: int):
+    cols = tuple(cols)
+    n = cols[0].shape[0]
+    h = jnp.zeros((n,), jnp.uint32)
+    for c in cols:
+        v = c.astype(jnp.float32)
+        v = jnp.where(v == 0.0, jnp.float32(0.0), v)
+        w = jax.lax.bitcast_convert_type(v, jnp.uint32)
+        h = h * jnp.uint32(FNV_PRIME) ^ w
+    h = _avalanche(h)
+    return (h % jnp.uint32(num_partitions)).astype(jnp.int32)

@@ -84,5 +84,5 @@ def _import_all() -> None:
     import importlib
 
     for pkg in ("filter_eval", "hash_group", "bloom", "ssd_scan",
-                "flash_attention", "key_lookup"):
+                "flash_attention", "key_lookup", "hash_partition"):
         importlib.import_module(f"repro.kernels.{pkg}.ops")

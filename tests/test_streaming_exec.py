@@ -224,6 +224,43 @@ def test_cancel_mid_vertex_under_speculation(conn):
         _SCALAR_FUNCS.pop("slow_ident_pr3", None)
 
 
+def test_cancel_latency_bounded_under_partitioned_lanes(conn):
+    """With shuffle.partitions > 1 every per-partition clone observes the
+    token at its own batch boundaries: cancelling mid-shuffle terminates
+    within ~one morsel, not after draining every lane."""
+    from repro.core.runtime.exec import _SCALAR_FUNCS
+
+    calls = []
+
+    def slow_ident(args):
+        calls.append(1)
+        time.sleep(0.02)
+        return args[0]
+
+    _SCALAR_FUNCS["slow_ident_pr5"] = slow_ident
+    try:
+        c = db.connect(warehouse=conn.warehouse, result_cache=False,
+                       **{"exchange.batch_rows": 32,
+                          "shuffle.partitions": 4,
+                          "broadcast_threshold_rows": 0.0})
+        h = c.execute_async(
+            "SELECT grp, SUM(slow_ident_pr5(v)) FROM fact"
+            " JOIN dim ON fk = dk GROUP BY grp")
+        wait_for(lambda: len(calls) >= 3, what="clone mid-stream")
+        t0 = time.monotonic()
+        h.cancel()
+        wait_for(h.done, what="cancelled handle terminal")
+        assert time.monotonic() - t0 < 2.0
+        assert h.state == "CANCELLED"
+        seen = len(calls)
+        time.sleep(0.1)
+        # each of the (at most 4) running clones stops at a batch boundary
+        assert len(calls) <= seen + 8
+        c.close()
+    finally:
+        _SCALAR_FUNCS.pop("slow_ident_pr5", None)
+
+
 # ---------------------------------------------------------------------------
 # WLM fair admission
 # ---------------------------------------------------------------------------
