@@ -16,8 +16,13 @@ Prints ``name,us_per_call,derived`` CSV rows plus per-section summaries.
                            DataSource API (wall + time-to-first-batch,
                            pushdown on/off, split parallelism)
                            -> BENCH_PR4.json
+  bench_pr5              : partitioned shuffle service — partitioned vs
+                           single-lane join/aggregation/DISTINCT (wall +
+                           time-to-first-batch), skewed vs uniform keys
+                           with per-lane rows/spill counts
+                           -> BENCH_PR5.json
 
-``python -m benchmarks.run pr3|pr4 [--scale N] [--out PATH]`` runs only
+``python -m benchmarks.run pr3|pr4|pr5 [--scale N] [--out PATH]`` runs only
 that PR's benchmark (the CI smoke invocations).
 """
 from __future__ import annotations
@@ -461,6 +466,181 @@ def bench_pr4(scale=60_000, out_path=None):
     return report
 
 
+def bench_pr5(scale=240_000, out_path=None):
+    """Partitioned shuffle service (PR 5): hash-partitioned exchange lanes
+    vs the single-lane baseline on grouped-aggregation, shuffle-join, and
+    DISTINCT workloads, plus a skewed-vs-uniform key study with per-lane
+    rows/spill counts.  Writes BENCH_PR5.json.
+    """
+    import repro.api as db
+    from benchmarks.ssb import SSB_QUERIES, load_ssb
+    from repro.core.runtime.shuffle import auto_partition_cap
+    from repro.core.session import Warehouse
+
+    parts = auto_partition_cap()
+    # enough executors that producer, clones, and merge vertices never
+    # queue behind one another (the point of partition parallelism)
+    wh = Warehouse(tempfile.mkdtemp(prefix="bench_pr5_"),
+                   llap_executors=max(8, 4 * parts))
+    load_ssb(wh, scale_rows=scale)
+
+    queries = {
+        # grouped aggregation over the 4-dim star join (SSB q4.1): the
+        # aggregation input crosses a shuffle edge in both modes, so the
+        # partitioned lanes measure fan-out, not the loss of scan fusion
+        "group_agg": SSB_QUERIES["q4.1"],
+        # shuffle join + grouped aggregation (SSB flight 3)
+        "join_agg": SSB_QUERIES["q3.1"],
+        # aggregation fed straight by a native scan: single-lane fuses the
+        # scan into the aggregate vertex (no exchange at all), so this one
+        # records what the extra hop costs when there is nothing to fan out
+        "scan_agg": "SELECT lo_custkey, SUM(lo_revenue) AS a,"
+                    " MIN(lo_revenue) AS b, MAX(lo_revenue) AS c,"
+                    " SUM(lo_quantity) AS d, COUNT(*) AS e,"
+                    " AVG(lo_extendedprice) AS f"
+                    " FROM lineorder GROUP BY lo_custkey",
+        # streaming per-partition distinct hash-set state
+        "distinct_agg": "SELECT lo_suppkey, COUNT(DISTINCT lo_custkey) AS d"
+                        " FROM lineorder GROUP BY lo_suppkey",
+    }
+    common = {"result_cache": False, "broadcast_threshold_rows": 0.0,
+              "exchange.buffer_rows": 1 << 20}
+    modes = {
+        "single_lane": {"shuffle.partitions": 1},
+        "partitioned": {"shuffle.partitions": parts},
+    }
+    report = {
+        "scale_rows": scale,
+        "config": {"partitions": parts, "lane_batch_rows": 8192,
+                   "exchange.batch_rows": 1024},
+        "queries": {},
+    }
+    for name, sql in queries.items():
+        per_query = {}
+        for mode, overrides in modes.items():
+            conn = db.connect(warehouse=wh, **common, **overrides)
+            _pr3_measure(conn, sql)  # warm LLAP (paper reports warm cache)
+            runs = []
+            for _ in range(5):
+                h = conn.execute_async(sql)
+                t0 = time.perf_counter()
+                ttfb = None
+                rows = 0
+                for batch in h.fetch_stream(batch_rows=1024):
+                    if ttfb is None:
+                        ttfb = time.perf_counter() - t0
+                    rows += len(batch)
+                h.result(600)
+                wall = time.perf_counter() - t0
+                p = h.poll()
+                runs.append({
+                    "wall_ms": round(wall * 1e3, 3),
+                    "time_to_first_batch_ms": round(
+                        (ttfb if ttfb is not None else wall) * 1e3, 3),
+                    "rows": rows,
+                    "rows_spilled": int(p.get("rows_spilled", 0)),
+                    "lanes": p.get("lanes", {}),
+                })
+            best = min(runs, key=lambda r: r["wall_ms"])
+            best["lane_rows"] = {
+                vid: [lane["rows"] for lane in lanes]
+                for vid, lanes in best.pop("lanes", {}).items()
+            }
+            per_query[mode] = best
+            conn.close()
+            emit(f"pr5.{name}.{mode}", best["wall_ms"] * 1e3,
+                 f"ttfb_ms={best['time_to_first_batch_ms']},"
+                 f"rows={best['rows']},lanes={len(best['lane_rows'])}")
+        assert per_query["single_lane"]["rows"] == \
+            per_query["partitioned"]["rows"], name
+        per_query["wall_speedup_partitioned"] = round(
+            per_query["single_lane"]["wall_ms"]
+            / max(per_query["partitioned"]["wall_ms"], 1e-3), 3)
+        per_query["ttfb_speedup_partitioned"] = round(
+            per_query["single_lane"]["time_to_first_batch_ms"]
+            / max(per_query["partitioned"]["time_to_first_batch_ms"],
+                  1e-3), 3)
+        report["queries"][name] = per_query
+
+    # ---- skewed vs uniform keys: per-lane telemetry under a lane budget --
+    # a dedicated single-executor warehouse makes the spill contrast
+    # deterministic: with one worker the producer fills every lane before a
+    # clone drains (put never blocks), so buffered rows per lane equal that
+    # lane's share of the table — the hot lane overflows its budget, the
+    # uniform lanes never do
+    skew_wh = Warehouse(tempfile.mkdtemp(prefix="bench_pr5_skew_"),
+                        llap_executors=1)
+    s = skew_wh.session()
+    s.execute("CREATE TABLE skewed (k INT, v DOUBLE)")
+    s.execute("CREATE TABLE uniform (k INT, v DOUBLE)")
+    rng = np.random.default_rng(0)
+    n = max(scale // 2, 2000)
+    hot = rng.uniform(size=n) < 0.85
+    ks = np.where(hot, 7, rng.integers(0, 1024, n))
+    ku = rng.integers(0, 1024, n)
+    from repro.core.acid import AcidTable
+    from repro.core.runtime.vector import VectorBatch
+
+    for tname, karr in (("skewed", ks), ("uniform", ku)):
+        tx = skew_wh.hms.open_txn()
+        AcidTable(skew_wh.hms.get_table(tname), skew_wh.hms).insert(
+            tx, VectorBatch({"k": karr.astype(np.int64),
+                             "v": rng.uniform(0, 1, n).round(5)}))
+        skew_wh.hms.commit_txn(tx)
+    report["skew"] = {}
+    # lane budget sized between the uniform per-lane share (n / parts) and
+    # the skewed hot lane (~0.85 n): uniform lanes stay in memory, the hot
+    # lane overflows — the per-lane spill counters point straight at it
+    lane_budget = int(n * 0.7)
+    for tname in ("skewed", "uniform"):
+        conn = db.connect(warehouse=skew_wh, result_cache=False,
+                          **{"shuffle.partitions": parts,
+                             "exchange.buffer_rows": lane_budget})
+        sql = (f"SELECT k, COUNT(*) AS c, SUM(v) AS sv FROM {tname}"
+               " GROUP BY k")
+        conn.execute(sql)
+        h = conn.execute_async(sql)
+        h.result(600)
+        p = h.poll()
+        lanes = [lane for ls in p.get("lanes", {}).values() for lane in ls]
+        lane_rows = [lane["rows"] for lane in lanes] or [0]
+        report["skew"][tname] = {
+            "per_lane_rows": lane_rows,
+            "hot_lane_rows": max(lane_rows),
+            "per_lane_spilled_rows": [lane["spilled_rows"]
+                                      for lane in lanes],
+            "rows_spilled": int(p.get("rows_spilled", 0)),
+        }
+        conn.close()
+        emit(f"pr5.skew.{tname}", max(lane_rows),
+             f"spilled={report['skew'][tname]['rows_spilled']}")
+
+    report["summary"] = {
+        "partitions": parts,
+        "group_agg_wall_speedup": report["queries"]["group_agg"][
+            "wall_speedup_partitioned"],
+        "join_agg_wall_speedup": report["queries"]["join_agg"][
+            "wall_speedup_partitioned"],
+        "distinct_agg_wall_speedup": report["queries"]["distinct_agg"][
+            "wall_speedup_partitioned"],
+        "skewed_hot_lane_rows": report["skew"]["skewed"]["hot_lane_rows"],
+        "uniform_hot_lane_rows": report["skew"]["uniform"]["hot_lane_rows"],
+        "skewed_rows_spilled": report["skew"]["skewed"]["rows_spilled"],
+    }
+    out_path = out_path or os.path.join(os.path.dirname(__file__),
+                                        "BENCH_PR5.json")
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    emit("pr5.group_agg_wall_speedup",
+         report["summary"]["group_agg_wall_speedup"])
+    emit("pr5.join_agg_wall_speedup",
+         report["summary"]["join_agg_wall_speedup"])
+    skew_wh.close()
+    wh.close()
+    return report
+
+
 def roofline_summary():
     d = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
     if not os.path.isdir(d):
@@ -494,6 +674,7 @@ def main() -> None:
     kernel_micro()
     bench_pr3()
     bench_pr4()
+    bench_pr5()
     roofline_summary()
     print()
     print(f"# paper-claims summary: v3-vs-v1 speedup {v1v3:.2f}x (paper: 4.6x avg),"
@@ -507,17 +688,21 @@ if __name__ == "__main__":
 
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("section", nargs="?", default="all",
-                        choices=["all", "pr3", "pr4"])
-    parser.add_argument("--scale", type=int, default=60_000,
-                        help="row scale (pr3: SSB lineorder, pr4: external)")
+                        choices=["all", "pr3", "pr4", "pr5"])
+    parser.add_argument("--scale", type=int, default=None,
+                        help="row scale (pr3/pr5: SSB lineorder,"
+                             " pr4: external); per-section default if unset")
     parser.add_argument("--out", default=None,
-                        help="BENCH_PRn.json output path (pr3/pr4 sections)")
+                        help="BENCH_PRn.json output path (pr3-pr5 sections)")
     args = parser.parse_args()
     if args.section == "pr3":
         print("name,us_per_call,derived")
-        bench_pr3(scale=args.scale, out_path=args.out)
+        bench_pr3(scale=args.scale or 60_000, out_path=args.out)
     elif args.section == "pr4":
         print("name,us_per_call,derived")
-        bench_pr4(scale=args.scale, out_path=args.out)
+        bench_pr4(scale=args.scale or 60_000, out_path=args.out)
+    elif args.section == "pr5":
+        print("name,us_per_call,derived")
+        bench_pr5(scale=args.scale or 240_000, out_path=args.out)
     else:
         main()

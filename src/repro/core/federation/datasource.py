@@ -132,6 +132,11 @@ class ScanBuilder:
     def push_limit(self, n: int, sort: List[Tuple[int, bool]]) -> str:
         return NONE
 
+    # ---- statistics -------------------------------------------------------
+    def estimate_stats(self) -> Optional["RemoteTableStats"]:
+        """Remote row-count/NDV estimates for the CBO; None = unknown."""
+        return None
+
     # ---- execution --------------------------------------------------------
     def output_columns(self) -> List[str]:
         """Raw names of the columns each read batch carries, in order."""
@@ -193,6 +198,47 @@ def apply_spec(builder: ScanBuilder, spec: Optional[ScanSpec]) -> None:
         builder.spec.limit = spec.limit
         builder.spec.sort = list(spec.sort)
         builder.spec.limit_mode = spec.limit_mode
+
+
+@dataclasses.dataclass
+class RemoteColumnStats:
+    """Connector-estimated per-column statistics (CostModel-compatible)."""
+
+    ndv: int = 0
+    min_value: Optional[object] = None
+    max_value: Optional[object] = None
+
+
+@dataclasses.dataclass
+class RemoteTableStats:
+    """Connector-estimated table statistics: the shape
+    :class:`~repro.core.optimizer.cost.CostModel` reads (``row_count`` +
+    per-column ``ndv``/``min_value``/``max_value``), so federated join
+    order, broadcast choices, and ``shuffle.partitions: auto`` are costed
+    on remote estimates instead of the empty-stats default."""
+
+    row_count: float = 0.0
+    columns: Dict[str, RemoteColumnStats] = dataclasses.field(
+        default_factory=dict)
+
+
+def stats_from_batch(batch: VectorBatch,
+                     sample_rows: int = 1 << 17) -> RemoteTableStats:
+    """Estimate RemoteTableStats from an in-memory batch (shared by the
+    embedded connectors): NDV from a bounded sample, min/max for numerics."""
+    n = batch.num_rows
+    out = RemoteTableStats(row_count=float(n))
+    for name, col in batch.cols.items():
+        sample = col[:sample_rows]
+        ndv = int(len(np.unique(sample)))
+        if len(sample) < n and ndv == len(sample):
+            ndv = n  # looks unique in the sample: assume a key column
+        cs = RemoteColumnStats(ndv=ndv)
+        if col.dtype.kind in "iuf" and n:
+            cs.min_value = col.min().item()
+            cs.max_value = col.max().item()
+        out.columns[name] = cs
+    return out
 
 
 class Writer:

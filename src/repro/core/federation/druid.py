@@ -46,6 +46,7 @@ class DruidStore:
         self.datasources: Dict[str, List[DruidSegment]] = {}
         self.segment_rows = segment_rows
         self.queries_served: List[dict] = []
+        self._stats_cache: Dict[str, object] = {}
 
     def create_datasource(self, name: str, batch: VectorBatch) -> None:
         segs = [
@@ -53,12 +54,29 @@ class DruidStore:
             for i in range(0, max(batch.num_rows, 1), self.segment_rows)
         ]
         self.datasources[name] = segs
+        self._stats_cache.pop(name, None)
 
     def append(self, name: str, batch: VectorBatch) -> None:
         if name not in self.datasources:
             self.create_datasource(name, batch)
         else:
             self.datasources[name].append(DruidSegment(batch))
+            self._stats_cache.pop(name, None)
+
+    def stats(self, name: str):
+        """Datasource row-count/NDV estimates (sampled per segment)."""
+        if name not in self._stats_cache:
+            from .datasource import stats_from_batch
+
+            segs = self.datasources.get(name)
+            if not segs:
+                return None
+            sample = VectorBatch.concat(
+                [s.batch.slice(0, 1 << 15) for s in segs])
+            stats = stats_from_batch(sample)
+            stats.row_count = float(sum(s.num_rows for s in segs))
+            self._stats_cache[name] = stats
+        return self._stats_cache[name]
 
     def schema(self, name: str) -> Optional[List[Tuple[str, str]]]:
         segs = self.datasources.get(name)
@@ -119,6 +137,10 @@ class DruidScanBuilder(ScanBuilder):
         src = self.table.props.get("druid.datasource", self.table.name)
         return self.handler.store.datasources.get(src, [])
 
+    def estimate_stats(self):
+        src = self.table.props.get("druid.datasource", self.table.name)
+        return self.handler.store.stats(src)
+
     # ---- negotiation ------------------------------------------------------
     def push_filters(self, conjuncts: List[A.Expr]) -> List[A.Expr]:
         residual = []
@@ -154,8 +176,10 @@ class DruidScanBuilder(ScanBuilder):
     def push_limit(self, n: int, sort) -> str:
         if self.spec.agg is not None and self.spec.agg.mode != FULL:
             return NONE  # per-segment partial aggregates can't be top-n'd
-        if self.spec.agg is None and sort:
-            return NONE  # scan queries return segment order
+        # scan-type queries push sorted top-n too: each segment split issues
+        # a sorted scan with a limitSpec, and with multiple segments the
+        # local Sort+Limit stay as the merge (PARTIAL) instead of bailing to
+        # a local-only sort over every remote row
         mode = FULL if len(self.to_splits()) <= 1 or self.spec.agg is not None \
             else PARTIAL
         self.spec.limit = int(n)

@@ -32,6 +32,9 @@ class JdbcHandler(StorageHandler):
         self.conn = sqlite3.connect(db_path, check_same_thread=False)
         self._lock = threading.Lock()
         self.queries_served: List[str] = []
+        # remote statistics cache (planning runs per query; the remote
+        # COUNT/NDV probes should not) — dropped whenever this handler writes
+        self._stats_cache: Dict[str, object] = {}
 
     @classmethod
     def from_props(cls, props: Dict[str, str]) -> "JdbcHandler":
@@ -49,6 +52,7 @@ class JdbcHandler(StorageHandler):
             self.conn.executemany(f'INSERT INTO "{name}" VALUES ({ph})',
                                   [tuple(_py(v) for v in r) for r in rows])
             self.conn.commit()
+            self._stats_cache.pop(name, None)
 
     # ---- scan path ------------------------------------------------------------
     def scan_builder(self, table: TableDesc, config=None) -> "JdbcScanBuilder":
@@ -118,6 +122,38 @@ class JdbcScanBuilder(ScanBuilder):
         self.spec.limit_mode = FULL
         self.spec.sort = list(sort)
         return FULL
+
+    # ---- statistics -------------------------------------------------------
+    def estimate_stats(self):
+        """Remote row-count + per-column NDV/min/max via generated SQL
+        (COUNT(*) / COUNT(DISTINCT c) / MIN / MAX), cached per table on the
+        handler until its next write."""
+        from .datasource import RemoteColumnStats, RemoteTableStats
+
+        remote = self._remote()
+        h = self.handler
+        with h._lock:
+            cached = h._stats_cache.get(remote)
+        if cached is not None:
+            return cached
+        cols = [c for c, _ in self.table.schema]
+        sel = ["COUNT(*)"]
+        for c in cols:
+            sel += [f'COUNT(DISTINCT "{c}")', f'MIN("{c}")', f'MAX("{c}")']
+        sql = f'SELECT {", ".join(sel)} FROM "{remote}"'
+        with h._lock:
+            try:
+                row = h.conn.execute(sql).fetchone()
+            except sqlite3.Error:
+                return None
+        stats = RemoteTableStats(row_count=float(row[0]))
+        for i, c in enumerate(cols):
+            ndv, mn, mx = row[1 + 3 * i: 4 + 3 * i]
+            stats.columns[c] = RemoteColumnStats(
+                ndv=int(ndv or 0), min_value=mn, max_value=mx)
+        with h._lock:
+            h._stats_cache[remote] = stats
+        return stats
 
     # ---- execution --------------------------------------------------------
     def _remote(self) -> str:
@@ -212,6 +248,8 @@ class JdbcWriter(Writer):
     def commit(self) -> None:
         with self.handler._lock:
             self.handler.conn.commit()
+            remote = self.table.props.get("jdbc.table", self.table.name)
+            self.handler._stats_cache.pop(remote, None)
 
     def abort(self) -> None:
         """Roll back uncommitted batches so a failed multi-batch write

@@ -40,6 +40,9 @@ class MemTableHandler(StorageHandler):
         self.latency_s = float(latency_s)
         self.batch_rows = int(batch_rows)
         self._lock = threading.Lock()
+        # remote statistics cache (planning runs per query; the per-column
+        # NDV scans should not) — dropped whenever a table is (re)loaded
+        self._stats_cache: Dict[str, object] = {}
         # production telemetry (streaming tests/benchmarks read these)
         self.produced: List[Tuple[float, int]] = []  # (monotonic time, rows)
         self.active_readers = 0
@@ -63,14 +66,20 @@ class MemTableHandler(StorageHandler):
             if "." not in name else name
         with self._lock:
             self.tables[key] = data
+            self._stats_cache.pop(key, None)
 
-    def _resolve(self, table: TableDesc) -> VectorBatch:
+    def _resolve_key(self, table: TableDesc) -> str:
+        """The storage key a TableDesc addresses (the key load() writes)."""
         key = table.props.get("memtable.table", table.name)
         with self._lock:
             if key in self.tables:
-                return self.tables[key]
-            qualified = self._key(self.default_schema, key)
-            return self.tables.get(qualified, VectorBatch({}))
+                return key
+        return self._key(self.default_schema, key) if "." not in key else key
+
+    def _resolve(self, table: TableDesc) -> VectorBatch:
+        key = self._resolve_key(table)
+        with self._lock:
+            return self.tables.get(key, VectorBatch({}))
 
     # ---- telemetry ------------------------------------------------------------
     def reset_telemetry(self) -> None:
@@ -135,6 +144,20 @@ class MemTableHandler(StorageHandler):
 
 
 class MemTableScanBuilder(ScanBuilder):
+    def estimate_stats(self):
+        from .datasource import stats_from_batch
+
+        h: MemTableHandler = self.handler
+        key = h._resolve_key(self.table)
+        with h._lock:
+            cached = h._stats_cache.get(key)
+        if cached is not None:
+            return cached
+        stats = stats_from_batch(h._resolve(self.table))
+        with h._lock:
+            h._stats_cache[key] = stats
+        return stats
+
     def push_filters(self, conjuncts: List[A.Expr]) -> List[A.Expr]:
         table_cols = {c for c, _ in self.table.schema}
         residual = []
@@ -222,6 +245,7 @@ class MemTableWriter(Writer):
             parts = ([prev] if prev is not None and prev.num_rows else []) \
                 + self._pending
             h.tables[key] = VectorBatch.concat(parts)
+            h._stats_cache.pop(key, None)
         self._pending = []
 
 

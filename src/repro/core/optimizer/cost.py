@@ -50,9 +50,15 @@ class Estimate:
 
 
 class CostModel:
-    def __init__(self, hms: Metastore, overrides: Optional[Dict[str, float]] = None):
+    def __init__(self, hms: Metastore,
+                 overrides: Optional[Dict[str, float]] = None,
+                 handler_resolver=None):
         self.hms = hms
         self.overrides = overrides or {}
+        # resolves a TableDesc.handler name to a connector so federated
+        # scans can be costed on the connector's remote row-count/NDV
+        # estimates instead of the empty-stats default (§6)
+        self.handler_resolver = handler_resolver
         self._stats_cache: Dict[str, object] = {}
 
     # -- public ---------------------------------------------------------------
@@ -79,20 +85,37 @@ class CostModel:
         return total
 
     # -- internals --------------------------------------------------------------
-    def _table_stats(self, name: str):
+    def _table_stats(self, name: str, node: Optional[P.PlanNode] = None):
         if name not in self._stats_cache:
+            from ..stats import TableStats
+
             try:
-                self._stats_cache[name] = self.hms.get_stats(name)
+                stats = self.hms.get_stats(name)
             except KeyError:
                 # catalog-mounted external table: no HMS stats (§6)
-                from ..stats import TableStats
-
-                self._stats_cache[name] = TableStats()
+                stats = TableStats()
+            if (isinstance(node, P.FederatedScan)
+                    and not getattr(stats, "row_count", 0)):
+                # external data never flowed through local writes, so HMS
+                # stats are empty: ask the connector for remote estimates
+                stats = self._remote_stats(node) or stats
+            self._stats_cache[name] = stats
         return self._stats_cache[name]
+
+    def _remote_stats(self, node: P.FederatedScan):
+        if self.handler_resolver is None:
+            return None
+        try:
+            handler = self.handler_resolver(node.table.handler)
+            if handler is None:
+                return None
+            return handler.scan_builder(node.table, {}).estimate_stats()
+        except Exception:  # noqa: BLE001 - stats must never break planning
+            return None
 
     def _estimate(self, node: P.PlanNode) -> Estimate:
         if isinstance(node, (P.Scan, P.FederatedScan)):
-            ts = self._table_stats(node.table.name)
+            ts = self._table_stats(node.table.name, node)
             cols = {}
             for c, cs in ts.columns.items():
                 cols[f"{node.alias}.{c}"] = ColumnInfo(
@@ -166,6 +189,12 @@ class CostModel:
             return Estimate(child.rows, cols)
         if isinstance(node, (P.Sort,)):
             return self.estimate(node.input)
+        if isinstance(node, P.ShuffleRead):
+            # one hash lane of the source stream: 1/N of its rows, so plans
+            # stacked above partition-expanded consumers (an aggregation
+            # over an expanded join) still cost on real cardinalities
+            child = self.estimate(node.source)
+            return child.scaled(1.0 / max(node.num_partitions, 1))
         if isinstance(node, P.Limit):
             child = self.estimate(node.input)
             return child.scaled(min(1.0, node.n / max(child.rows, 1)))

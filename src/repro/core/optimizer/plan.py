@@ -356,6 +356,40 @@ class Union(PlanNode):
         return f"Union[{'ALL' if self.all else 'DISTINCT'}]"
 
 
+class ShuffleRead(PlanNode):
+    """One partition lane of a hash-partitioned SHUFFLE edge.
+
+    Inserted at compile time by the shuffle service
+    (:func:`repro.core.runtime.shuffle.expand_shuffle_partitions`): the
+    per-partition clones of a pipeline-breaker consumer each read one lane
+    of the shared producer subtree, which executes exactly once and
+    hash-partitions its output stream on ``keys``.  The task compiler lowers
+    this node into a lane-aware edge placeholder — it never reaches the
+    executor."""
+
+    def __init__(self, source: PlanNode, keys: List[str], partition: int,
+                 num_partitions: int):
+        self.inputs = [source]
+        self.keys = list(keys)
+        self.partition = partition
+        self.num_partitions = num_partitions
+
+    @property
+    def source(self) -> PlanNode:
+        return self.inputs[0]
+
+    def output_names(self):
+        return self.source.output_names()
+
+    def key(self):
+        return (f"shuffleread(p{self.partition}/{self.num_partitions},"
+                f"[{','.join(self.keys)}],{self.source.key()})")
+
+    def describe(self):
+        return (f"ShuffleRead[p{self.partition}/{self.num_partitions} "
+                f"keys={self.keys}]")
+
+
 class ValuesNode(PlanNode):
     def __init__(self, names: List[str], rows: List[list]):
         self.names = names

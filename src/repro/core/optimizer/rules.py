@@ -109,10 +109,12 @@ class OptimizerConfig:
 
 class Optimizer:
     def __init__(self, hms: Metastore, config: Optional[OptimizerConfig] = None,
-                 runtime_overrides: Optional[Dict[str, float]] = None):
+                 runtime_overrides: Optional[Dict[str, float]] = None,
+                 handler_resolver=None):
         self.hms = hms
         self.config = config or OptimizerConfig()
-        self.cost_model = CostModel(hms, runtime_overrides)
+        self.cost_model = CostModel(hms, runtime_overrides,
+                                    handler_resolver=handler_resolver)
 
     def optimize(self, plan: P.PlanNode) -> P.PlanNode:
         cfg = self.config

@@ -30,7 +30,7 @@ from .optimizer.mv_rewrite import MVRewriter
 from .optimizer.rules import Optimizer, OptimizerConfig
 from .optimizer.semijoin import SemijoinConfig, insert_semijoin_reducers
 from .optimizer.shared_work import find_shared_subplans
-from .runtime.dag import DAGScheduler, compile_dag
+from .runtime.dag import DAGScheduler, compile_dag, describe_exchanges
 from .runtime.exec import MemoryPressureError
 from .runtime.scheduler import stream_batch_rows
 from .runtime.vector import VectorBatch
@@ -50,6 +50,7 @@ _PLANNING_KEYS = (
     "mv_rewriting", "semijoin_reduction",
     "federation.push_filters", "federation.push_projection",
     "federation.push_aggregate", "federation.push_limit",
+    "shuffle.partitions",
 )
 
 
@@ -348,7 +349,8 @@ class OptimizeStage(Stage):
         if q.from_plan_cache:
             return
         opt = Optimizer(s.hms, optimizer_config(cfg),
-                        runtime_overrides=self.runtime_overrides)
+                        runtime_overrides=self.runtime_overrides,
+                        handler_resolver=s.wh.resolve_handler)
         q.plan = opt.optimize(q.plan)
         if cfg["semijoin_reduction"]:
             added = insert_semijoin_reducers(q.plan, opt.cost_model,
@@ -385,11 +387,18 @@ class CompileStage(Stage):
         # time so cached plans re-enumerate fresh splits per execution)
         q.plan = s._expand_federated(q.plan, cfg)
         if cfg["shared_work"]:
+            # detected before partition expansion: per-partition clone keys
+            # embed their lane and must never be mistaken for shared subplans
             ctx.shared_keys = find_shared_subplans(q.plan)
             q.info["shared_subplans"] = len(ctx.shared_keys)
+        # partitioned shuffle service: clone pipeline-breaker consumers per
+        # lane (compile time, after the plan-cache deepcopy, so cached plans
+        # re-expand under the session's current shuffle.partitions)
+        q.plan = s._expand_shuffle(q.plan, cfg)
         q.plan_pretty = q.plan.pretty()  # before compile_dag mutates the tree
         q.dag = compile_dag(q.plan)
         q.info["dag_edges"] = q.dag.edge_summary()
+        q.info["exchanges"] = [ln.strip() for ln in describe_exchanges(q.dag)]
         q.exec_ctx = ctx
 
 
@@ -448,6 +457,12 @@ class ExecuteStage(Stage):
                 q.task.note_vertex_done(vid, stats)
             if slot is not None:
                 s.wh.wlm.update_metrics(qid, rows_produced=rows)
+            if stats.get("lanes"):
+                # per-lane row counts per partitioned edge: skew shows up in
+                # EXPLAIN ANALYZE (and through poll() on the async path)
+                q.info.setdefault("exchange_lanes", {})[vid] = [
+                    lane["rows"] for lane in stats["lanes"]
+                ]
 
         def on_root_chunk(chunk):
             # thread root-vertex morsels to the handle's stream while the
@@ -500,9 +515,10 @@ class ExecuteStage(Stage):
                 )
             ctx2 = s._make_ctx(cfg2, params=q.params,
                                cancel_token=q.cancel_token)
+            plan2 = s._expand_federated(plan2, cfg2)
             if cfg2["shared_work"]:
                 ctx2.shared_keys = find_shared_subplans(plan2)
-            dag2 = compile_dag(s._expand_federated(plan2, cfg2))
+            dag2 = compile_dag(s._expand_shuffle(plan2, cfg2))
             if q.task is not None:
                 q.task.note_vertices_total(len(dag2.vertices))
             return DAGScheduler(

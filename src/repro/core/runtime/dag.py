@@ -35,24 +35,43 @@ class MaterializedNode(P.PlanNode):
     In barrier (materialized) mode the upstream vertex's whole output batch
     is assigned to ``batch``; in pipelined mode ``source`` points at the
     upstream vertex's spill-aware :class:`~repro.core.runtime.exchange.Exchange`
-    and every consumer replays its chunk stream through a fresh reader."""
+    and every consumer replays its chunk stream through a fresh reader.
+
+    A *partitioned* placeholder (lowered from a
+    :class:`~repro.core.optimizer.plan.ShuffleRead`) reads one hash lane of
+    the producer's partitioned shuffle edge: in pipelined mode ``source`` is
+    the producer's :class:`~repro.core.runtime.shuffle.ShuffleWriter` (or a
+    plain exchange, filtered at read time when partitioned and full readers
+    mix); in barrier mode the materialized batch is filtered to the lane."""
 
     _counter = [0]
 
-    def __init__(self, names: List[str], tag: str):
+    def __init__(self, names: List[str], tag: str,
+                 partition: Optional[int] = None,
+                 num_partitions: Optional[int] = None,
+                 partition_keys: Optional[List[str]] = None):
         self.names = names
         self.tag = tag
+        self.partition = partition
+        self.num_partitions = num_partitions
+        self.partition_keys = partition_keys or []
         self.batch: Optional[VectorBatch] = None
-        self.source = None  # Exchange (pipelined scheduling)
+        self.source = None  # Exchange / ShuffleWriter (pipelined scheduling)
         self.inputs = []
 
     def output_names(self):
         return list(self.names)
 
     def key(self):
+        if self.partition is not None:
+            return (f"materialized({self.tag}"
+                    f"#p{self.partition}/{self.num_partitions})")
         return f"materialized({self.tag})"
 
     def describe(self):
+        if self.partition is not None:
+            return (f"MaterializedEdge[{self.tag} "
+                    f"lane {self.partition}/{self.num_partitions}]")
         return f"MaterializedEdge[{self.tag}]"
 
 
@@ -154,6 +173,20 @@ def compile_dag(plan: P.PlanNode) -> TaskDAG:
             if isinstance(child, MaterializedNode):
                 vertex.edge_types.setdefault(child.tag, _edge_type(node, i))
                 continue
+            if isinstance(child, P.ShuffleRead):
+                # one hash lane of the shared producer subtree: the producer
+                # compiles once (memoized) and every per-partition clone
+                # reads its own lane of the partitioned SHUFFLE edge
+                dep = build(child.source)
+                placeholder = MaterializedNode(
+                    child.output_names(), dep,
+                    partition=child.partition,
+                    num_partitions=child.num_partitions,
+                    partition_keys=list(child.keys),
+                )
+                node.inputs[i] = placeholder
+                vertex.edge_types[dep] = SHUFFLE
+                continue
             if isinstance(child, _BLOCKING) or isinstance(node, P.Join):
                 dep = build(child)
                 placeholder = MaterializedNode(child.output_names(), dep)
@@ -179,6 +212,42 @@ def _walk_materialized(node: P.PlanNode, seen=None):
     if isinstance(node, P.Scan):
         for rf in node.runtime_filters:
             yield from _walk_materialized(rf.producer, seen)
+
+
+def partitioned_edges(dag: TaskDAG) -> Dict[str, tuple]:
+    """Producer vids whose partitioned readers agree on one
+    ``(num_partitions, keys)`` spec — these edges get lane arrays; a
+    producer read with conflicting specs (or only full-stream readers)
+    stays a single exchange and partitioned readers filter at read time."""
+    spec: Dict[str, tuple] = {}
+    conflicted = set()
+    for v in dag.vertices.values():
+        for mn in _walk_materialized(v.plan):
+            if mn.partition is None:
+                continue
+            this = (mn.num_partitions, tuple(mn.partition_keys))
+            if mn.tag in spec and spec[mn.tag] != this:
+                conflicted.add(mn.tag)
+            spec.setdefault(mn.tag, this)
+    return {tag: (n, list(keys)) for tag, (n, keys) in spec.items()
+            if tag not in conflicted}
+
+
+def describe_exchanges(dag: TaskDAG) -> List[str]:
+    """One line per DAG edge: producer -> consumer, movement kind, and the
+    lane count on partitioned shuffle boundaries (EXPLAIN rendering)."""
+    lanes = partitioned_edges(dag)
+    lines = []
+    for vid in dag.topo_order():
+        v = dag.vertices[vid]
+        for dep in sorted(v.deps):
+            kind = v.edge_types.get(dep, FORWARD)
+            extra = ""
+            if dep in lanes:
+                n, keys = lanes[dep]
+                extra = f" partitions={n} keys={keys}"
+            lines.append(f"  {dep} -> {vid}: {kind}{extra}")
+    return lines
 
 
 @dataclass
@@ -252,23 +321,48 @@ class DAGScheduler:
     def _execute_pipelined(self, dag: TaskDAG, ctx: ExecContext, pool,
                            on_vertex_done, on_root_chunk) -> VectorBatch:
         from .exchange import Exchange, ExchangeConfig
+        from .shuffle import ShuffleWriter
 
         cancel_token = getattr(ctx, "cancel_token", None)
         excfg = ExchangeConfig(ctx.config,
                                ctx.config.get("exchange.spill_dir"))
-        exchanges: Dict[str, Exchange] = {
-            vid: Exchange(vid, excfg) for vid in dag.vertices
+        # partitioned SHUFFLE edges: a producer whose consumers all agree on
+        # one (num_partitions, keys) spec writes through a ShuffleWriter lane
+        # array; disagreeing specs (a subtree shared by differently-keyed
+        # consumers) fall back to a plain exchange with read-time filtering
+        lane_spec = partitioned_edges(dag)
+        lane_readers: Dict[str, List[int]] = {
+            tag: [0] * n for tag, (n, _) in lane_spec.items()
         }
-        # refcount readers per edge: a single-consumer FORWARD edge frees
-        # chunks (and unlinks spill files) as they are consumed instead of
-        # retaining them until query end; multi-consumer edges (shared-work
-        # reuse) and the root (replayed by read_all) keep full retention
         readers: Dict[str, int] = {vid: 0 for vid in dag.vertices}
+        full_readers: Dict[str, int] = {vid: 0 for vid in dag.vertices}
         for v in dag.vertices.values():
             for mn in _walk_materialized(v.plan):
                 readers[mn.tag] += 1
+                if mn.tag in lane_spec and mn.partition is not None:
+                    lane_readers[mn.tag][mn.partition] += 1
+                else:
+                    full_readers[mn.tag] += 1
+        exchanges: Dict[str, object] = {}
+        for vid in dag.vertices:
+            if vid in lane_spec and vid != dag.root:
+                n, keys = lane_spec[vid]
+                exchanges[vid] = ShuffleWriter(
+                    vid, excfg, n, keys, engine=ctx.engine,
+                    batch_rows=int(ctx.config.get("shuffle.lane_batch_rows",
+                                                  8192) or 8192))
+            else:
+                exchanges[vid] = Exchange(vid, excfg)
+        # refcount readers per edge: a single-consumer FORWARD edge (and a
+        # single-reader shuffle lane) frees chunks (and unlinks spill files)
+        # as they are consumed instead of retaining them until query end;
+        # multi-consumer edges (shared-work reuse) and the root (replayed by
+        # read_all) keep full retention
         for vid, ex in exchanges.items():
-            ex.retain = readers[vid] != 1 or vid == dag.root
+            if isinstance(ex, ShuffleWriter):
+                ex.configure_retention(lane_readers[vid], full_readers[vid])
+            else:
+                ex.retain = readers[vid] != 1 or vid == dag.root
         lock = threading.Lock()
         errors: List[BaseException] = []
 
@@ -421,7 +515,26 @@ class DAGScheduler:
 class _VertexExecutor(Executor):
     def _stream_materializednode(self, node: MaterializedNode):
         if node.source is not None:  # pipelined: replay the edge's exchange
+            from .shuffle import ShuffleWriter, partition_select
+
+            if node.partition is not None:
+                if isinstance(node.source, ShuffleWriter):
+                    yield from node.source.lane_reader(node.partition)
+                    return
+                # conflicting-spec fallback: full stream, filtered per chunk
+                for chunk in node.source.reader():
+                    yield partition_select(
+                        chunk, node.partition_keys, node.partition,
+                        node.num_partitions, self.ctx.engine)
+                return
             yield from node.source.reader()
             return
         assert node.batch is not None, f"edge {node.tag} not materialized"
+        if node.partition is not None:  # barrier mode: filter to the lane
+            from .shuffle import partition_select
+
+            yield from self._emit(partition_select(
+                node.batch, node.partition_keys, node.partition,
+                node.num_partitions, self.ctx.engine))
+            return
         yield from self._emit(node.batch)

@@ -101,11 +101,23 @@ def _load_chunk(path: str) -> VectorBatch:
 
 
 class Exchange:
-    """One producer, N replaying readers, bounded memory via spill."""
+    """One producer, N replaying readers, bounded memory via spill.
 
-    def __init__(self, tag: str, cfg: ExchangeConfig):
+    ``buffer_rows``/``buffer_bytes`` default to the query-wide budgets in
+    ``cfg`` but can be overridden per exchange — the shuffle service gives
+    every partition lane a full edge budget of its own (the Tez
+    per-partition buffer model: a partitioned edge may buffer up to N× the
+    configured ``exchange.buffer_*`` before lanes spill)."""
+
+    def __init__(self, tag: str, cfg: ExchangeConfig,
+                 buffer_rows: Optional[int] = None,
+                 buffer_bytes: Optional[int] = None):
         self.tag = tag
         self.cfg = cfg
+        self.buffer_rows = int(buffer_rows if buffer_rows is not None
+                               else cfg.buffer_rows)
+        self.buffer_bytes = int(buffer_bytes if buffer_bytes is not None
+                                else cfg.buffer_bytes)
         self._slots: List[object] = []
         self._cond = threading.Condition()
         self._closed = False
@@ -134,16 +146,16 @@ class Exchange:
             if self._closed:
                 return
             overflow = n > 0 and (
-                self._mem_rows + n > self.cfg.buffer_rows
-                or self._mem_bytes + nbytes > self.cfg.buffer_bytes
+                self._mem_rows + n > self.buffer_rows
+                or self._mem_bytes + nbytes > self.buffer_bytes
             )
             if overflow and not self.cfg.spill:
                 raise MemoryPressureError(
                     f"exchange {self.tag} over budget "
                     f"({self._mem_rows + n} rows / "
                     f"{self._mem_bytes + nbytes} bytes buffered, "
-                    f"budget {self.cfg.buffer_rows} rows / "
-                    f"{self.cfg.buffer_bytes} bytes) and exchange.spill is off"
+                    f"budget {self.buffer_rows} rows / "
+                    f"{self.buffer_bytes} bytes) and exchange.spill is off"
                 )
             if overflow:
                 # unique per process + exchange instance: vertex tags (v1,

@@ -811,24 +811,37 @@ class Executor:
     # ---- aggregate -------------------------------------------------------------
     def _stream_aggregate(self, node: P.Aggregate):
         mergeable = node.grouping_sets is None and all(
-            s.fn in _FOLD_FN and not s.distinct for s in node.aggs
+            s.fn in _FOLD_FN for s in node.aggs
         )
         if not mergeable:
             yield from self._emit(self._aggregate_materialized(node))
             return
         # incremental-merge: per-morsel partial aggregates fold into a
-        # running state (keys + partial columns), never one giant concat
+        # running state (keys + partial columns), never one giant concat.
+        # DISTINCT aggregates stream too: each spec keeps an incremental
+        # per-group hash set — the unique (group keys, value) rows seen so
+        # far — and the final fn (COUNT/SUM/MIN/MAX) evaluates over that
+        # set, instead of materializing the whole input (under the
+        # partitioned shuffle service that set is per-partition, so the
+        # state a clone holds is its lane's share of the value domain).
         keys = node.group_keys
+        plain = [s for s in node.aggs if not s.distinct]
+        distincts = [s for s in node.aggs if s.distinct]
         state: Optional[VectorBatch] = None
         pending: List[VectorBatch] = []
         pending_rows = 0
+        dstate: Dict[str, Optional[VectorBatch]] = {s.out_name: None
+                                                    for s in distincts}
+        dpending: Dict[str, List[VectorBatch]] = {s.out_name: []
+                                                  for s in distincts}
+        dpending_rows: Dict[str, int] = {s.out_name: 0 for s in distincts}
         first_chunk: Optional[VectorBatch] = None
         for chunk in self.stream(node.input):
             if first_chunk is None:
                 first_chunk = chunk
             if chunk.num_rows == 0:
                 continue
-            part = self._aggregate_once(chunk, keys, node.aggs)
+            part = self._aggregate_once(chunk, keys, plain)
             pending.append(part)
             pending_rows += part.num_rows
             # doubling schedule: merge once pending outgrows the running
@@ -837,15 +850,78 @@ class Executor:
             threshold = max(state.num_rows if state is not None else 0,
                             self.batch_rows, 4096)
             if pending_rows >= threshold:
-                state = self._merge_partials(state, pending, keys, node.aggs)
+                state = self._merge_partials(state, pending, keys, plain)
                 pending, pending_rows = [], 0
+            for s in distincts:
+                vals = eval_expr(s.arg, chunk, self.ctx)
+                d = VectorBatch({**{k: chunk.cols[k] for k in keys},
+                                 "__dv__": vals})
+                valid = ~_is_null_mask(vals)
+                if vals.dtype.kind == "f":
+                    valid &= ~np.isnan(vals)
+                d = _dedupe(d.select(valid), keys + ["__dv__"])
+                if d.num_rows == 0:
+                    continue
+                dpending[s.out_name].append(d)
+                dpending_rows[s.out_name] += d.num_rows
+                ds = dstate[s.out_name]
+                dthresh = max(ds.num_rows if ds is not None else 0,
+                              self.batch_rows, 4096)
+                if dpending_rows[s.out_name] >= dthresh:
+                    parts = ([ds] if ds is not None else []) \
+                        + dpending[s.out_name]
+                    dstate[s.out_name] = _dedupe(VectorBatch.concat(parts),
+                                                 keys + ["__dv__"])
+                    dpending[s.out_name] = []
+                    dpending_rows[s.out_name] = 0
         if pending:
-            state = self._merge_partials(state, pending, keys, node.aggs)
+            state = self._merge_partials(state, pending, keys, plain)
         if state is None:
             # empty input: global aggregates still produce their single row
             src = first_chunk if first_chunk is not None else VectorBatch({})
-            state = self._aggregate_once(src, keys, node.aggs)
+            state = self._aggregate_once(src, keys, plain)
+        for s in distincts:
+            parts = ([dstate[s.out_name]] if dstate[s.out_name] is not None
+                     else []) + dpending[s.out_name]
+            dstate[s.out_name] = (_dedupe(VectorBatch.concat(parts),
+                                          keys + ["__dv__"])
+                                  if parts else None)
+        if distincts:
+            state = self._attach_distinct_counts(state, keys, distincts,
+                                                 dstate)
         yield from self._emit(state.project(node.output_names()))
+
+    def _attach_distinct_counts(self, state: VectorBatch, keys: List[str],
+                                distincts, dstate) -> VectorBatch:
+        """Evaluate each DISTINCT spec's fn (COUNT/SUM/MIN/MAX) over its
+        per-group hash-set state, aligned to the running state's group rows
+        (COUNT 0 / others NULL for groups whose every value was NULL)."""
+        out = dict(state.cols)
+        ng = state.num_rows if keys else 1
+        for s in distincts:
+            plain = P.AggSpec(s.fn, s.arg, False, s.out_name)
+            d = dstate[s.out_name]
+            if d is None or d.num_rows == 0 or ng == 0:
+                codes = np.empty(0, dtype=np.int64)
+                vals = np.empty(0)
+            elif keys:
+                # map each unique (keys, value) row to its state group row;
+                # every distinct-state group also exists in the running
+                # state (its rows flowed through the plain fold), so all
+                # codes match — the guard covers NaN-keyed groups
+                pairs = [_factorize_pair(state.cols[k], d.cols[k])
+                         for k in keys]
+                sc, dc = _combine_codes(pairs)
+                order = np.argsort(sc, kind="stable")
+                pos = np.searchsorted(sc[order], dc)
+                rows = order[np.minimum(pos, ng - 1)]
+                found = sc[rows] == dc
+                codes, vals = rows[found], d.cols["__dv__"][found]
+            else:
+                codes = np.zeros(d.num_rows, dtype=np.int64)
+                vals = d.cols["__dv__"]
+            out[s.out_name] = _agg_column(plain, vals, codes, ng)
+        return VectorBatch(out)
 
     def _merge_partials(self, state: Optional[VectorBatch],
                         partials: List[VectorBatch], keys: List[str],
@@ -976,6 +1052,14 @@ class Executor:
 # ---------------------------------------------------------------------------
 # helpers
 # ---------------------------------------------------------------------------
+def _dedupe(batch: VectorBatch, cols: List[str]) -> VectorBatch:
+    """Unique rows of ``batch`` over ``cols`` (first occurrence kept)."""
+    if batch.num_rows == 0:
+        return batch
+    _, first = _group_codes(batch, cols)
+    return batch.take(np.sort(first))
+
+
 def _expand_matches(lo, counts, order):
     total = int(counts.sum())
     if total == 0:

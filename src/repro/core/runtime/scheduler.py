@@ -209,7 +209,7 @@ class QueryTask:
         self._progress: Dict[str, object] = {
             "pool": None, "vertices_total": 0, "vertices_done": 0,
             "rows_spilled": 0, "bytes_spilled": 0, "spill": {},
-            "peak_buffered_rows": 0,
+            "peak_buffered_rows": 0, "lanes": {},
         }
 
     # ------------------------------------------------------------- state
@@ -273,6 +273,8 @@ class QueryTask:
         with self._cond:
             out = dict(self._progress)
             out["spill"] = {k: dict(v) for k, v in out["spill"].items()}
+            out["lanes"] = {k: [dict(l) for l in v]
+                            for k, v in out["lanes"].items()}
             out["state"] = self._state
             out["queue_wait_ms"] = (
                 round((self.admitted_at - self.submitted_at) * 1e3, 3)
@@ -303,6 +305,12 @@ class QueryTask:
                     "rows": int(stats.get("spilled_rows", 0)),
                     "bytes": int(stats.get("spilled_bytes", 0)),
                 }
+                if stats.get("lanes"):
+                    # per-lane rows/bytes/spill of a partitioned shuffle
+                    # edge: skew across lanes is visible while running
+                    self._progress["lanes"][vid] = [
+                        dict(lane) for lane in stats["lanes"]
+                    ]
                 self._progress["rows_spilled"] = sum(
                     v["rows"] for v in self._progress["spill"].values())
                 self._progress["bytes_spilled"] = sum(
