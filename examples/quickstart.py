@@ -245,6 +245,36 @@ def main():
           f"{ev.peak_active_readers})")
     hs.result(30)
 
+    print("\n== serving tier: shared scans + result-cache serving (PR 6) ==")
+    # high-concurrency serving: repeated dashboard queries are answered
+    # straight from the warehouse-wide result cache — a hit skips WLM
+    # admission and execution entirely (`admission_skipped` below) — while
+    # distinct-but-overlapping queries attach to an in-flight scan's
+    # exchange instead of re-reading the table through LLAP
+    dash = """SELECT i_category, SUM(ss_price) AS rev FROM store_sales, item
+              WHERE ss_item_sk = i_item_sk GROUP BY i_category"""
+    conn.execute(dash)  # first execution fills the cache
+    hd = conn.execute_async(dash)  # repeat: served without a WLM slot
+    hd.result(30)
+    print("repeat served without admission:",
+          hd.info.get("admission_skipped"),
+          f"(cache_hit={hd.info.get('cache_hit')})")
+    # concurrent unique variants (dim-side filters only) share one fact
+    # scan: the second query's scan vertex attaches to the first's exchange
+    share = db.connect(warehouse=conn.warehouse, semijoin_reduction=False,
+                       result_cache=False,
+                       **{"debug_vertex_delay_s": 0.05})
+    hs1 = share.execute_async(dash + " ORDER BY rev DESC")
+    hs2 = share.execute_async(dash + " ORDER BY rev")
+    hs1.result(30), hs2.result(30)
+    stats = conn.server_stats()  # warehouse-wide serving counters
+    print("result cache:", {k: stats["result_cache"][k]
+                            for k in ("hits", "misses", "bytes_used")})
+    print("shared scans:", {k: stats["shared_scans"][k]
+                            for k in ("published", "attached", "fallbacks")})
+    print("admission queues:", stats["admission_queues"])
+    share.close()
+
     print("\n== EXPLAIN ANALYZE: per-stage pipeline timings ==")
     cur.execute("EXPLAIN ANALYZE " + q.replace("?", "3", 1).replace("?", "6"))
     for (line,) in cur.fetchall():

@@ -87,6 +87,14 @@ class Connection:
         return {name: cat.connector
                 for name, cat in self._wh.catalogs.items()}
 
+    def server_stats(self) -> dict:
+        """Serving-tier counters for the shared warehouse: result-cache
+        hits/misses/evictions/bytes, shared-scan publishes/attaches, and
+        per-pool admission queue depths.  Counters are warehouse-wide
+        (every connection sees the same serving tier)."""
+        self._check_open()
+        return self._wh.serving_stats()
+
     def prepare(self, sql: str) -> PreparedStatement:
         """Parse + bind + optimize ``sql`` once; re-executions reuse the
         cached plan (see ``repro.core.pipeline.PlanCache``)."""

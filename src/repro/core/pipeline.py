@@ -299,7 +299,8 @@ class CacheProbeStage(Stage):
             for n in P.walk_plan(q.plan)
         )
         q.cacheable = bool(
-            cfg["result_cache"] and is_cacheable(q.stmt) and q.tables
+            cfg["result_cache"] and cfg.get("serving.result_cache", True)
+            and is_cacheable(q.stmt) and q.tables
             and not uses_catalog
         )
         if not q.cacheable:
@@ -476,6 +477,10 @@ class ExecuteStage(Stage):
             batch = sched.execute(q.dag, ctx, on_vertex_done=on_vertex,
                                   on_root_chunk=on_root_chunk)
             s._persist_runtime_stats(q.plan, ctx)
+            if any(sched.shared_scan_stats.values()):
+                q.info["shared_scans"] = dict(sched.shared_scan_stats)
+                if q.task is not None:
+                    q.task.note_shared_scans(sched.shared_scan_stats)
             return batch
         except MemoryPressureError as mem_err:
             mode = cfg["reopt_mode"]
@@ -533,6 +538,16 @@ class ExecuteStage(Stage):
 DEFAULT_STAGES: Tuple[Stage, ...] = (
     ParseStage(), BindStage(), CacheProbeStage(), MVRewriteStage(),
     OptimizeStage(), CompileStage(), ExecuteStage(),
+)
+
+# serving tier: the async scheduler probes the result cache *before* WLM
+# admission (a hit is served without a slot and without execution), then
+# resumes the same QueryContext through the remaining stages on a miss
+PRE_ADMISSION_STAGES: Tuple[Stage, ...] = (
+    ParseStage(), BindStage(), CacheProbeStage(),
+)
+POST_PROBE_STAGES: Tuple[Stage, ...] = (
+    MVRewriteStage(), OptimizeStage(), CompileStage(), ExecuteStage(),
 )
 
 def plan_only_stages(runtime_overrides: Optional[dict] = None):

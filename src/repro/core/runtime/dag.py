@@ -296,6 +296,10 @@ class DAGScheduler:
         self.injected_delays = injected_delays or {}
         self.vertex_delay = vertex_delay
         self.metrics: List[VertexMetrics] = []
+        # serving tier: per-query shared-scan activity (ExecuteStage copies
+        # this into q.info, surfaced through poll()/server_stats())
+        self.shared_scan_stats = {"published": 0, "attached": 0,
+                                  "fallbacks": 0}
 
     def execute(self, dag: TaskDAG, ctx: ExecContext,
                 on_vertex_done: Optional[Callable] = None,
@@ -365,6 +369,35 @@ class DAGScheduler:
                 ex.retain = readers[vid] != 1 or vid == dag.root
         lock = threading.Lock()
         errors: List[BaseException] = []
+        # serving tier: scan vertices whose output may be shared with (or
+        # attached from) a concurrent query's identical scan
+        registry = getattr(ctx, "shared_scans", None)
+        shareable = self._shareable_vertices(dag, ctx, lane_spec) \
+            if registry is not None else {}
+        published: Dict[str, object] = {}  # vid -> registry key
+
+        def stream_attached(handle, vid, out_ex) -> Optional[int]:
+            """Replay a published exchange into this vertex's own edge.
+
+            Returns the row count, or None when the producer failed before
+            we emitted anything — the caller falls back to a fresh scan."""
+            rows = 0
+            try:
+                for chunk in handle.reader():
+                    if cancel_token is not None:
+                        cancel_token.check()
+                    rows += chunk.num_rows
+                    out_ex.put(chunk)
+                    if vid == dag.root and on_root_chunk is not None:
+                        on_root_chunk(chunk)
+            except BaseException:
+                if rows == 0 and not (cancel_token is not None
+                                      and cancel_token.is_set()):
+                    return None
+                raise
+            finally:
+                handle.release()
+            return rows
 
         def run_vertex(vid: str) -> None:
             out_ex = exchanges[vid]
@@ -379,13 +412,34 @@ class DAGScheduler:
                 for mn in _walk_materialized(v.plan):
                     mn.source = exchanges[mn.tag]
                 t0 = time.perf_counter()
-                ex = _VertexExecutor(ctx)
-                rows = 0
-                for chunk in ex.stream(v.plan):
-                    rows += chunk.num_rows
-                    out_ex.put(chunk)
-                    if vid == dag.root and on_root_chunk is not None:
-                        on_root_chunk(chunk)
+                rows: Optional[int] = None
+                if vid in shareable:
+                    key, table = shareable[vid]
+                    handle = registry.attach(key)
+                    if handle is not None:
+                        rows = stream_attached(handle, vid, out_ex)
+                        if rows is None:
+                            registry.note_fallback()
+                            with lock:
+                                self.shared_scan_stats["fallbacks"] += 1
+                        else:
+                            with lock:
+                                self.shared_scan_stats["attached"] += 1
+                    elif registry.publish(key, table, out_ex):
+                        # keep every chunk for late attachers; the registry
+                        # owns discard once consumers are attached
+                        out_ex.retain = True
+                        with lock:
+                            published[vid] = key
+                            self.shared_scan_stats["published"] += 1
+                if rows is None:
+                    ex = _VertexExecutor(ctx)
+                    rows = 0
+                    for chunk in ex.stream(v.plan):
+                        rows += chunk.num_rows
+                        out_ex.put(chunk)
+                        if vid == dag.root and on_root_chunk is not None:
+                            on_root_chunk(chunk)
                 out_ex.close()
                 dt = time.perf_counter() - t0
                 st = out_ex.stats()
@@ -414,9 +468,66 @@ class DAGScheduler:
                 raise self._primary_error(errors)
             return exchanges[dag.root].read_all()
         finally:
-            for ex in exchanges.values():
-                ex.discard()
-            excfg.cleanup()
+            # published exchanges may still feed attached consumers of other
+            # queries: retire them through the registry, which discards when
+            # the last consumer releases; the scratch dir (spilled chunks)
+            # is likewise cleaned up only after the last of them releases
+            state = {"held": 1}
+
+            def released_one() -> None:
+                with lock:
+                    state["held"] -= 1
+                    last = state["held"] == 0
+                if last:
+                    excfg.cleanup()
+
+            for vid, ex in exchanges.items():
+                key = published.get(vid)
+                if key is None:
+                    ex.discard()
+                else:
+                    with lock:
+                        state["held"] += 1
+                    if registry.retire(key, ex, on_final=released_one):
+                        released_one()
+            released_one()
+
+    @staticmethod
+    def _shareable_vertices(dag: TaskDAG, ctx: ExecContext,
+                            lane_spec) -> Dict[str, tuple]:
+        """Scan vertices eligible for the serving tier's shared-scan path.
+
+        A vertex qualifies when it is a pure fused scan pipeline — exactly
+        one managed-table :class:`~..optimizer.plan.Scan`, no federated
+        scans, no runtime-filter inputs, no upstream edges — writing a
+        plain (unpartitioned) exchange.  The registry key combines the
+        vertex plan's ``key()`` (table, columns, pushed/partition filters,
+        min write-ID), the query parameters and the table's ``(hwm,
+        invalid)`` write-ID state, so only transactionally identical scans
+        ever share an exchange."""
+        out: Dict[str, tuple] = {}
+        for vid, v in dag.vertices.items():
+            if v.deps or (vid in lane_spec and vid != dag.root):
+                continue
+            nodes = list(P.walk_plan(v.plan))
+            scans = [n for n in nodes if isinstance(n, P.Scan)]
+            if len(scans) != 1:
+                continue
+            if any(isinstance(n, (P.FederatedScan, MaterializedNode))
+                   for n in nodes):
+                continue
+            sc = scans[0]
+            if getattr(sc.table, "handler", None) or sc.runtime_filters:
+                continue
+            try:
+                wl = ctx.widlist(sc.table.name)
+            except Exception:
+                continue
+            key = (v.plan.key(), repr(ctx.params), ctx.engine,
+                   bool(ctx.config.get("keep_acid_cols")),
+                   sc.table.name, wl.hwm, frozenset(wl.invalid))
+            out[vid] = (key, sc.table.name)
+        return out
 
     @staticmethod
     def _primary_error(errors: List[BaseException]) -> BaseException:

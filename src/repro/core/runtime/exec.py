@@ -55,6 +55,8 @@ class ExecContext:
         self.handlers = handlers or {}
         self.params = tuple(params)  # qmark placeholder values, by ordinal
         self.cancel_token = cancel_token  # CancelToken of an async handle
+        # serving tier: SharedScanRegistry when serving.shared_scans is on
+        self.shared_scans = None
         self.engine = self.config.get("engine", "auto")  # auto | pallas | ref
         self.op_stats: Dict[str, int] = {}  # plan key digest -> actual rows
         self.shared_keys: set = set()  # filled by shared-work optimizer (§4.5)
@@ -555,31 +557,43 @@ class Executor:
         pushed = (_qualify(node.pushed_filter, node.alias)
                   if node.pushed_filter is not None else None)
         yielded = False
-        for pvals, b in tbl.scan_chunks(
-            wid,
-            columns=want,
-            sarg_preds=[s for s in sargs if s.column not in pcols],
-            runtime_blooms=runtime_blooms or None,
-            partition_filter=part_filter,
-            io=self.ctx.io,
-            keep_acid_cols=keep_acid or node.min_writeid is not None,
-        ):
-            if node.min_writeid is not None:
-                # incremental MV rebuild: only rows above the build snapshot (§4.4)
-                b = b.select(b.cols[WRITEID_COL] > node.min_writeid)
-                if not keep_acid:
-                    b = b.drop_acid_cols()
-            b = qualify(b)
-            if pushed is not None and b.num_rows:
-                b = b.select(self._filter_mask(pushed, b))
-            if b.num_rows == 0:
-                if not yielded:
-                    yield b
+        try:
+            for pvals, b in tbl.scan_chunks(
+                wid,
+                columns=want,
+                sarg_preds=[s for s in sargs if s.column not in pcols],
+                runtime_blooms=runtime_blooms or None,
+                partition_filter=part_filter,
+                io=self.ctx.io,
+                keep_acid_cols=keep_acid or node.min_writeid is not None,
+            ):
+                if node.min_writeid is not None:
+                    # incremental MV rebuild: only rows above the build snapshot (§4.4)
+                    b = b.select(b.cols[WRITEID_COL] > node.min_writeid)
+                    if not keep_acid:
+                        b = b.drop_acid_cols()
+                b = qualify(b)
+                if pushed is not None and b.num_rows:
+                    b = b.select(self._filter_mask(pushed, b))
+                if b.num_rows == 0:
+                    if not yielded:
+                        yield b
+                        yielded = True
+                    continue
+                for chunk in b.iter_chunks(self.batch_rows):
+                    yield chunk
                     yielded = True
-                continue
-            for chunk in b.iter_chunks(self.batch_rows):
-                yield chunk
-                yielded = True
+        except OSError as exc:
+            # a concurrent DROP TABLE purged the data directory out from
+            # under this snapshot: fail cleanly (the exchange propagates the
+            # error to every consumer) instead of surfacing a partial scan
+            # as a bare file error
+            if not self.ctx.hms.table_exists(desc.name):
+                raise ExecError(
+                    f"table {desc.name} was dropped during an in-flight "
+                    f"scan; partial results discarded"
+                ) from exc
+            raise
         if not yielded:
             # schema-carrying empty batch; _empty_batch holds only data
             # columns, so directory-encoded partition columns are injected

@@ -202,6 +202,7 @@ class QueryTask:
         self.submitted_at = time.time()
         self.admitted_at: Optional[float] = None
         self.wlm = None                        # set by QueryScheduler.submit
+        self.serving_stats = None              # set by QueryScheduler.submit
         self._cond = threading.Condition()
         self._state = QUEUED
         self.result = None                     # QueryResult on SUCCEEDED
@@ -209,7 +210,7 @@ class QueryTask:
         self._progress: Dict[str, object] = {
             "pool": None, "vertices_total": 0, "vertices_done": 0,
             "rows_spilled": 0, "bytes_spilled": 0, "spill": {},
-            "peak_buffered_rows": 0, "lanes": {},
+            "peak_buffered_rows": 0, "lanes": {}, "shared_scans": {},
         }
 
     # ------------------------------------------------------------- state
@@ -282,6 +283,11 @@ class QueryTask:
             )
         if self.wlm is not None:
             out["pool_queue_depth"] = self.wlm.queue_depths()
+        if self.serving_stats is not None:
+            # warehouse-wide serving-tier counters (result-cache hit/miss/
+            # eviction, shared-scan attach/publish) alongside this query's
+            # own shared_scans progress entry
+            out["serving"] = self.serving_stats()
         return out
 
     # ------------------------------------------------------------- execution
@@ -293,6 +299,10 @@ class QueryTask:
         with self._cond:
             self._progress["vertices_total"] = total
             self._progress["vertices_done"] = 0
+
+    def note_shared_scans(self, stats: Dict[str, int]) -> None:
+        with self._cond:
+            self._progress["shared_scans"] = dict(stats)
 
     def note_vertex_done(self, vid: Optional[str] = None,
                          stats: Optional[Dict[str, int]] = None) -> None:
@@ -346,6 +356,7 @@ class QueryScheduler:
         qid = f"q{next(self.wh._qid)}"
         task = QueryTask(qid, sql, stmt, params, dict(session.config))
         task.wlm = self.wh.wlm
+        task.serving_stats = self.wh.serving_stats
         with self._lock:
             self._tasks[qid] = task
         self._pool.submit(self._run, session, task)
@@ -373,21 +384,39 @@ class QueryScheduler:
                 and isinstance(stmt.stmt, (A.Select, A.SetOp))
             )
             if executes_query:
-                # queries (and EXPLAIN ANALYZE, which runs one) queue behind
-                # WLM admission, then take the staged pipeline with the task
-                # threaded through for progress, cancellation, and streaming
-                slot = wlm.wait_admit(
-                    task.qid,
-                    task.config.get("user"),
-                    task.config.get("application"),
-                    cancel_token=task.cancel_token,
-                )
-                admitted = slot is not None
-                task.admitted_at = time.time()
-                task.note_pool(slot.pool if slot is not None else None)
-                task._set_state(ADMITTED)
-                task._set_state(RUNNING)
-                result = session._run_query_task(task, slot)
+                # serving tier: probe the result cache *before* admission —
+                # a repeated dashboard query is answered from cache without
+                # taking a WLM slot or executing anything
+                result, pre = session._probe_result_cache(task)
+                if result is not None:
+                    task.admitted_at = time.time()
+                    task._set_state(RUNNING)
+                else:
+                    # queries (and EXPLAIN ANALYZE, which runs one) queue
+                    # behind WLM admission, then take the staged pipeline
+                    # with the task threaded through for progress,
+                    # cancellation, and streaming.  If admission fails
+                    # while we hold a pending cache entry from the probe,
+                    # release the waiters queued behind it.
+                    try:
+                        slot = wlm.wait_admit(
+                            task.qid,
+                            task.config.get("user"),
+                            task.config.get("application"),
+                            cancel_token=task.cancel_token,
+                        )
+                    except BaseException:
+                        if (pre is not None and pre.cacheable
+                                and pre.filling):
+                            self.wh.result_cache.cancel_pending(
+                                pre.result_key)
+                        raise
+                    admitted = slot is not None
+                    task.admitted_at = time.time()
+                    task.note_pool(slot.pool if slot is not None else None)
+                    task._set_state(ADMITTED)
+                    task._set_state(RUNNING)
+                    result = session._run_query_task(task, slot, pre=pre)
             else:
                 # DML/DDL: single-statement transactions, no WLM admission
                 task.admitted_at = time.time()

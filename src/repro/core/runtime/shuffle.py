@@ -260,16 +260,36 @@ class ShuffleWriter:
 _MERGE_FOLD = _FOLD_FN
 
 
-def resolve_partition_count(cfg_value, est_rows: Optional[float]) -> int:
+# lane-payoff threshold for *scan-fed* consumers (BENCH_PR5 regression
+# fix): when the consumer's input is a pure scan pipeline, the single-lane
+# plan fuses the scan straight into the consumer vertex with no exchange at
+# all — fanning out then ADDS a routing hop, which only pays off once the
+# per-lane share of work is much larger than for consumers that already sit
+# behind a SHUFFLE edge
+AUTO_SCAN_FED_ROWS_PER_PARTITION = 262_144
+
+
+def resolve_partition_count(cfg_value, est_rows: Optional[float],
+                            rows_per_partition: int = AUTO_ROWS_PER_PARTITION
+                            ) -> int:
     """``shuffle.partitions``: an int, or ``auto`` (CBO-derived)."""
     if cfg_value in (None, "", 0, 1, "1"):
         return 1
     if cfg_value == "auto":
-        if not est_rows or est_rows <= AUTO_ROWS_PER_PARTITION:
+        if not est_rows or est_rows <= rows_per_partition:
             return 1
-        n = int(-(-est_rows // AUTO_ROWS_PER_PARTITION))  # ceil
+        n = int(-(-est_rows // rows_per_partition))  # ceil
         return max(1, min(n, auto_partition_cap()))
     return max(int(cfg_value), 1)
+
+
+def _scan_fed(node: P.PlanNode) -> bool:
+    """True when ``node``'s subtree is a pure scan pipeline (no pipeline
+    breaker below), i.e. a single-lane plan would fuse it into the consumer
+    vertex without any exchange."""
+    breakers = (P.Join, P.Aggregate, P.Sort, P.Union, P.WindowOp,
+                P.FederatedScan, P.ShuffleRead)
+    return not any(isinstance(n, breakers) for n in P.walk_plan(node))
 
 
 def _expandable_join(node: P.PlanNode) -> bool:
@@ -321,7 +341,15 @@ def expand_shuffle_partitions(plan: P.PlanNode, config: dict,
                 rows = cost_model.estimate(node.inputs[0]).rows
         except Exception:  # noqa: BLE001 - estimation must never break compile
             return 1
-        return resolve_partition_count("auto", rows)
+        # scan-fed consumers (aggregate/DISTINCT straight over a scan) pay
+        # for an exchange hop the single-lane plan doesn't have: demand a
+        # much larger per-lane share before fanning out (the BENCH_PR5
+        # partitioned-DISTINCT regression)
+        per_lane = AUTO_ROWS_PER_PARTITION
+        if not isinstance(node, P.Join) and _scan_fed(node.inputs[0]):
+            per_lane = AUTO_SCAN_FED_ROWS_PER_PARTITION
+        return resolve_partition_count("auto", rows,
+                                       rows_per_partition=per_lane)
 
     def expand(node: P.PlanNode) -> Optional[P.PlanNode]:
         if isinstance(node, P.Join) and _expandable_join(node):

@@ -9,10 +9,19 @@ until the owning pool claims it.
 
 Admission has two entry points: :meth:`WorkloadManager.admit` (admit or
 raise — the synchronous execution path) and
-:meth:`WorkloadManager.wait_admit` (queue on a condition variable until a
-running query releases pool capacity — the async scheduler's path, woken
-by :meth:`WorkloadManager.release` and responsive to the handle's
+:meth:`WorkloadManager.wait_admit` (queue until a running query releases
+pool capacity — the async scheduler's path, woken by
+:meth:`WorkloadManager.release` and responsive to the handle's
 ``CancelToken`` while queued).
+
+Admission state is **sharded per pool** (lock striping): every pool keeps
+its own condition variable and FIFO queue, so hundreds of concurrent
+``execute_async`` handles queued on different pools don't convoy behind
+one global condvar.  The small amount of cross-pool state — slot table,
+pool load counters, borrow rotation — lives under a separate short-hold
+lock (``_lock``); the ordering discipline is shard lock first, then
+``_lock``, and :meth:`release` notifies shards only after dropping
+``_lock``, so the two layers never deadlock.
 """
 from __future__ import annotations
 
@@ -97,17 +106,30 @@ class QuerySlot:
     cancel_token: Optional[object] = None  # CancelToken of an async handle
 
 
+class _PoolShard:
+    """Per-pool admission stripe: its own condvar + FIFO ticket queue."""
+
+    __slots__ = ("lock", "cond", "waiting")
+
+    def __init__(self):
+        self.lock = threading.RLock()
+        self.cond = threading.Condition(self.lock)
+        self.waiting: Deque[object] = deque()
+
+
 class WorkloadManager:
     def __init__(self, hms: Metastore, total_executors: int = 16):
         self.hms = hms
         self.total_executors = total_executors
+        # cross-pool state: slot table, load counters, borrow rotation.
+        # Held briefly; never while waiting.  Lock order: shard then _lock.
         self._lock = threading.RLock()
-        self._capacity_freed = threading.Condition(self._lock)
         self._active: Optional[ResourcePlan] = None
         self._running: Dict[str, QuerySlot] = {}
         self._pool_load: Dict[str, int] = {}
-        # per-pool FIFO admission queues (fair queueing; see wait_admit)
-        self._waiting: Dict[str, Deque[object]] = {}
+        # per-pool admission shards (fair FIFO queueing; see wait_admit)
+        self._shards: Dict[Optional[str], _PoolShard] = {}
+        self._shards_lock = threading.Lock()
         # round-robin rotation among pool heads contending for borrowed
         # idle capacity: the pool that borrowed last yields to the next
         # contending pool in cyclic (sorted-name) order
@@ -116,6 +138,13 @@ class WorkloadManager:
         if plan_dict:
             self._active = ResourcePlan.from_dict(plan_dict)
             self._pool_load = {p: 0 for p in self._active.pools}
+
+    def _shard(self, pool: Optional[str]) -> _PoolShard:
+        with self._shards_lock:
+            shard = self._shards.get(pool)
+            if shard is None:
+                shard = self._shards[pool] = _PoolShard()
+            return shard
 
     # ------------------------------------------------------------- plan DDL
     def create_plan(self, name: str) -> None:
@@ -246,7 +275,13 @@ class WorkloadManager:
         borrower may proceed.  With several, the grant rotates cyclically
         (sorted pool order) starting after the pool that borrowed last —
         arrival at the shared condition variable no longer decides."""
-        contenders = sorted(p for p, q in self._waiting.items() if q)
+        # len() of another shard's deque is read without its lock — the
+        # rotation is a fairness heuristic, and a stale length only shifts
+        # whose turn it is by one grant
+        with self._shards_lock:
+            shards = list(self._shards.items())
+        contenders = sorted(p for p, s in shards
+                            if p is not None and s.waiting)
         if len(contenders) <= 1 or pool not in contenders:
             return True
         last = self._borrow_last
@@ -274,25 +309,25 @@ class WorkloadManager:
         """
         deadline = (time.monotonic() + timeout) if timeout is not None else None
         ticket = object()
-        with self._capacity_freed:
+        pool = self.route(user, application)
+        shard = self._shard(pool)
+        with shard.cond:
             if cancel_token is not None:
                 cancel_token.check()
-            pool = self.route(user, application)
             # fast path only when nobody is queued for the routed pool —
             # otherwise a new arrival could race the queue head to a slot
             # that was freed between the release and the head's wakeup
-            if not self._waiting.get(pool):
+            if not shard.waiting:
                 slot, saturated = self.try_admit(query_id, user, application,
                                                  cancel_token)
                 if not saturated:
                     return slot
-            queue = self._waiting.setdefault(pool, deque())
-            queue.append(ticket)
+            shard.waiting.append(ticket)
             try:
                 while True:
                     if cancel_token is not None:
                         cancel_token.check()
-                    if queue[0] is ticket:
+                    if shard.waiting[0] is ticket:
                         slot, saturated = self.try_admit(
                             query_id, user, application, cancel_token)
                         if not saturated:
@@ -306,24 +341,24 @@ class WorkloadManager:
                                 f"admission"
                             )
                         wait = min(wait, remaining)
-                    self._capacity_freed.wait(wait)
+                    shard.cond.wait(wait)
             finally:
                 try:
-                    queue.remove(ticket)
+                    shard.waiting.remove(ticket)
                 except ValueError:  # pragma: no cover - defensive
                     pass
-                if not queue:
-                    self._waiting.pop(pool, None)
                 # the next-in-line head (if any) probes immediately
-                self._capacity_freed.notify_all()
+                shard.cond.notify_all()
 
     def queue_depths(self) -> Dict[str, int]:
         """Admission queue depth per pool (for ``QueryHandle.poll()``
         diagnostics: which pools have unplaceable queries right now)."""
-        with self._lock:
-            out = {p: 0 for p in (self._active.pools if self._active else ())}
-            out.update({p: len(q) for p, q in self._waiting.items()})
-            return out
+        with self._shards_lock:
+            shards = list(self._shards.items())
+        out = {p: 0 for p in (self._active.pools if self._active else ())}
+        out.update({p: len(s.waiting) for p, s in shards
+                    if p is not None and s.waiting})
+        return out
 
     def executors_for(self, slot: Optional[QuerySlot]) -> int:
         if slot is None or self._active is None:
@@ -362,10 +397,21 @@ class WorkloadManager:
             raise QueryKilledError(f"query {query_id} killed by trigger")
 
     def release(self, query_id: str) -> None:
-        with self._capacity_freed:
+        with self._lock:
             slot = self._running.pop(query_id, None)
             if slot is not None:
                 charged = slot.metrics.get("charged_pool", slot.pool)
                 if charged in self._pool_load and self._pool_load[charged] > 0:
                     self._pool_load[charged] -= 1
-                self._capacity_freed.notify_all()
+        if slot is None:
+            return
+        # wake waiters *after* dropping _lock (shard-then-_lock ordering).
+        # Freed capacity in one pool can admit another pool's head via
+        # borrowing, so every shard with waiters is notified; the shards'
+        # 0.05s poll backstop covers any shard created concurrently.
+        with self._shards_lock:
+            shards = list(self._shards.values())
+        for shard in shards:
+            with shard.cond:
+                if shard.waiting:
+                    shard.cond.notify_all()

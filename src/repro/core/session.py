@@ -38,8 +38,10 @@ from .federation.jdbc import JdbcHandler
 from .federation.memtable import MemTableHandler
 from .metastore import Metastore, TxnAborted, WriteConflict
 from .optimizer import plan as P
-from .optimizer.result_cache import QueryResultCache
+from .serving import ResultCacheServer, SharedScanRegistry
 from .pipeline import (
+    POST_PROBE_STAGES,
+    PRE_ADMISSION_STAGES,
     PlanCache,
     QueryContext,
     QueryPipeline,
@@ -123,6 +125,15 @@ DEFAULT_CONFIG = {
     "federation.push_aggregate": True,
     "federation.push_limit": True,
     "federation.splits": 4,
+    # serving tier (ROADMAP item 3): shared scans attach concurrent queries
+    # to an in-flight identical scan's exchange instead of re-reading
+    # through LLAP; the serving result cache (byte-bounded, LRFU-evicted,
+    # write-ID invalidated; see Warehouse(result_cache_bytes=...)) lets the
+    # async scheduler answer repeated dashboard queries without admission
+    # or execution.  Both default on; benchmarks flip them off for the
+    # serving-tier-off baseline.
+    "serving.shared_scans": True,
+    "serving.result_cache": True,
     # debug/test instrumentation: sleep this long at each DAG vertex, to make
     # concurrency observable (admission queueing, cancel, streaming)
     "debug_vertex_delay_s": 0.0,
@@ -150,7 +161,8 @@ class Warehouse:
     """Cluster-scoped state (one per deployment)."""
 
     def __init__(self, warehouse_dir: str, llap_cache_bytes: int = 256 << 20,
-                 llap_executors: int = 4, query_workers: int = 8):
+                 llap_executors: int = 4, query_workers: int = 8,
+                 result_cache_bytes: int = 64 << 20):
         self.dir = warehouse_dir
         os.makedirs(warehouse_dir, exist_ok=True)
         self.hms = Metastore(warehouse_dir)
@@ -163,11 +175,23 @@ class Warehouse:
         # federated catalogs (§6): whole external systems mounted at once,
         # re-instantiated from metastore persistence on reopen
         self.catalogs = CatalogRegistry(self.hms)
-        self.result_cache = QueryResultCache()
+        # serving tier: byte-bounded LRFU result cache + shared-scan registry
+        self.result_cache = ResultCacheServer(max_bytes=result_cache_bytes)
+        self.shared_scans = SharedScanRegistry()
         self.plan_cache = PlanCache()
         self.wlm = WorkloadManager(self.hms, total_executors=llap_executors)
         self._qid = itertools.count()
         self.scheduler = QueryScheduler(self, max_workers=query_workers)
+
+    def serving_stats(self) -> Dict[str, dict]:
+        """Serving-tier counters (result cache, shared scans, admission),
+        surfaced through ``QueryHandle.poll()`` and
+        ``Connection.server_stats()``."""
+        return {
+            "result_cache": self.result_cache.stats_snapshot(),
+            "shared_scans": self.shared_scans.stats_snapshot(),
+            "admission_queues": self.wlm.queue_depths(),
+        }
 
     def resolve_handler(self, name: Optional[str]):
         """Resolve a TableDesc.handler reference: either a globally
@@ -193,6 +217,7 @@ class Warehouse:
         self.scheduler.shutdown()  # cancels in-flight async handles
         self.llap.shutdown()
         self.result_cache.invalidate_all()
+        self.shared_scans.invalidate_all()
         self.plan_cache.invalidate_all()
 
 
@@ -298,6 +323,9 @@ class Session:
             self.hms.drop_table(stmt.name)
             self.wh.result_cache.invalidate_all()
             self.wh.plan_cache.invalidate_all()
+            # stop new shared-scan attachments; consumers already attached
+            # replay exchange-owned chunks and are unaffected by the purge
+            self.wh.shared_scans.invalidate_table(stmt.name)
             if not desc.handler:
                 # managed table: purge the LLAP cache and the data files, so
                 # a table re-created under the same name never scans the old
@@ -418,7 +446,31 @@ class Session:
         self.last_info = q.info
         return QueryResult(q.batch, q.info)
 
-    def _run_query_task(self, task: QueryTask, slot) -> QueryResult:
+    def _probe_result_cache(self, task: QueryTask):
+        """Serving-tier pre-admission probe (run by the async scheduler).
+
+        Parses and binds the statement, then probes the result cache.  On a
+        hit the query is finished — served without a WLM slot and without
+        execution.  Returns ``(QueryResult | None, QueryContext | None)``;
+        a non-None context on a miss carries the bound plan and any pending
+        cache entry into :meth:`_run_query_task` so the remaining stages
+        resume without re-probing (re-probing would deadlock behind our own
+        pending entry)."""
+        if isinstance(task.stmt, A.Explain):
+            return None, None  # EXPLAIN ANALYZE always executes
+        q = QueryContext(session=self, sql=task.sql, stmt=task.stmt,
+                         params=tuple(task.params), config=self.config,
+                         task=task, qid=task.qid,
+                         cancel_token=task.cancel_token)
+        QueryPipeline(self, stages=PRE_ADMISSION_STAGES).run(q)
+        if not q.finished:
+            return None, q
+        q.info["admission_skipped"] = True
+        self.last_info = q.info
+        return QueryResult(q.batch, q.info), q
+
+    def _run_query_task(self, task: QueryTask, slot,
+                        pre: Optional[QueryContext] = None) -> QueryResult:
         """Async query entry point, called by the scheduler's worker with an
         already-admitted WLM slot (or None when no plan is active)."""
         if isinstance(task.stmt, A.Explain):
@@ -426,8 +478,13 @@ class Session:
             # like one; the scheduler only routes the analyze variant here
             return self._explain_analyze(task.stmt.stmt, task.sql,
                                          task.params, task=task, slot=slot)
-        q = self._run_pipeline(task.stmt, task.sql, task.params,
-                               task=task, slot=slot)
+        if pre is not None:
+            # resume the pre-admission QueryContext past the cache probe
+            pre.slot = slot
+            q = QueryPipeline(self, stages=POST_PROBE_STAGES).run(pre)
+        else:
+            q = self._run_pipeline(task.stmt, task.sql, task.params,
+                                   task=task, slot=slot)
         self.last_info = q.info
         return QueryResult(q.batch, q.info)
 
@@ -455,7 +512,7 @@ class Session:
 
     def _make_ctx(self, cfg, params: Tuple = (),
                   cancel_token=None) -> ExecContext:
-        return ExecContext(
+        ctx = ExecContext(
             self.hms,
             self.hms.get_snapshot(),
             config=cfg,
@@ -465,6 +522,9 @@ class Session:
             params=params,
             cancel_token=cancel_token,
         )
+        if cfg.get("serving.shared_scans", True):
+            ctx.shared_scans = self.wh.shared_scans
+        return ctx
 
     def _persist_runtime_stats(self, plan, ctx) -> None:
         fp = plan.digest()

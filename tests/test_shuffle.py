@@ -343,6 +343,50 @@ def test_auto_partitions_small_input_stays_single_lane(conn):
     assert "partitions=" not in text  # 4k rows < auto threshold
 
 
+def test_auto_scan_fed_aggregate_demands_larger_payoff(conn):
+    """BENCH_PR5 regression: ``auto`` declines fan-out for scan-fed
+    aggregates below the lane-payoff threshold (the exchange hop costs more
+    than the parallelism buys), while join-fed consumers at the same row
+    estimate still expand."""
+    from repro.core.optimizer import plan as P
+    from repro.core.optimizer.rules import Optimizer
+    from repro.core.runtime.shuffle import expand_shuffle_partitions
+    from repro.core.sql.binder import Binder
+    from repro.core.sql.parser import parse
+
+    hms = conn.warehouse.hms
+
+    class FakeEst:
+        def __init__(self, rows):
+            self.rows = rows
+
+    class FakeCM:
+        def __init__(self, rows):
+            self._rows = rows
+
+        def estimate(self, node):
+            return FakeEst(self._rows)
+
+    def plan_for(sql):
+        return Optimizer(hms).optimize(Binder(hms).bind(parse(sql)))
+
+    def lanes(sql, est_rows):
+        out = expand_shuffle_partitions(
+            plan_for(sql), {"shuffle.partitions": "auto"},
+            cost_model=FakeCM(est_rows))
+        return any(isinstance(n, P.ShuffleRead) for n in P.walk_plan(out))
+
+    scan_fed = "SELECT grp, SUM(v) FROM fact GROUP BY grp"
+    join_fed = ("SELECT cat, SUM(v) AS s FROM fact JOIN dim ON fk = dk"
+                " GROUP BY cat")
+    # 240k rows: several multiples of the generic per-lane share, but below
+    # the scan-fed payoff threshold -> the plain aggregate stays single-lane
+    assert not lanes(scan_fed, 240_000)
+    assert lanes(join_fed, 240_000)
+    # far past the payoff threshold the scan-fed aggregate fans out too
+    assert lanes(scan_fed, 2_000_000)
+
+
 def test_auto_partitions_derive_from_cbo_estimates():
     from repro.core.runtime.shuffle import (auto_partition_cap,
                                             resolve_partition_count)

@@ -413,6 +413,50 @@ def test_multi_consumer_exchange_still_replays(tmp_path):
     cfg.cleanup()
 
 
+def test_shared_scan_refcounted_retention(tmp_path):
+    """PR 6 shared scans: a published exchange outlives its producer while
+    consumers are attached; the last release discards spill files and runs
+    the deferred cleanup callback exactly once."""
+    import os
+
+    from repro.core.runtime.exchange import Exchange, ExchangeConfig
+    from repro.core.runtime.vector import VectorBatch
+    from repro.core.serving import SharedScanRegistry
+
+    cfg = ExchangeConfig({"exchange.buffer_rows": 64},
+                         scratch_dir=str(tmp_path / "scratch3"))
+    ex = Exchange("scan", cfg)  # retain defaults to True
+    reg = SharedScanRegistry()
+    assert reg.publish(("k",), "t", ex)
+    assert not reg.publish(("k",), "t", Exchange("dup", cfg))  # key taken
+    for i in range(5):
+        ex.put(VectorBatch({"x": np.arange(50) + i * 50}))
+    ex.close()
+    assert ex.spilled_chunks > 0
+    spilled = [s.path for s in ex._slots if type(s).__name__ == "_DiskSlot"]
+
+    h1 = reg.attach(("k",))
+    h2 = reg.attach(("k",))
+    assert h1 is not None and h2 is not None
+
+    cleaned = []
+    # producer tears down first: consumers still attached, so the registry
+    # keeps the exchange and defers the producer's cleanup
+    assert reg.retire(("k",), ex, on_final=lambda: cleaned.append(1)) is False
+    assert reg.attach(("k",)) is None  # retired: no NEW attachments
+    assert sum(b.num_rows for b in h1.reader()) == 250
+    h1.release()
+    h1.release()  # idempotent
+    assert cleaned == []  # one consumer still attached
+    assert all(os.path.exists(p) for p in spilled)
+    assert sum(b.num_rows for b in h2.reader()) == 250  # full replay
+    h2.release()
+    assert cleaned == [1]  # deferred cleanup ran exactly once
+    assert all(not os.path.exists(p) for p in spilled)  # discarded
+    assert reg.stats_snapshot()["live_entries"] == 0
+    cfg.cleanup()
+
+
 def test_forward_edges_freed_during_pipelined_query(conn):
     """End-to-end: a pipelined scan->project query runs with single-consumer
     edges freeing as they go, and results stay correct."""
