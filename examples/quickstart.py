@@ -280,6 +280,26 @@ def main():
     for (line,) in cur.fetchall():
         print(line)
 
+    print("\n== correctness toolkit (PR 7) ==")
+    # three analysis gates ship with the warehouse (`repro.analysis`):
+    #   * `python -m repro.analysis` — AST invariant lint (REP001..REP004:
+    #     declared config keys, cancellable reader loops, no new full-
+    #     materialization sites, lock hygiene); CI fails on any finding;
+    #   * REPRO_LOCKDEP=1 — every runtime lock becomes order-tracked and
+    #     the first AB/BA inversion raises LockOrderError deterministically;
+    #   * debug.validate_plans / REPRO_VALIDATE_PLANS — every compiled DAG
+    #     is structurally validated (edges, shuffle lanes, plan-cache
+    #     aliasing) before execution, as below:
+    checked = db.connect(warehouse=conn.warehouse,
+                         **{"debug.validate_plans": True})
+    rows = checked.execute(
+        "SELECT i_category, COUNT(*) AS n FROM store_sales, item"
+        " WHERE ss_item_sk = i_item_sk GROUP BY i_category"
+    ).fetchall()
+    print(f"validated plan executed: {len(rows)} groups "
+          f"(every DAG this session compiles is structure-checked)")
+    checked.close()
+
     conn.close()
 
 

@@ -1,0 +1,26 @@
+"""Warehouse correctness toolkit: invariant lint, lockdep, plan validator.
+
+Three analyzers, one entry point (``python -m repro.analysis``):
+
+* :mod:`repro.analysis.lint` — AST lint over the warehouse sources
+  enforcing repo-specific invariants REP001..REP004 (declared config keys,
+  cancellable reader loops, no new full-materialization sites, lock/
+  condition hygiene);
+* :mod:`repro.analysis.lockdep` — runtime lock-order sanitizer behind the
+  ``REPRO_LOCKDEP`` env var; lock factories used across the runtime;
+* :mod:`repro.analysis.plan_validator` — structural checks on every
+  compiled task DAG behind ``debug.validate_plans`` /
+  ``REPRO_VALIDATE_PLANS``.
+"""
+from .lint import CODES, Finding, lint_file, lint_paths, lint_source
+from .lockdep import (LockOrderError, TrackedCondition, TrackedLock,
+                      TrackedRLock, make_condition, make_lock, make_rlock)
+from .plan_validator import (PlanValidationError, check_dag,
+                             maybe_validate_dag, validate_dag)
+
+__all__ = [
+    "CODES", "Finding", "lint_file", "lint_paths", "lint_source",
+    "LockOrderError", "TrackedCondition", "TrackedLock", "TrackedRLock",
+    "make_condition", "make_lock", "make_rlock",
+    "PlanValidationError", "check_dag", "maybe_validate_dag", "validate_dag",
+]

@@ -1,0 +1,59 @@
+"""CLI for the invariant lint: ``python -m repro.analysis [paths...]``.
+
+With no arguments, lints the installed ``repro`` warehouse sources (the
+package directory itself).  Exits 0 when clean, 1 when any unsuppressed
+finding remains, 2 on usage/parse errors.  This is the CI lint gate.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from .lint import CODES, lint_paths
+
+
+def _default_paths():
+    import repro
+
+    # repro is a namespace package: use __path__, not __file__
+    return [os.path.abspath(p) for p in repro.__path__]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-specific invariant lint (REP001..REP004)",
+    )
+    ap.add_argument("paths", nargs="*",
+                    help="files or directories to lint "
+                         "(default: the repro package)")
+    ap.add_argument("--codes", action="store_true",
+                    help="list checker codes and exit")
+    args = ap.parse_args(argv)
+
+    if args.codes:
+        for code, desc in sorted(CODES.items()):
+            print(f"{code}  {desc}")
+        return 0
+
+    paths = args.paths or _default_paths()
+    for p in paths:
+        if not os.path.exists(p):
+            print(f"error: no such path: {p}", file=sys.stderr)
+            return 2
+    try:
+        findings = lint_paths(paths)
+    except SyntaxError as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
+    for f in findings:
+        print(f)
+    n = len(findings)
+    roots = ", ".join(paths)
+    print(f"repro.analysis: {n} finding(s) in {roots}")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

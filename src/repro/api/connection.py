@@ -9,7 +9,8 @@ from __future__ import annotations
 
 from typing import Optional, Sequence
 
-from ..core.session import DEFAULT_CONFIG, Warehouse, _VALID_ENGINES
+from ..core.config_keys import DEFAULT_CONFIG, check_value
+from ..core.session import Warehouse, _VALID_ENGINES
 from .cursor import Cursor, _params, _translate_error
 from .exceptions import InterfaceError, NotSupportedError, ProgrammingError
 from .handle import QueryHandle
@@ -24,7 +25,7 @@ def connect(warehouse_dir: Optional[str] = None, *,
     there and owned by the connection) or ``warehouse=`` (attach to an
     existing :class:`Warehouse`, e.g. to share one across connections).
     Remaining keyword arguments override session config defaults
-    (see ``repro.core.session.DEFAULT_CONFIG``), e.g. ``engine="ref"`` or
+    (declared once in ``repro.core.config_keys``), e.g. ``engine="ref"`` or
     ``result_cache=False``.
     """
     if (warehouse_dir is None) == (warehouse is None):
@@ -37,6 +38,10 @@ def connect(warehouse_dir: Optional[str] = None, *,
             f"unknown config option(s): {sorted(unknown)}; "
             f"valid options: {sorted(DEFAULT_CONFIG)}"
         )
+    for name, value in config.items():
+        complaint = check_value(name, value)
+        if complaint is not None:
+            raise ProgrammingError(complaint)
     if config.get("engine", DEFAULT_CONFIG["engine"]) not in _VALID_ENGINES:
         raise ProgrammingError(
             f"engine must be one of {_VALID_ENGINES}"

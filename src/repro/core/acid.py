@@ -27,6 +27,7 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .bloomfilter import BloomFilter
+from ..analysis.lockdep import make_lock
 from .metastore import Metastore, TableDesc, WriteIdList
 from .runtime.vector import ROWID_COL, WRITEID_COL, VectorBatch
 from .stats import TableStats, compute_column_stats
@@ -171,7 +172,7 @@ class AcidTable:
     # registry of active reader snapshots per table-location, consulted by the
     # compaction cleaner so in-flight queries finish before files vanish (§3.2)
     _reader_leases: Dict[str, List[int]] = {}
-    _lease_lock = threading.Lock()
+    _lease_lock = make_lock("acid.lease")
 
     def __init__(self, desc: TableDesc, hms: Metastore):
         self.desc = desc

@@ -17,6 +17,7 @@ from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
+from ...analysis.lockdep import make_lock
 from ..metastore import TableDesc
 from ..runtime.vector import DEFAULT_BATCH_ROWS, VectorBatch
 from ..sql import ast as A
@@ -30,7 +31,7 @@ class JdbcHandler(StorageHandler):
 
     def __init__(self, db_path: str = ":memory:"):
         self.conn = sqlite3.connect(db_path, check_same_thread=False)
-        self._lock = threading.Lock()
+        self._lock = make_lock("federation.jdbc")
         self.queries_served: List[str] = []
         # remote statistics cache (planning runs per query; the remote
         # COUNT/NDV probes should not) — dropped whenever this handler writes

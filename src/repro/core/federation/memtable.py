@@ -24,6 +24,7 @@ from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
+from ...analysis.lockdep import make_lock
 from ..metastore import TableDesc
 from ..runtime.vector import DEFAULT_BATCH_ROWS, VectorBatch
 from ..sql import ast as A
@@ -39,7 +40,7 @@ class MemTableHandler(StorageHandler):
         self.tables: Dict[str, VectorBatch] = {}
         self.latency_s = float(latency_s)
         self.batch_rows = int(batch_rows)
-        self._lock = threading.Lock()
+        self._lock = make_lock("federation.memtable")
         # remote statistics cache (planning runs per query; the per-column
         # NDV scans should not) — dropped whenever a table is (re)loaded
         self._stats_cache: Dict[str, object] = {}

@@ -22,6 +22,7 @@ import threading
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from ..analysis.lockdep import make_rlock
 from .stats import ColumnStats, TableStats
 
 # --------------------------------------------------------------------------
@@ -158,7 +159,7 @@ class Metastore:
         self._conn = sqlite3.connect(self.db_path, check_same_thread=False)
         self._conn.execute("PRAGMA journal_mode=MEMORY")
         self._conn.execute("PRAGMA synchronous=OFF")
-        self._lock = threading.RLock()
+        self._lock = make_rlock("metastore")
         with self._lock:
             self._conn.executescript(_SCHEMA)
         self._commit_seq = self._q1("SELECT COALESCE(MAX(commit_seq),0) FROM txns") or 0

@@ -14,6 +14,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
+from ...analysis.lockdep import make_lock
 from ..metastore import Metastore, WriteIdList
 from ..runtime.vector import VectorBatch
 
@@ -31,7 +32,7 @@ class QueryResultCache:
     def __init__(self, max_entries: int = 256, ttl_seconds: float = 3600.0):
         self.max_entries = max_entries
         self.ttl = ttl_seconds
-        self._lock = threading.Lock()
+        self._lock = make_lock("optimizer.result_cache")
         self._entries: Dict[str, CacheEntry] = {}
         self.stats = {"hits": 0, "misses": 0, "pending_waits": 0}
 

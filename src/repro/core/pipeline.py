@@ -25,11 +25,14 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+from .config_keys import PLANNING_KEYS
 from .optimizer import plan as P
 from .optimizer.mv_rewrite import MVRewriter
 from .optimizer.rules import Optimizer, OptimizerConfig
 from .optimizer.semijoin import SemijoinConfig, insert_semijoin_reducers
 from .optimizer.shared_work import find_shared_subplans
+from ..analysis.lockdep import make_lock
+from ..analysis.plan_validator import maybe_validate_dag
 from .runtime.dag import DAGScheduler, compile_dag, describe_exchanges
 from .runtime.exec import MemoryPressureError
 from .runtime.scheduler import stream_batch_rows
@@ -43,15 +46,11 @@ from .sql.parser import parse
 # prepared-statement plan cache
 # ===========================================================================
 # config keys that change the shape of the optimized plan; part of the cache
-# key so sessions with different planning configs don't share plans
-_PLANNING_KEYS = (
-    "cbo", "pushdown", "prune_columns", "join_reorder",
-    "transitive_inference", "partition_pruning", "broadcast_threshold_rows",
-    "mv_rewriting", "semijoin_reduction",
-    "federation.push_filters", "federation.push_projection",
-    "federation.push_aggregate", "federation.push_limit",
-    "shuffle.partitions",
-)
+# key so sessions with different planning configs don't share plans.
+# Derived from the central registry (repro.core.config_keys) — a key added
+# there with planning=True joins the cache key automatically, so this tuple
+# can no longer drift from the declared set (the REP001 invariant).
+_PLANNING_KEYS = PLANNING_KEYS
 
 
 @dataclass
@@ -115,7 +114,7 @@ class PlanCache:
 
     def __init__(self, max_entries: int = 128):
         self.max_entries = max_entries
-        self._lock = threading.Lock()
+        self._lock = make_lock("plan_cache")
         self._entries: Dict[str, PlanCacheEntry] = {}
         self.stats = {"hits": 0, "misses": 0}
 
@@ -398,6 +397,10 @@ class CompileStage(Stage):
         q.plan = s._expand_shuffle(q.plan, cfg)
         q.plan_pretty = q.plan.pretty()  # before compile_dag mutates the tree
         q.dag = compile_dag(q.plan)
+        # structural validation (debug.validate_plans / REPRO_VALIDATE_PLANS):
+        # catches malformed wiring — and, via the plan-cache aliasing check,
+        # a compile that mutated a cached pristine plan in place
+        maybe_validate_dag(q.dag, cfg, plan_cache=s.wh.plan_cache)
         q.info["dag_edges"] = q.dag.edge_summary()
         q.info["exchanges"] = [ln.strip() for ln in describe_exchanges(q.dag)]
         q.exec_ctx = ctx
@@ -524,6 +527,10 @@ class ExecuteStage(Stage):
             if cfg2["shared_work"]:
                 ctx2.shared_keys = find_shared_subplans(plan2)
             dag2 = compile_dag(s._expand_shuffle(plan2, cfg2))
+            # §4.2 re-optimized plans never came from the cache, but their
+            # rewritten shuffle/split wiring is exactly where structural
+            # bugs would hide — validate them like first compiles
+            maybe_validate_dag(dag2, cfg2, plan_cache=s.wh.plan_cache)
             if q.task is not None:
                 q.task.note_vertices_total(len(dag2.vertices))
             return DAGScheduler(

@@ -13,6 +13,7 @@ from __future__ import annotations
 import threading
 from typing import Optional
 
+from ...analysis.lockdep import make_lock
 from .wlm import QueryKilledError
 
 
@@ -25,7 +26,7 @@ class CancelToken:
 
     def __init__(self):
         self._event = threading.Event()
-        self._lock = threading.Lock()
+        self._lock = make_lock("cancel_token")
         self.reason: str = ""
         self.kind: Optional[str] = None  # 'cancel' | 'kill'
 

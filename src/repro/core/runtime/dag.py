@@ -22,6 +22,7 @@ from typing import Callable, Dict, List, Optional, Set
 
 import numpy as np
 
+from ...analysis.lockdep import make_lock
 from ..optimizer import plan as P
 from .exec import ExecContext, Executor
 from .vector import VectorBatch
@@ -367,7 +368,7 @@ class DAGScheduler:
                 ex.configure_retention(lane_readers[vid], full_readers[vid])
             else:
                 ex.retain = readers[vid] != 1 or vid == dag.root
-        lock = threading.Lock()
+        lock = make_lock("dag.metrics")
         errors: List[BaseException] = []
         # serving tier: scan vertices whose output may be shared with (or
         # attached from) a concurrent query's identical scan
@@ -549,7 +550,7 @@ class DAGScheduler:
         order = dag.topo_order()
         pending: Dict[str, Future] = {}
         durations: List[float] = []
-        lock = threading.Lock()
+        lock = make_lock("dag.metrics")
 
         def run_vertex(vid: str) -> VectorBatch:
             # the vertex start is a cancellation point; operator loops also
@@ -634,6 +635,7 @@ class _VertexExecutor(Executor):
                     return
                 # conflicting-spec fallback: full stream, filtered per chunk
                 for chunk in node.source.reader():
+                    self._checkpoint()  # cancel point per replayed chunk
                     yield partition_select(
                         chunk, node.partition_keys, node.partition,
                         node.num_partitions, self.ctx.engine)

@@ -25,6 +25,7 @@ from typing import Dict, Iterator, List, Optional
 
 import numpy as np
 
+from ...analysis.lockdep import make_condition
 from .exec import MemoryPressureError
 from .vector import VectorBatch
 
@@ -119,7 +120,7 @@ class Exchange:
         self.buffer_bytes = int(buffer_bytes if buffer_bytes is not None
                                 else cfg.buffer_bytes)
         self._slots: List[object] = []
-        self._cond = threading.Condition()
+        self._cond = make_condition(name="exchange")
         self._closed = False
         self._error: Optional[BaseException] = None
         self._mem_rows = 0

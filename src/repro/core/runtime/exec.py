@@ -649,6 +649,10 @@ class Executor:
         yielded = False
         for split in splits:
             for batch in builder.read_split(split):
+                # cancel point per connector batch: a filtered-out batch
+                # yields no chunk downstream, so without this a cancelled
+                # query keeps draining the remote split to its end
+                self._checkpoint()
                 if node.spec is not None:
                     # connector outputs follow the spec's column order
                     b = batch.rename(dict(zip(batch.column_names, out_names)))

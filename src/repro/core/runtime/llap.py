@@ -28,6 +28,7 @@ from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ...analysis.lockdep import make_rlock
 from ..bloomfilter import BloomFilter
 from ..storage import (
     FileMeta,
@@ -56,7 +57,7 @@ class LlapDaemon:
         self._used = 0
         self._policy = LRFUPolicy(lrfu_lambda)
         self._meta: Dict[str, Tuple[float, FileMeta]] = {}  # path -> (mtime, meta)
-        self._lock = threading.RLock()
+        self._lock = make_rlock("llap")
         self.executors = ThreadPoolExecutor(
             max_workers=num_executors, thread_name_prefix="llap-exec"
         )

@@ -25,6 +25,7 @@ from concurrent.futures import ThreadPoolExecutor
 from queue import Empty, Full, Queue
 from typing import Dict, Iterator, Optional, Tuple
 
+from ...analysis.lockdep import make_condition, make_lock
 from ..sql import ast as A
 from .cancel import CancelToken, QueryCancelledError
 from .vector import VectorBatch
@@ -65,7 +66,7 @@ class ResultStream:
 
     def __init__(self, maxsize: int = 2):
         self._q: Queue = Queue(maxsize)
-        self._lock = threading.Lock()
+        self._lock = make_lock("scheduler.result_stream")
         self._active = False          # a consumer is (or will be) iterating
         self._started = False         # a producer reached its emit point
         self._detached = False        # consumer abandoned the iterator
@@ -203,7 +204,7 @@ class QueryTask:
         self.admitted_at: Optional[float] = None
         self.wlm = None                        # set by QueryScheduler.submit
         self.serving_stats = None              # set by QueryScheduler.submit
-        self._cond = threading.Condition()
+        self._cond = make_condition(name="scheduler.task")
         self._state = QUEUED
         self.result = None                     # QueryResult on SUCCEEDED
         self.error: Optional[BaseException] = None
@@ -345,7 +346,7 @@ class QueryScheduler:
             max_workers=max_workers, thread_name_prefix="query-worker"
         )
         self._tasks: Dict[str, QueryTask] = {}
-        self._lock = threading.Lock()
+        self._lock = make_lock("scheduler.global")
         self._closed = False
 
     # ------------------------------------------------------------- submit

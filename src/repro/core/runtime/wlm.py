@@ -31,6 +31,7 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional
 
+from ...analysis.lockdep import make_condition, make_lock, make_rlock
 from ..metastore import Metastore
 
 
@@ -112,8 +113,8 @@ class _PoolShard:
     __slots__ = ("lock", "cond", "waiting")
 
     def __init__(self):
-        self.lock = threading.RLock()
-        self.cond = threading.Condition(self.lock)
+        self.lock = make_rlock("wlm.shard")
+        self.cond = make_condition(self.lock, name="wlm.shard.cond")
         self.waiting: Deque[object] = deque()
 
 
@@ -123,13 +124,13 @@ class WorkloadManager:
         self.total_executors = total_executors
         # cross-pool state: slot table, load counters, borrow rotation.
         # Held briefly; never while waiting.  Lock order: shard then _lock.
-        self._lock = threading.RLock()
+        self._lock = make_rlock("wlm.global")
         self._active: Optional[ResourcePlan] = None
         self._running: Dict[str, QuerySlot] = {}
         self._pool_load: Dict[str, int] = {}
         # per-pool admission shards (fair FIFO queueing; see wait_admit)
         self._shards: Dict[Optional[str], _PoolShard] = {}
-        self._shards_lock = threading.Lock()
+        self._shards_lock = make_lock("wlm.shards")
         # round-robin rotation among pool heads contending for borrowed
         # idle capacity: the pool that borrowed last yields to the next
         # contending pool in cyclic (sorted-name) order

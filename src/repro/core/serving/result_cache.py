@@ -15,6 +15,7 @@ import threading
 import time
 from typing import Dict, Optional, Tuple
 
+from ...analysis.lockdep import make_lock
 from ..metastore import Metastore
 from ..optimizer.result_cache import CacheEntry
 from ..runtime.exchange import batch_nbytes
@@ -29,7 +30,7 @@ class ResultCacheServer:
                  ttl_seconds: float = 3600.0, lrfu_lambda: float = 0.01):
         self.max_bytes = int(max_bytes)
         self.ttl = ttl_seconds
-        self._lock = threading.Lock()
+        self._lock = make_lock("serving.result_cache")
         self._entries: Dict[str, CacheEntry] = {}
         self._sizes: Dict[str, int] = {}
         self._used = 0

@@ -22,6 +22,8 @@ from __future__ import annotations
 import threading
 from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
+from ...analysis.lockdep import make_lock
+
 
 class _Entry:
     __slots__ = ("key", "table", "exchange", "refcount", "retired",
@@ -65,7 +67,7 @@ class SharedScanRegistry:
     """
 
     def __init__(self):
-        self._lock = threading.Lock()
+        self._lock = make_lock("serving.shared_scans")
         self._entries: Dict[object, _Entry] = {}
         self.stats = {
             "published": 0,

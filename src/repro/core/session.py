@@ -29,6 +29,7 @@ import numpy as np
 
 from ..kernels.registry import VALID_ENGINES as _VALID_ENGINES
 from .acid import AcidTable, PlainIO
+from .config_keys import DEFAULT_CONFIG, SessionConfig
 from .compaction import CompactionConfig, compact_partition, maybe_compact
 from .federation.catalog import CatalogRegistry
 from .federation.datasource import expand_federated_splits, negotiate_federated
@@ -58,86 +59,10 @@ from .sql import ast as A
 from .sql.binder import Binder, _classify_join_condition
 from .sql.parser import parse, parse_many
 
-DEFAULT_CONFIG = {
-    # optimizer (§4)
-    "cbo": True,
-    "pushdown": True,
-    "join_reorder": True,
-    "transitive_inference": True,
-    "partition_pruning": True,
-    "prune_columns": True,
-    "broadcast_threshold_rows": 200_000.0,
-    "mv_rewriting": True,
-    "semijoin_reduction": True,
-    "shared_work": True,
-    "result_cache": True,
-    "reopt_mode": "reoptimize",  # off | overlay | reoptimize (§4.2)
-    "overlay": {"broadcast_threshold_rows": 0.0},
-    # runtime (§5)
-    "llap": True,
-    "speculative_execution": False,
-    "mapjoin_max_rows": 50_000_000,
-    "num_containers": 4,
-    # ACID (§3)
-    "compaction_enabled": True,
-    "compaction_minor_threshold": 10,
-    "compaction_major_ratio": 0.2,
-    # kernel backend selection (repro.kernels.registry)
-    "engine": "auto",  # auto | pallas | ref
-    # identity for workload management (§5.2)
-    "user": None,
-    "application": None,
-    # async handles: rows per batch handed to QueryHandle.fetch_stream()
-    "stream_batch_rows": 4096,
-    # pipelined execution + spill-aware exchanges (§5): operators stream
-    # `exchange.batch_rows`-row morsels; each DAG edge buffers at most
-    # `exchange.buffer_rows` rows / `exchange.buffer_bytes` bytes in memory
-    # and spills overflow chunks to a per-query scratch directory.  With
-    # `exchange.spill` off an overflowing edge raises MemoryPressureError,
-    # feeding §4.2 re-optimization (which re-executes with materialized
-    # exchanges); `exchange.pipeline` off restores the
-    # materialize-every-vertex baseline (also used under speculation).
-    "exchange.pipeline": True,
-    "exchange.batch_rows": 1024,
-    "exchange.buffer_rows": 65536,
-    "exchange.buffer_bytes": 64 << 20,
-    "exchange.spill": True,
-    "exchange.spill_dir": None,
-    # partitioned shuffle service (§4/§5): SHUFFLE edges hash-partition the
-    # producer stream into per-consumer lanes and pipeline-breaker consumers
-    # (shuffle joins, grouped aggregation, global DISTINCT) clone per
-    # partition, merging through UNION/fold vertices.  An int fixes the lane
-    # count; "auto" derives it from CBO row estimates (1 for small inputs);
-    # 1 disables expansion.  Part of the plan-cache key.
-    "shuffle.partitions": "auto",
-    # rows the ShuffleWriter coalesces per lane before handing a morsel to
-    # the lane exchange: routed rows arrive fragmented (a 1/N slice of each
-    # producer morsel), and consumer clones pay fixed per-morsel operator
-    # costs, so lanes re-batch into large morsels
-    "shuffle.lane_batch_rows": 8192,
-    # federation (§6): capability-negotiated pushdown gates — each kind can
-    # be toggled independently (the connector may still decline piecewise;
-    # whatever is not pushed stays as local Filter/Project/Aggregate/Limit
-    # residuals, shown by EXPLAIN) — and the split fan-out width for
-    # parallel external reads through the exchange layer
-    "federation.push_filters": True,
-    "federation.push_projection": True,
-    "federation.push_aggregate": True,
-    "federation.push_limit": True,
-    "federation.splits": 4,
-    # serving tier (ROADMAP item 3): shared scans attach concurrent queries
-    # to an in-flight identical scan's exchange instead of re-reading
-    # through LLAP; the serving result cache (byte-bounded, LRFU-evicted,
-    # write-ID invalidated; see Warehouse(result_cache_bytes=...)) lets the
-    # async scheduler answer repeated dashboard queries without admission
-    # or execution.  Both default on; benchmarks flip them off for the
-    # serving-tier-off baseline.
-    "serving.shared_scans": True,
-    "serving.result_cache": True,
-    # debug/test instrumentation: sleep this long at each DAG vertex, to make
-    # concurrency observable (admission queueing, cancel, streaming)
-    "debug_vertex_delay_s": 0.0,
-}
+# DEFAULT_CONFIG now lives in repro.core.config_keys (the REP001
+# registry): every knob is declared there once with its default, type,
+# and planning flag; this module re-exports the derived dict for
+# backwards compatibility (repro.api.connection and tests import it).
 
 
 class QueryResult:
@@ -205,7 +130,10 @@ class Warehouse:
         return self.handlers.get(name)
 
     def session(self, **config) -> "Session":
-        cfg = {**DEFAULT_CONFIG, **config}
+        # SessionConfig warns on keys the registry doesn't declare — the
+        # silent-typo class (a misspelled knob falling back to its default
+        # without a trace) REP001 exists to catch
+        cfg = SessionConfig(DEFAULT_CONFIG, config)
         if cfg.get("engine") not in _VALID_ENGINES:
             raise ValueError(
                 f"engine must be one of {_VALID_ENGINES}, got {cfg['engine']!r}"

@@ -51,6 +51,17 @@ def _per_test_alarm(request):
         signal.signal(signal.SIGALRM, old)
 
 
+@pytest.fixture(autouse=True)
+def _validate_all_plans(monkeypatch):
+    """Run the structural DAG validator on every plan the suite compiles.
+
+    ``repro.analysis.plan_validator`` checks the validation flag per compile
+    (not at import), so setting the env var here covers warehouses created
+    anywhere in a test — the whole tier-1 run doubles as validator coverage.
+    """
+    monkeypatch.setenv("REPRO_VALIDATE_PLANS", "1")
+
+
 @pytest.fixture()
 def warehouse(tmp_path):
     from repro.core.session import Warehouse

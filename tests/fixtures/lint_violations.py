@@ -1,0 +1,42 @@
+"""Seeded violations for the invariant lint — one per checker.
+
+This file is NOT part of the warehouse; it exists so tests (and the CLI
+exit-code contract) can prove every REP checker actually fires.  Keep one
+deliberate violation per code, nothing else — test_analysis.py asserts the
+exact finding set.
+"""
+import threading
+
+
+def read_knob(config):
+    # REP001: key is not declared in repro.core.config_keys
+    return config.get("definitely.not.a.declared.key", 7)
+
+
+def stream_edge(exchange):
+    # REP002: generator drains a reader without observing the cancel token
+    for chunk in exchange.reader():
+        yield chunk
+
+
+def hoard(self, node):
+    # REP003: full materialization outside the allowlist
+    return self._collect(node)
+
+
+_lock = threading.Lock()
+_cond = threading.Condition(_lock)
+
+
+def bare_acquire():
+    # REP004a: bare acquire with no immediate try/finally release
+    _lock.acquire()
+    do_work = 1 + 1
+    _lock.release()
+    return do_work
+
+
+def bare_wait():
+    with _cond:
+        # REP004b: wait outside a predicate loop
+        _cond.wait()
