@@ -26,8 +26,14 @@ Prints ``name,us_per_call,derived`` CSV rows plus per-section summaries.
                            queries, serving on vs off (p50/p99 latency,
                            throughput, result-cache + shared-scan hit
                            rates) -> BENCH_PR6.json
+  bench_pr8              : adaptive execution — live-telemetry replanning
+                           (hot-lane split, co-partition shuffle elision,
+                           payoff-gated fan-out) adaptive on vs off over a
+                           zipf-skewed join/agg workload, plus a uniform
+                           SSB Q1-Q4 no-regression check
+                           -> BENCH_PR8.json
 
-``python -m benchmarks.run pr3|pr4|pr5|pr6 [--scale N] [--out PATH]`` runs
+``python -m benchmarks.run pr3|pr4|pr5|pr6|pr8 [--scale N] [--out PATH]`` runs
 only that PR's benchmark (the CI smoke invocations).  All wall-clock claims
 use min-of-5 timing (the ``timing`` field in each BENCH_PRn.json).
 """
@@ -823,6 +829,146 @@ def bench_pr6(scale=120_000, out_path=None, clients=(1, 8, 32, 128)):
     return report
 
 
+def bench_pr8(scale=400_000, out_path=None):
+    """Adaptive execution (PR 8): live-telemetry replanning — adaptive on
+    vs off over a zipf-skewed join/aggregation workload (hot-lane split,
+    co-partition shuffle elision, payoff-gated fan-out), plus a
+    no-regression check on the uniform SSB flight representatives Q1-Q4.
+    Writes BENCH_PR8.json.
+    """
+    import repro.api as db
+    from benchmarks.ssb import (SKEWED_QUERIES, SSB_QUERIES, load_skewed,
+                                load_ssb)
+    from repro.core.runtime.shuffle import auto_partition_cap
+    from repro.core.session import Warehouse
+
+    parts = auto_partition_cap()
+    # a bounded per-edge buffer (default-sized memory budget / 4) makes the
+    # exchange hop a real cost: the off-mode's extra aggregate shuffle
+    # spills what the elided plan never materializes
+    common = {"shuffle.partitions": "auto", "result_cache": False,
+              "broadcast_threshold_rows": 0.0,
+              "exchange.buffer_rows": 16384}
+    modes = {
+        "adaptive_on": {},
+        "adaptive_off": {"adaptive.enabled": False,
+                         "adaptive.elide_copartition": False},
+    }
+
+    def measure(conn, sql, reps=5):
+        """min-of-``reps`` wall (after one warmup run) + the best run's
+        adaptive event kinds and the (sorted) rowset for parity checks."""
+        _pr3_measure(conn, sql)  # warm LLAP (paper reports warm cache)
+        best = None
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            h = conn.execute_async(sql)
+            rows = []
+            for batch in h.fetch_stream(batch_rows=1024):
+                rows.extend(batch)
+            h.result(600)
+            wall = time.perf_counter() - t0
+            if best is None or wall < best["wall_s"]:
+                events = h.poll().get("adaptive") or []
+                best = {"wall_s": wall, "rows": rows,
+                        "adaptive_events": [e["kind"] for e in events]}
+        return best
+
+    report = {
+        "scale_rows": scale,
+        "config": {"partitions": parts, "zipf_alpha": 2.5, **common},
+        "timing": {"runs_per_cell": 5, "reduction": "min",
+                   "warmup_runs": 1},
+        "skewed": {},
+        "uniform_ssb": {},
+    }
+
+    # ---- zipf-skewed join/agg workload: adaptive on vs off ---------------
+    wh = Warehouse(tempfile.mkdtemp(prefix="bench_pr8_"),
+                   llap_executors=max(8, 4 * parts))
+    load_skewed(wh, scale_rows=scale, alpha=2.5)
+    totals = {m: 0.0 for m in modes}
+    for name, sql in SKEWED_QUERIES.items():
+        cell = {}
+        for mode, overrides in modes.items():
+            conn = db.connect(warehouse=wh, **common, **overrides)
+            best = measure(conn, sql)
+            conn.close()
+            totals[mode] += best["wall_s"]
+            cell[mode] = {"wall_ms": round(best["wall_s"] * 1e3, 3),
+                          "rows": len(best["rows"]),
+                          "adaptive_events": best["adaptive_events"]}
+            emit(f"pr8.{name}.{mode}", best["wall_s"] * 1e6,
+                 f"rows={len(best['rows'])},"
+                 f"events={'+'.join(best['adaptive_events']) or 'none'}")
+            cell[mode]["_rowset"] = best["rows"]
+        assert _rounded(cell["adaptive_on"].pop("_rowset")) == \
+            _rounded(cell["adaptive_off"].pop("_rowset")), \
+            f"adaptive parity broken on {name}"
+        cell["wall_speedup_adaptive"] = round(
+            cell["adaptive_off"]["wall_ms"]
+            / max(cell["adaptive_on"]["wall_ms"], 1e-3), 3)
+        report["skewed"][name] = cell
+    wh.close()
+
+    # ---- uniform SSB Q1-Q4: adaptive must not regress --------------------
+    # half the skewed scale, and more reps per cell: these queries are an
+    # order of magnitude shorter, so the min needs more samples to converge
+    uni_scale = max(scale // 2, 4_000)
+    wh = Warehouse(tempfile.mkdtemp(prefix="bench_pr8_ssb_"),
+                   llap_executors=max(8, 4 * parts))
+    load_ssb(wh, scale_rows=uni_scale)
+    report["uniform_ssb"]["scale_rows"] = uni_scale
+    uni_speedups = []
+    for name in ("q1.1", "q2.1", "q3.1", "q4.1"):
+        cell = {}
+        for mode, overrides in modes.items():
+            conn = db.connect(warehouse=wh, **common, **overrides)
+            best = measure(conn, SSB_QUERIES[name], reps=9)
+            conn.close()
+            cell[mode] = {"wall_ms": round(best["wall_s"] * 1e3, 3),
+                          "rows": len(best["rows"]),
+                          "adaptive_events": best["adaptive_events"]}
+            cell[mode]["_rowset"] = best["rows"]
+        assert _rounded(cell["adaptive_on"].pop("_rowset")) == \
+            _rounded(cell["adaptive_off"].pop("_rowset")), \
+            f"adaptive parity broken on uniform {name}"
+        cell["wall_speedup_adaptive"] = round(
+            cell["adaptive_off"]["wall_ms"]
+            / max(cell["adaptive_on"]["wall_ms"], 1e-3), 3)
+        uni_speedups.append(cell["wall_speedup_adaptive"])
+        emit(f"pr8.ssb_{name}.speedup", cell["wall_speedup_adaptive"] * 1e3)
+        report["uniform_ssb"][name] = cell
+    wh.close()
+
+    report["summary"] = {
+        "partitions": parts,
+        "skewed_total_wall_ms_adaptive_on": round(
+            totals["adaptive_on"] * 1e3, 3),
+        "skewed_total_wall_ms_adaptive_off": round(
+            totals["adaptive_off"] * 1e3, 3),
+        "skewed_total_speedup_adaptive": round(
+            totals["adaptive_off"] / max(totals["adaptive_on"], 1e-6), 3),
+        "per_query_speedup": {
+            n: c["wall_speedup_adaptive"]
+            for n, c in report["skewed"].items()},
+        "uniform_ssb_min_speedup": min(uni_speedups),
+        "adaptive_events_observed": sorted({
+            k for c in report["skewed"].values()
+            for k in c["adaptive_on"]["adaptive_events"]}),
+    }
+    out_path = out_path or os.path.join(os.path.dirname(__file__),
+                                        "BENCH_PR8.json")
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    emit("pr8.skewed_total_speedup_adaptive",
+         report["summary"]["skewed_total_speedup_adaptive"] * 1e3)
+    emit("pr8.uniform_ssb_min_speedup",
+         report["summary"]["uniform_ssb_min_speedup"] * 1e3)
+    return report
+
+
 def roofline_summary():
     d = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
     if not os.path.isdir(d):
@@ -858,6 +1004,7 @@ def main() -> None:
     bench_pr4()
     bench_pr5()
     bench_pr6()
+    bench_pr8()
     roofline_summary()
     print()
     print(f"# paper-claims summary: v3-vs-v1 speedup {v1v3:.2f}x (paper: 4.6x avg),"
@@ -871,7 +1018,7 @@ if __name__ == "__main__":
 
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("section", nargs="?", default="all",
-                        choices=["all", "pr3", "pr4", "pr5", "pr6"])
+                        choices=["all", "pr3", "pr4", "pr5", "pr6", "pr8"])
     parser.add_argument("--scale", type=int, default=None,
                         help="row scale (pr3/pr5: SSB lineorder,"
                              " pr4: external); per-section default if unset")
@@ -890,5 +1037,8 @@ if __name__ == "__main__":
     elif args.section == "pr6":
         print("name,us_per_call,derived")
         bench_pr6(scale=args.scale or 120_000, out_path=args.out)
+    elif args.section == "pr8":
+        print("name,us_per_call,derived")
+        bench_pr8(scale=args.scale or 400_000, out_path=args.out)
     else:
         main()

@@ -80,6 +80,71 @@ def load_ssb(wh, scale_rows: int = 60_000, seed: int = 42):
     hms.commit_txn(tx)
 
 
+def zipf_keys(rng: np.random.Generator, n: int, n_keys: int,
+              alpha: float = 1.3) -> np.ndarray:
+    """``n`` keys over ``[0, n_keys)`` with a Zipf(alpha) frequency profile.
+
+    Rank-1 truncated zipf (not ``rng.zipf``, whose support is unbounded):
+    key ``k`` is drawn with probability proportional to ``(k+1)**-alpha``,
+    so the hottest key owns a constant fraction of the rows regardless of
+    ``n`` — the skew shape that makes one shuffle lane a straggler."""
+    ranks = np.arange(1, n_keys + 1, dtype=np.float64)
+    probs = ranks ** -alpha
+    probs /= probs.sum()
+    return rng.choice(n_keys, size=n, p=probs).astype(np.int64)
+
+
+def load_skewed(wh, scale_rows: int = 400_000, n_keys: int = 64,
+                alpha: float = 1.6, seed: int = 43):
+    """A fact/dim pair whose join and group keys are zipf-skewed — the
+    adaptive-execution benchmark workload (hot shuffle lane + straggler)."""
+    s = wh.session()
+    hms = wh.hms
+    s.execute("CREATE TABLE zfact (zf_key INT, zf_val DOUBLE, zf_qty INT)")
+    s.execute("CREATE TABLE zdim (zd_key INT, zd_group INT)")
+    rng = np.random.default_rng(seed)
+    keys = zipf_keys(rng, scale_rows, n_keys, alpha)
+    tx = hms.open_txn()
+    AcidTable(hms.get_table("zfact"), hms).insert(tx, VectorBatch({
+        "zf_key": keys,
+        "zf_val": rng.uniform(1, 100, scale_rows).round(2),
+        "zf_qty": rng.integers(1, 50, scale_rows),
+    }))
+    AcidTable(hms.get_table("zdim"), hms).insert(tx, VectorBatch({
+        "zd_key": np.arange(n_keys),
+        "zd_group": np.arange(n_keys) % 8,
+    }))
+    hms.commit_txn(tx)
+
+
+# skewed join/agg queries for the adaptive-execution benchmark, shaped like
+# a per-key dashboard drill-down: zq2/zq4/zq5/zq6 group on the join key, so
+# the co-partition shuffle elision applies; zq3 groups on a non-join column
+# (its aggregate keeps its own shuffle hop — a negative control); zq1 is a
+# plain scan-fed aggregate (skew telemetry, no join)
+SKEWED_QUERIES = {
+    "zq1": """SELECT zf_key, SUM(zf_val) AS total, COUNT(*) AS n
+        FROM zfact GROUP BY zf_key""",
+    "zq2": """SELECT f.zf_key, SUM(f.zf_val) AS total
+        FROM zfact f JOIN zdim d ON f.zf_key = d.zd_key
+        GROUP BY f.zf_key""",
+    "zq3": """SELECT f.zf_qty, SUM(f.zf_val) AS total
+        FROM zfact f JOIN zdim d ON f.zf_key = d.zd_key
+        GROUP BY f.zf_qty""",
+    "zq4": """SELECT f.zf_key, SUM(f.zf_val) AS t, COUNT(*) AS n,
+        MIN(f.zf_val) AS lo, MAX(f.zf_val) AS hi
+        FROM zfact f JOIN zdim d ON f.zf_key = d.zd_key
+        GROUP BY f.zf_key""",
+    "zq5": """SELECT f.zf_key, SUM(f.zf_val) AS total, SUM(f.zf_qty) AS q
+        FROM zfact f JOIN zdim d ON f.zf_key = d.zd_key
+        WHERE d.zd_group < 4 GROUP BY f.zf_key""",
+    "zq6": """SELECT f.zf_key, SUM(f.zf_val) AS a, SUM(f.zf_qty) AS b,
+        AVG(f.zf_val) AS c, COUNT(*) AS n
+        FROM zfact f JOIN zdim d ON f.zf_key = d.zd_key
+        GROUP BY f.zf_key""",
+}
+
+
 SSB_QUERIES = {
     # flight 1: single-dim filters
     "q1.1": """SELECT SUM(lo_extendedprice * lo_discount) AS revenue

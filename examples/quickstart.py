@@ -8,8 +8,9 @@ snapshot isolation, asynchronous query handles (``execute_async`` +
 ``fetch_stream`` behind workload-manager pools, paper §5.2), streaming
 execution over spill-aware exchanges (``exchange.*`` session config),
 federated catalogs (``CREATE CATALOG`` + three-part names with
-capability-negotiated pushdown, paper §6), and EXPLAIN ANALYZE with
-per-stage pipeline timings.
+capability-negotiated pushdown, paper §6), EXPLAIN ANALYZE with per-stage
+pipeline timings, and adaptive execution (live-telemetry replanning: hot-
+lane splits, co-partition shuffle elision, payoff-gated fan-out).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -299,6 +300,77 @@ def main():
     print(f"validated plan executed: {len(rows)} groups "
           f"(every DAG this session compiles is structure-checked)")
     checked.close()
+
+    print("\n== adaptive execution: live-telemetry replanning (PR 8) ==")
+    # with `adaptive.enabled` (the default) the running DAG is replanned
+    # from lane telemetry: a hot shuffle lane splits its remaining rows
+    # across fresh sub-lanes (re-merged by a folding aggregate), a grouped
+    # aggregate whose keys cover the upstream join's shuffle keys reuses
+    # the join's lanes instead of adding its own hop (shuffle elision, at
+    # compile time), and a fan-out whose live rows fall far short of the
+    # CBO estimate collapses back to a single consumer.  Every mid-query
+    # DAG mutation is re-validated by `repro.analysis.check_dag` before
+    # the scheduler adopts it; declined adoptions surface as `declined`.
+    cur.execute("CREATE TABLE skewed_sales (k INT, v INT)")
+    cur.execute("CREATE TABLE sku (sk INT, weight INT)")
+    n = 240_000
+    k = rng.integers(0, 64, n)
+    k[rng.random(n) < 0.85] = 7  # one key owns ~85% of the rows
+    from repro.core.acid import AcidTable
+    tx = conn.warehouse.hms.open_txn()
+    AcidTable(conn.warehouse.hms.get_table("skewed_sales"),
+              conn.warehouse.hms).insert(
+        tx, VectorBatch({"k": k, "v": np.arange(n) % 100}))
+    AcidTable(conn.warehouse.hms.get_table("sku"),
+              conn.warehouse.hms).insert(
+        tx, VectorBatch({"sk": np.arange(64), "weight": np.arange(64)}))
+    conn.warehouse.hms.commit_txn(tx)
+
+    # hot-lane split: the skewed key floods one of the two lanes; its
+    # remaining rows are re-spread over fresh sub-lanes mid-stream and the
+    # merge becomes a partial-combining fold
+    adp2 = db.connect(warehouse=conn.warehouse, result_cache=False,
+                      **{"shuffle.partitions": 2})
+    ha = adp2.execute_async(
+        "SELECT k, SUM(v) AS sv, COUNT(*) AS c FROM skewed_sales"
+        " GROUP BY k")
+    ha.result(60)
+    print("skewed aggregate replanned live:",
+          [e["kind"] for e in ha.poll()["adaptive"]])
+
+    auto = db.connect(warehouse=conn.warehouse, result_cache=False,
+                      **{"shuffle.partitions": "auto",
+                         "broadcast_threshold_rows": 0.0})
+    # co-partition elision: GROUP BY s.k covers the join's shuffle keys,
+    # so the aggregate runs inside the join's lanes — one hop, not two
+    he = auto.execute_async(
+        "SELECT s.k, SUM(s.v) AS sv FROM skewed_sales s"
+        " JOIN sku d ON s.k = d.sk GROUP BY s.k")
+    he.result(60)
+    print("covered join/agg elides its shuffle:", he.poll()["adaptive"])
+    # payoff gate: the residual predicate is opaque to the CBO, live rows
+    # come in far under the estimate, and the fan-out is collapsed back
+    # to a single consumer
+    hc = auto.execute_async(
+        "SELECT s.v, SUM(s.k) AS sk FROM skewed_sales s"
+        " JOIN sku d ON s.k = d.sk"
+        " WHERE s.k + d.weight >= 100 GROUP BY s.v")
+    hc.result(60)
+    print("over-estimated fan-out declined:", hc.poll()["adaptive"])
+    auto.close()
+
+    # EXPLAIN ANALYZE appends the adaptive decision log to the stage
+    # timings, so a replanned query explains itself after the fact
+    s_adp = conn.warehouse.session(result_cache=False,
+                                   **{"shuffle.partitions": 2})
+    ra = s_adp.execute("EXPLAIN ANALYZE SELECT k, SUM(v) AS sv"
+                       " FROM skewed_sales GROUP BY k")
+    text = [str(line) for line in ra.batch.cols["plan"]]
+    start = next((i for i, l in enumerate(text)
+                  if l.startswith("adaptive decisions:")), len(text))
+    for line in text[start:]:
+        print(" ", line)
+    adp2.close()
 
     conn.close()
 

@@ -1,6 +1,6 @@
 """Repo-specific invariant lint (AST-based).
 
-Four checkers encode invariants the warehouse runtime depends on but the
+Five checkers encode invariants the warehouse runtime depends on but the
 language cannot express.  Each has bitten (or nearly bitten) this codebase:
 
 REP001  every ``config.get("key")`` call site must name a key declared in
@@ -19,6 +19,13 @@ REP004  lock hygiene: a bare ``lock.acquire()`` statement must be
         exception leaks a held lock), and ``cond.wait()`` must sit inside
         a predicate loop (``while``) — a bare wait misses wakeups and
         deadlocks on spurious ones.
+REP005  a running query's DAG (``vertices`` / ``deps`` / ``edge_types``)
+        may only be mutated by ``compile_dag``'s construction (dag.py) or
+        inside the ``apply``/``undo`` closures the adaptive layer hands to
+        its validating adopt-helper (``AdaptiveManager._adopt`` re-checks
+        the whole DAG with ``check_dag`` and rolls back on violation) —
+        any other mid-query structural edit bypasses validation and can
+        wedge the pipelined scheduler.
 
 Findings can be suppressed per line with ``# repro-lint: REPnnn`` (comma
 separated, or ``all``).  The CLI (``python -m repro.analysis``) exits
@@ -37,6 +44,7 @@ CODES = {
     "REP002": "reader loop misses cancel check",
     "REP003": "full materialization outside allowlist",
     "REP004": "lock/condition misuse",
+    "REP005": "live-DAG mutation outside validated adoption",
 }
 
 # REP001 only polices the warehouse runtime; the modeling/training side of
@@ -52,6 +60,20 @@ _READER_CALLS = {"reader", "lane_reader", "read_split"}
 
 # cancel-observation calls that satisfy REP002
 _CANCEL_CALLS = {"check", "_checkpoint"}
+
+# DAG structural state (REP005): attributes whose mutation rewires a
+# running query's DAG
+_DAG_STRUCT_ATTRS = {"vertices", "deps", "edge_types"}
+
+# container methods that mutate in place (REP005)
+_MUTATING_METHODS = {"pop", "update", "clear", "append", "extend",
+                     "insert", "remove", "setdefault", "popitem"}
+
+# where DAG structure may legitimately change: dag.py builds the DAG
+# before the scheduler adopts it; in adaptive.py only the apply/undo
+# closures executed by the validating adopt-helper may rewrite it
+_DAG_MUTATION_FILES = {"dag.py"}
+_DAG_MUTATION_FUNCS = {"apply", "undo"}
 
 # (file basename, enclosing function) pairs allowed to _collect (REP003):
 # the sort / global-aggregate / window operators still materialize their
@@ -206,6 +228,13 @@ class _Checker(ast.NodeVisitor):
                     f"_collect (full materialization) in {fn}() is not "
                     f"allowlisted — stream through the exchange instead",
                 )
+        # REP005: in-place mutation via container methods
+        if (isinstance(node.func, ast.Attribute)
+                and node.func.attr in _MUTATING_METHODS):
+            attr = self._dag_struct_attr(node.func.value)
+            if attr is not None:
+                self._check_dag_mutation(node, attr,
+                                         f".{node.func.attr}()")
         self.generic_visit(node)
 
     # --------------------------------------------------------------- REP002
@@ -224,6 +253,57 @@ class _Checker(ast.NodeVisitor):
                     f"cancel token (call .check() or self._checkpoint() "
                     f"once per batch)",
                 )
+        self.generic_visit(node)
+
+    # --------------------------------------------------------------- REP005
+    def _dag_struct_attr(self, node: ast.AST) -> Optional[str]:
+        """``vertices``/``deps``/``edge_types`` if ``node`` is an attribute
+        access on one of them (``dag.vertices``, ``merge.deps``, ...)."""
+        if (isinstance(node, ast.Attribute)
+                and node.attr in _DAG_STRUCT_ATTRS):
+            return node.attr
+        return None
+
+    def _dag_mutation_allowed(self) -> bool:
+        if self.base in _DAG_MUTATION_FILES:
+            return True
+        if self.base == "adaptive.py":
+            return self._current_func_name() in _DAG_MUTATION_FUNCS
+        return False
+
+    def _check_dag_mutation(self, node: ast.AST, attr: str,
+                            what: str) -> None:
+        if self._dag_mutation_allowed():
+            return
+        self._emit(
+            "REP005", node.lineno,
+            f"{what} of .{attr} mutates a live DAG outside the validating "
+            f"adopt-helper — route the rewrite through an apply/undo pair "
+            f"given to AdaptiveManager._adopt (it re-runs check_dag and "
+            f"rolls back on violation)",
+        )
+
+    def _check_mutation_targets(self, targets: Iterable[ast.AST],
+                                stmt: ast.AST, what: str) -> None:
+        for tgt in targets:
+            attr = None
+            if isinstance(tgt, ast.Subscript):
+                attr = self._dag_struct_attr(tgt.value)
+            else:
+                attr = self._dag_struct_attr(tgt)
+            if attr is not None:
+                self._check_dag_mutation(stmt, attr, what)
+
+    def visit_Assign(self, node):
+        self._check_mutation_targets(node.targets, node, "assignment")
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node):
+        self._check_mutation_targets([node.target], node, "assignment")
+        self.generic_visit(node)
+
+    def visit_Delete(self, node):
+        self._check_mutation_targets(node.targets, node, "deletion")
         self.generic_visit(node)
 
     # --------------------------------------------------------------- REP004

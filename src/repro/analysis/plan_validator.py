@@ -68,8 +68,14 @@ def _plan_node_ids(plan) -> set:
     return seen
 
 
-def validate_dag(dag, plan_cache=None) -> List[str]:
-    """All structural violations in ``dag`` (empty list = valid)."""
+def validate_dag(dag, plan_cache=None, staged=None) -> List[str]:
+    """All structural violations in ``dag`` (empty list = valid).
+
+    ``staged`` names speculation clones the adaptive layer has added but
+    not yet wired to a consumer: they are exempt from the orphan checks
+    (their adoption — the consumer swap — is itself validated later), but
+    their placeholders, deps, and lane indices are checked like any other
+    vertex."""
     from ..core.optimizer import plan as P
     from ..core.runtime.dag import _walk_materialized, partitioned_edges
 
@@ -129,11 +135,14 @@ def validate_dag(dag, plan_cache=None) -> List[str]:
             continue
         seen.add(cur)
         stack.extend(vertices[cur].deps)
+    staged = staged or ()
     for vid in sorted(set(vertices) - seen):
+        if vid in staged:
+            continue
         v.append(f"{vid}: unreachable from root {dag.root!r} (orphan "
                  f"vertex — its exchange would retain forever)")
     for vid in sorted(vertices):
-        if vid == dag.root:
+        if vid == dag.root or vid in staged:
             continue
         if readers[vid] == 0 and not fed_by[vid]:
             v.append(f"{vid}: no consumer reads this vertex's exchange")
@@ -204,9 +213,9 @@ def _cached_plans(plan_cache):
     return [(key, _plan_node_ids(e.plan)) for key, e in items]
 
 
-def check_dag(dag, plan_cache=None) -> None:
+def check_dag(dag, plan_cache=None, staged=None) -> None:
     """Raise :class:`PlanValidationError` if ``dag`` is malformed."""
-    violations = validate_dag(dag, plan_cache)
+    violations = validate_dag(dag, plan_cache, staged=staged)
     if violations:
         raise PlanValidationError(violations)
 

@@ -91,6 +91,38 @@ _KEYS = (
        doc='lane count per SHUFFLE edge; "auto" derives from CBO rows'),
     _k("shuffle.lane_batch_rows", 8192, int,
        doc="rows the ShuffleWriter coalesces per lane morsel"),
+    _k("shuffle.auto_rows_per_partition", 32_768, int, planning=True,
+       doc="auto mode: one lane per this many estimated input rows for "
+           "consumers that already sit behind a SHUFFLE edge"),
+    _k("shuffle.auto_scan_fed_rows_per_partition", 262_144, int,
+       planning=True,
+       doc="auto mode lane-payoff threshold for scan-fed consumers, where "
+           "fan-out adds an exchange hop the single-lane plan fuses away "
+           "(the BENCH_PR5 partitioned-DISTINCT regression)"),
+    # --------------------------------------------- adaptive execution (PR 8)
+    _k("adaptive.enabled", True, bool,
+       doc="replan a running DAG from live lane telemetry (hot-lane "
+           "split, payoff-gated fan-out collapse)"),
+    _k("adaptive.skew_ratio", 4.0, (int, float),
+       doc="split a shuffle lane whose observed rows exceed this ratio "
+           "over the live lane median"),
+    _k("adaptive.split_min_rows", 65_536, int,
+       doc="never split a lane before it has at least this many rows"),
+    _k("adaptive.split_ways", 0, int,
+       doc="sub-lanes a hot lane splits into (0 = derive from cores)"),
+    _k("adaptive.elide_copartition", True, bool, planning=True,
+       doc="compile-time: reuse a shuffle join's lanes for a downstream "
+           "grouped aggregate whose keys cover the join keys, eliding "
+           "the second shuffle hop"),
+    _k("adaptive.speculation", False, bool,
+       doc="clone straggler lane consumers under the pipelined scheduler "
+           "and swap consumers to the first finisher (forces lane "
+           "retention while on)"),
+    _k("adaptive.straggler_factor", 4.0, (int, float),
+       doc="speculate a lane consumer running this many times longer "
+           "than the median of its finished siblings"),
+    _k("adaptive.straggler_min_s", 0.2, (int, float),
+       doc="never speculate before a vertex has run this long"),
     # ---------------------------------------------------------- federation (§6)
     _k("federation.push_filters", True, bool, planning=True),
     _k("federation.push_projection", True, bool, planning=True),

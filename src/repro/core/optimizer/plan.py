@@ -368,11 +368,15 @@ class ShuffleRead(PlanNode):
     executor."""
 
     def __init__(self, source: PlanNode, keys: List[str], partition: int,
-                 num_partitions: int):
+                 num_partitions: int, est_rows: Optional[float] = None):
         self.inputs = [source]
         self.keys = list(keys)
         self.partition = partition
         self.num_partitions = num_partitions
+        # the CBO row estimate the lane count was derived from — the
+        # adaptive runtime compares live producer rows against it to
+        # decide whether the fan-out actually pays (payoff gate)
+        self.est_rows = est_rows
 
     @property
     def source(self) -> PlanNode:

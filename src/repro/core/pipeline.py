@@ -393,8 +393,13 @@ class CompileStage(Stage):
             q.info["shared_subplans"] = len(ctx.shared_keys)
         # partitioned shuffle service: clone pipeline-breaker consumers per
         # lane (compile time, after the plan-cache deepcopy, so cached plans
-        # re-expand under the session's current shuffle.partitions)
-        q.plan = s._expand_shuffle(q.plan, cfg)
+        # re-expand under the session's current shuffle.partitions); adaptive
+        # compile-time decisions (co-partition shuffle elision) land in
+        # q.info["adaptive"], where the runtime replanner appends later
+        adaptive_events = q.info.setdefault("adaptive", [])
+        q.plan = s._expand_shuffle(q.plan, cfg, events=adaptive_events)
+        if not adaptive_events:
+            del q.info["adaptive"]
         q.plan_pretty = q.plan.pretty()  # before compile_dag mutates the tree
         q.dag = compile_dag(q.plan)
         # structural validation (debug.validate_plans / REPRO_VALIDATE_PLANS):
@@ -448,10 +453,28 @@ class ExecuteStage(Stage):
 
     def _run_dag(self, q: QueryContext, qid: str, slot) -> VectorBatch:
         s, cfg, ctx = q.session, q.config, q.exec_ctx
+        # adaptive execution (pipelined mode only): replan the running DAG
+        # from live lane telemetry; decisions land in q.info["adaptive"]
+        # (EXPLAIN ANALYZE) and stream to poll() through note_adaptive
+        adaptive = None
+        pipelined = bool(cfg.get("exchange.pipeline", True)) \
+            and not cfg["speculative_execution"]
+        if pipelined and bool(cfg.get("adaptive.enabled", True)):
+            from .runtime.adaptive import AdaptiveManager
+
+            events = q.info.setdefault("adaptive", [])
+            if q.task is not None:
+                for ev in events:  # compile-time decisions (elision)
+                    q.task.note_adaptive(ev)
+            adaptive = AdaptiveManager(
+                cfg, events=events,
+                on_event=(q.task.note_adaptive if q.task is not None
+                          else None))
         sched = DAGScheduler(
             pool=s.wh.llap.executors if cfg["llap"] else None,
             speculative=cfg["speculative_execution"],
             vertex_delay=float(cfg.get("debug_vertex_delay_s", 0.0) or 0.0),
+            adaptive=adaptive,
         )
         if q.task is not None:
             q.task.note_vertices_total(len(q.dag.vertices))
@@ -479,6 +502,8 @@ class ExecuteStage(Stage):
         try:
             batch = sched.execute(q.dag, ctx, on_vertex_done=on_vertex,
                                   on_root_chunk=on_root_chunk)
+            if not q.info.get("adaptive", True):
+                del q.info["adaptive"]  # no adaptive decision fired
             s._persist_runtime_stats(q.plan, ctx)
             if any(sched.shared_scan_stats.values()):
                 q.info["shared_scans"] = dict(sched.shared_scan_stats)

@@ -50,26 +50,51 @@ class MaterializedNode(P.PlanNode):
     def __init__(self, names: List[str], tag: str,
                  partition: Optional[int] = None,
                  num_partitions: Optional[int] = None,
-                 partition_keys: Optional[List[str]] = None):
+                 partition_keys: Optional[List[str]] = None,
+                 sub_lane: Optional[int] = None,
+                 est_rows: Optional[float] = None):
         self.names = names
         self.tag = tag
         self.partition = partition
         self.num_partitions = num_partitions
         self.partition_keys = partition_keys or []
+        # adaptive hot-lane split: a placeholder reading one *sub-lane* of a
+        # producer's split shuffle lane (ShuffleWriter.sub_lane_reader index)
+        self.sub_lane = sub_lane
+        # the CBO row estimate the lane count was derived from (None under a
+        # fixed shuffle.partitions) — the adaptive payoff gate compares it
+        # against live producer rows
+        self.est_rows = est_rows
         self.batch: Optional[VectorBatch] = None
         self.source = None  # Exchange / ShuffleWriter (pipelined scheduling)
         self.inputs = []
+
+    def __deepcopy__(self, memo):
+        # adaptive replanning clones vertex plans (speculation clones,
+        # sub-lane consumers, collapse targets); the clone must NOT drag the
+        # bound runtime state along — batch/source rebind at vertex start
+        clone = MaterializedNode(
+            list(self.names), self.tag, partition=self.partition,
+            num_partitions=self.num_partitions,
+            partition_keys=list(self.partition_keys),
+            sub_lane=self.sub_lane, est_rows=self.est_rows)
+        memo[id(self)] = clone
+        return clone
 
     def output_names(self):
         return list(self.names)
 
     def key(self):
+        if self.sub_lane is not None:
+            return f"materialized({self.tag}#s{self.sub_lane})"
         if self.partition is not None:
             return (f"materialized({self.tag}"
                     f"#p{self.partition}/{self.num_partitions})")
         return f"materialized({self.tag})"
 
     def describe(self):
+        if self.sub_lane is not None:
+            return f"MaterializedEdge[{self.tag} sub-lane {self.sub_lane}]"
         if self.partition is not None:
             return (f"MaterializedEdge[{self.tag} "
                     f"lane {self.partition}/{self.num_partitions}]")
@@ -184,6 +209,7 @@ def compile_dag(plan: P.PlanNode) -> TaskDAG:
                     partition=child.partition,
                     num_partitions=child.num_partitions,
                     partition_keys=list(child.keys),
+                    est_rows=child.est_rows,
                 )
                 node.inputs[i] = placeholder
                 vertex.edge_types[dep] = SHUFFLE
@@ -290,12 +316,14 @@ class DAGScheduler:
         straggler_factor: float = 4.0,
         injected_delays: Optional[Dict[str, float]] = None,  # test hook
         vertex_delay: float = 0.0,  # debug/test hook: sleep per vertex
+        adaptive=None,  # AdaptiveManager (pipelined mode only)
     ):
         self.pool = pool
         self.speculative = speculative
         self.straggler_factor = straggler_factor
         self.injected_delays = injected_delays or {}
         self.vertex_delay = vertex_delay
+        self.adaptive = adaptive
         self.metrics: List[VertexMetrics] = []
         # serving tier: per-query shared-scan activity (ExecuteStage copies
         # this into q.info, surfaced through poll()/server_stats())
@@ -400,18 +428,30 @@ class DAGScheduler:
                 handle.release()
             return rows
 
+        adaptive = self.adaptive
+
         def run_vertex(vid: str) -> None:
             out_ex = exchanges[vid]
             try:
                 if cancel_token is not None:
                     cancel_token.check()
+                if adaptive is not None:
+                    # replanning gate: merge/clone vertices of adaptive
+                    # edges wait here for the split / collapse decision;
+                    # "skip" means the vertex was replanned away (its
+                    # consumers were rewired through a validated mutation)
+                    if adaptive.on_vertex_start(vid) == "skip":
+                        out_ex.close()
+                        return
                 if vid in self.injected_delays:
                     time.sleep(self.injected_delays[vid])
                 if self.vertex_delay:
                     time.sleep(self.vertex_delay)
                 v = dag.vertices[vid]
                 for mn in _walk_materialized(v.plan):
-                    mn.source = exchanges[mn.tag]
+                    src = exchanges[mn.tag]
+                    mn.source = (adaptive.source_for(vid, mn, src)
+                                 if adaptive is not None else src)
                 t0 = time.perf_counter()
                 rows: Optional[int] = None
                 if vid in shareable:
@@ -451,24 +491,39 @@ class DAGScheduler:
                         spilled_bytes=st["spilled_bytes"],
                         peak_buffered_rows=st["peak_buffered_rows"],
                     ))
+                if adaptive is not None:
+                    adaptive.note_vertex_done(vid, rows, dt)
                 if on_vertex_done is not None:
                     on_vertex_done(vid, rows, st)
             except BaseException as exc:  # noqa: BLE001 - re-raised below
+                out_ex.close(error=exc)
+                if adaptive is not None \
+                        and adaptive.note_vertex_error(vid, exc):
+                    return  # absorbed: a replaced vertex / speculation loser
                 with lock:
                     errors.append(exc)
-                out_ex.close(error=exc)
                 if cancel_token is not None and not cancel_token.is_set():
                     # wake sibling vertices blocked on other exchanges
                     cancel_token.cancel(f"vertex {vid} failed: {exc}")
 
+        if adaptive is not None:
+            adaptive.begin(dag, ctx, exchanges, lane_spec,
+                           run_vertex=run_vertex, cancel_token=cancel_token)
         futures = [pool.submit(run_vertex, vid) for vid in dag.topo_order()]
         try:
             for fut in futures:
                 fut.result()
+            if adaptive is not None:
+                # adaptive vertices (collapse targets, sub-lane consumers,
+                # speculation clones) run on their own threads; the query is
+                # done only when they are
+                adaptive.wait()
             if errors:
                 raise self._primary_error(errors)
             return exchanges[dag.root].read_all()
         finally:
+            if adaptive is not None:
+                adaptive.finish()
             # published exchanges may still feed attached consumers of other
             # queries: retire them through the registry, which discards when
             # the last consumer releases; the scratch dir (spilled chunks)
@@ -629,6 +684,11 @@ class _VertexExecutor(Executor):
         if node.source is not None:  # pipelined: replay the edge's exchange
             from .shuffle import ShuffleWriter, partition_select
 
+            if node.sub_lane is not None:
+                # adaptive hot-lane split: one round-robin sub-lane of a
+                # split shuffle lane
+                yield from node.source.sub_lane_reader(node.sub_lane)
+                return
             if node.partition is not None:
                 if isinstance(node.source, ShuffleWriter):
                     yield from node.source.lane_reader(node.partition)

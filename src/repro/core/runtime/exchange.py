@@ -191,6 +191,20 @@ class Exchange:
             self._cond.notify_all()
 
     # ------------------------------------------------------------ consumers
+    def available(self, i: int) -> bool:
+        """Would ``reader()``'s next step at position ``i`` return without
+        blocking?  True when chunk ``i`` exists or the stream is closed
+        (end-of-stream / error both resolve immediately).  The adaptive
+        layer's swappable sources poll this to drain an exchange without
+        ever committing to a blocking wait."""
+        with self._cond:
+            return i < len(self._slots) or self._closed
+
+    def failed(self) -> bool:
+        """True when the producer closed this exchange with an error."""
+        with self._cond:
+            return self._error is not None
+
     def reader(self) -> Iterator[VectorBatch]:
         """A pass over the full chunk sequence (blocking iterator).
 

@@ -212,6 +212,7 @@ class QueryTask:
             "pool": None, "vertices_total": 0, "vertices_done": 0,
             "rows_spilled": 0, "bytes_spilled": 0, "spill": {},
             "peak_buffered_rows": 0, "lanes": {}, "shared_scans": {},
+            "adaptive": [],
         }
 
     # ------------------------------------------------------------- state
@@ -277,6 +278,7 @@ class QueryTask:
             out["spill"] = {k: dict(v) for k, v in out["spill"].items()}
             out["lanes"] = {k: [dict(l) for l in v]
                             for k, v in out["lanes"].items()}
+            out["adaptive"] = [dict(ev) for ev in out["adaptive"]]
             out["state"] = self._state
             out["queue_wait_ms"] = (
                 round((self.admitted_at - self.submitted_at) * 1e3, 3)
@@ -304,6 +306,12 @@ class QueryTask:
     def note_shared_scans(self, stats: Dict[str, int]) -> None:
         with self._cond:
             self._progress["shared_scans"] = dict(stats)
+
+    def note_adaptive(self, event: Dict[str, object]) -> None:
+        """One adaptive replanning decision (lane split, fan-out collapse,
+        speculation swap, elided shuffle, declined mutation)."""
+        with self._cond:
+            self._progress["adaptive"].append(dict(event))
 
     def note_vertex_done(self, vid: Optional[str] = None,
                          stats: Optional[Dict[str, int]] = None) -> None:

@@ -40,7 +40,10 @@ from .exec import _FOLD_FN
 from .vector import VectorBatch
 
 # auto mode: one lane per this many estimated input rows, capped at the
-# host's core count (lanes beyond the cores just pay routing overhead)
+# host's core count (lanes beyond the cores just pay routing overhead).
+# Both thresholds are declared config keys (shuffle.auto_rows_per_partition
+# / shuffle.auto_scan_fed_rows_per_partition) — the module constants are
+# only the registry defaults' mirrors for callers without a config.
 AUTO_ROWS_PER_PARTITION = 32_768
 AUTO_MAX_PARTITIONS = 8
 
@@ -137,6 +140,7 @@ class ShuffleWriter:
                  keys: Sequence[str], engine: str = "auto",
                  batch_rows: int = 8192):
         self.tag = tag
+        self.cfg = cfg
         self.num_partitions = int(num_partitions)
         self.keys = list(keys)
         self.engine = engine
@@ -157,6 +161,17 @@ class ShuffleWriter:
             [] for _ in range(self.num_partitions)
         ]
         self._pending_rows = [0] * self.num_partitions
+        # adaptive execution: a lane split mid-stream by the hot-lane
+        # mitigation routes its *remaining* rows round-robin over fresh
+        # sub-lane exchanges (round-robin, not sub-hash: a single hot key
+        # would land every row in one sub-hash bucket).  Splits happen on
+        # the producer thread only (inside the put -> on_progress callback),
+        # so routing state needs no lock; consumers address sub-lanes
+        # through :meth:`sub_lane_reader` global indices.
+        self._subs: List[Exchange] = []
+        self._split: Dict[int, Tuple[int, int]] = {}  # lane -> (start, ways)
+        self._rr: Dict[int, int] = {}
+        self.on_progress = None  # callable(writer) | None, set by adaptive
 
     # ------------------------------------------------------------ producer
     def put(self, batch: VectorBatch) -> None:
@@ -168,11 +183,23 @@ class ShuffleWriter:
                                 self.engine)
         for p in range(self.num_partitions):
             part = batch.select(codes == p)
-            if part.num_rows:
-                self._pending[p].append(part)
-                self._pending_rows[p] += part.num_rows
-                if self._pending_rows[p] >= self.batch_rows:
-                    self._flush(p)
+            if not part.num_rows:
+                continue
+            split = self._split.get(p)
+            if split is not None:
+                start, ways = split
+                j = start + self._rr[p] % ways
+                self._rr[p] += 1
+                self._subs[j].put(part)
+                continue
+            self._pending[p].append(part)
+            self._pending_rows[p] += part.num_rows
+            if self._pending_rows[p] >= self.batch_rows:
+                self._flush(p)
+        if self.on_progress is not None:
+            # adaptive telemetry hook: runs on the producer thread so a
+            # split decision mutates routing state without a lock
+            self.on_progress(self)
 
     def _flush(self, p: int) -> None:
         parts = self._pending[p]
@@ -184,22 +211,58 @@ class ShuffleWriter:
                           else VectorBatch.concat(parts))
         self._seen[p] = True
 
+    def split_lane(self, p: int, ways: int) -> List[int]:
+        """Split lane ``p``'s *remaining* stream across ``ways`` fresh
+        sub-lane exchanges (hot-lane skew mitigation).
+
+        Producer-thread only.  The already-buffered prefix stays in lane
+        ``p`` (its exchange closes now, bounding the original consumer),
+        and every subsequent routed morsel round-robins over the sub-lanes.
+        Returns the global sub-lane indices for :meth:`sub_lane_reader`."""
+        assert p not in self._split and 0 <= p < self.num_partitions
+        ways = max(int(ways), 2)
+        self._flush(p)
+        if not self._seen[p] and self._proto is not None:
+            self.lanes[p].put(self._proto)
+            self._seen[p] = True
+        self.lanes[p].close()
+        start = len(self._subs)
+        for j in range(ways):
+            ex = Exchange(f"{self.tag}.p{p}.s{j}", self.cfg,
+                          buffer_rows=self.cfg.buffer_rows,
+                          buffer_bytes=self.cfg.buffer_bytes)
+            ex.retain = False  # exactly one adaptive consumer per sub-lane
+            self._subs.append(ex)
+        self._split[p] = (start, ways)
+        self._rr[p] = 0
+        return list(range(start, start + ways))
+
     def close(self, error: Optional[BaseException] = None) -> None:
         if error is None:
             for p in range(self.num_partitions):
-                self._flush(p)
+                if p not in self._split:
+                    self._flush(p)
             if self._proto is not None:
                 # operators downstream rely on at least one (possibly empty)
                 # schema-carrying morsel per stream
                 for p, seen in enumerate(self._seen):
                     if not seen:
                         self.lanes[p].put(self._proto)
+                for ex in self._subs:
+                    if ex.total_rows == 0:
+                        ex.put(self._proto)
         for lane in self.lanes:
             lane.close(error=error)
+        for ex in self._subs:
+            ex.close(error=error)
 
     # ------------------------------------------------------------ consumers
     def lane_reader(self, partition: int):
         return self.lanes[partition].reader()
+
+    def sub_lane_reader(self, idx: int):
+        """Reader over one adaptive sub-lane created by :meth:`split_lane`."""
+        return self._subs[idx].reader()
 
     def reader(self):
         """Full-stream replay (lane by lane) for an unpartitioned consumer
@@ -229,27 +292,46 @@ class ShuffleWriter:
         for p, lane in enumerate(self.lanes):
             lane.retain = full_readers > 0 or lane_readers[p] != 1
 
+    def lane_rows(self) -> List[int]:
+        """Live per-lane routed row counts (pending + exchanged), including
+        sub-lane rows credited to their parent lane — the adaptive layer's
+        skew signal."""
+        rows = [lane.total_rows + self._pending_rows[p]
+                for p, lane in enumerate(self.lanes)]
+        for p, (start, ways) in list(self._split.items()):
+            rows[p] += sum(self._subs[j].total_rows
+                           for j in range(start, start + ways))
+        return rows
+
     def stats(self) -> Dict[str, object]:
         per_lane = [lane.stats() for lane in self.lanes]
+        per_sub = [ex.stats() for ex in list(self._subs)]
         agg = {
-            "rows": sum(s["rows"] for s in per_lane),
-            "spilled_rows": sum(s["spilled_rows"] for s in per_lane),
-            "spilled_bytes": sum(s["spilled_bytes"] for s in per_lane),
-            "spilled_chunks": sum(s["spilled_chunks"] for s in per_lane),
+            "rows": sum(s["rows"] for s in per_lane + per_sub),
+            "spilled_rows": sum(s["spilled_rows"] for s in per_lane + per_sub),
+            "spilled_bytes": sum(s["spilled_bytes"]
+                                 for s in per_lane + per_sub),
+            "spilled_chunks": sum(s["spilled_chunks"]
+                                  for s in per_lane + per_sub),
             "peak_buffered_rows": sum(s["peak_buffered_rows"]
-                                      for s in per_lane),
-            "freed_chunks": sum(s["freed_chunks"] for s in per_lane),
+                                      for s in per_lane + per_sub),
+            "freed_chunks": sum(s["freed_chunks"] for s in per_lane + per_sub),
         }
         agg["lanes"] = [
             {"rows": s["rows"], "spilled_rows": s["spilled_rows"],
              "spilled_bytes": s["spilled_bytes"]}
             for s in per_lane
         ]
+        if self._split:
+            agg["splits"] = {p: ways
+                             for p, (_, ways) in sorted(self._split.items())}
         return agg
 
     def discard(self) -> None:
         for lane in self.lanes:
             lane.discard()
+        for ex in list(self._subs):
+            ex.discard()
 
 
 # ===========================================================================
@@ -313,26 +395,72 @@ def _distinct_partition_col(node: P.Aggregate) -> Optional[str]:
     return col
 
 
+def _copartition_lanes(agg: P.Aggregate,
+                       union: P.PlanNode) -> Optional[List[P.PlanNode]]:
+    """Lane-join list when ``agg`` can reuse ``union``'s shuffle lanes.
+
+    ``union`` is the already-expanded lane Union of a shuffle join.  When
+    the aggregate's group keys cover the join's shuffle keys on a side
+    whose rows survive the join intact, every group lives wholly inside
+    one lane (same shuffle-key values -> same hash -> same lane, including
+    null-extended outer rows), so the aggregate can run per-lane on the
+    join's lanes and elide its own shuffle hop entirely."""
+    if not (isinstance(union, P.Union) and union.all
+            and len(union.inputs) >= 2):
+        return None
+    lanes = union.inputs
+    gk = set(agg.group_keys)
+    for i, j in enumerate(lanes):
+        if not (isinstance(j, P.Join) and j.strategy == "shuffle"
+                and isinstance(j.left, P.ShuffleRead)
+                and isinstance(j.right, P.ShuffleRead)
+                and j.left.partition == i
+                and j.left.num_partitions == len(lanes)
+                and j.right.partition == i
+                and j.right.num_partitions == len(lanes)):
+            return None
+        # coverage must come from a side whose key columns reach the join
+        # output unmodified: the left side for every supported kind (outer
+        # rows keep their left keys), the right side only for inner joins
+        left_cover = (set(j.left_keys) <= gk
+                      and j.kind in ("inner", "left", "semi", "anti"))
+        right_cover = set(j.right_keys) <= gk and j.kind == "inner"
+        if not (left_cover or right_cover):
+            return None
+    return list(lanes)
+
+
 def expand_shuffle_partitions(plan: P.PlanNode, config: dict,
-                              cost_model=None) -> P.PlanNode:
+                              cost_model=None,
+                              events: Optional[list] = None) -> P.PlanNode:
     """Clone pipeline-breaker consumers per partition (compile time).
 
     Runs after federated split expansion and after shared-work detection —
     clone keys embed their ``ShuffleRead`` lane, so clones are never
     mistaken for shared subplans.  Runtime-filter producer subtrees are left
     untouched (they execute inline inside scan vertices).
+
+    Compile-time adaptive decisions (co-partition shuffle elision) are
+    appended to ``events`` so they surface in ``poll()["adaptive"]`` and
+    EXPLAIN ANALYZE alongside the runtime ones.
     """
     cfg_value = config.get("shuffle.partitions", 1)
     if cfg_value in (None, "", 0, 1, "1"):
         return plan
+    auto_rows = int(config.get("shuffle.auto_rows_per_partition",
+                               AUTO_ROWS_PER_PARTITION))
+    auto_scan_fed = int(config.get("shuffle.auto_scan_fed_rows_per_partition",
+                                   AUTO_SCAN_FED_ROWS_PER_PARTITION))
+    elide = bool(config.get("adaptive.elide_copartition", True))
     replaced: Dict[int, P.PlanNode] = {}
     visited: set = set()
 
-    def partitions_for(node: P.PlanNode) -> int:
+    def partitions_for(node: P.PlanNode) -> Tuple[int, Optional[float]]:
+        """(lane count, CBO row estimate the count was derived from)."""
         if cfg_value != "auto":
-            return resolve_partition_count(cfg_value, None)
+            return resolve_partition_count(cfg_value, None), None
         if cost_model is None:
-            return 1
+            return 1, None
         try:
             if isinstance(node, P.Join):
                 rows = max(cost_model.estimate(node.left).rows,
@@ -340,28 +468,30 @@ def expand_shuffle_partitions(plan: P.PlanNode, config: dict,
             else:
                 rows = cost_model.estimate(node.inputs[0]).rows
         except Exception:  # noqa: BLE001 - estimation must never break compile
-            return 1
+            return 1, None
         # scan-fed consumers (aggregate/DISTINCT straight over a scan) pay
         # for an exchange hop the single-lane plan doesn't have: demand a
         # much larger per-lane share before fanning out (the BENCH_PR5
         # partitioned-DISTINCT regression)
-        per_lane = AUTO_ROWS_PER_PARTITION
+        per_lane = auto_rows
         if not isinstance(node, P.Join) and _scan_fed(node.inputs[0]):
-            per_lane = AUTO_SCAN_FED_ROWS_PER_PARTITION
+            per_lane = auto_scan_fed
         return resolve_partition_count("auto", rows,
-                                       rows_per_partition=per_lane)
+                                       rows_per_partition=per_lane), rows
 
     def expand(node: P.PlanNode) -> Optional[P.PlanNode]:
         if isinstance(node, P.Join) and _expandable_join(node):
-            n = partitions_for(node)
+            n, rows = partitions_for(node)
             if n <= 1:
                 return None
             left, right = node.left, node.right
             clones: List[P.PlanNode] = []
             for p in range(n):
                 clones.append(P.Join(
-                    P.ShuffleRead(left, node.left_keys, p, n),
-                    P.ShuffleRead(right, node.right_keys, p, n),
+                    P.ShuffleRead(left, node.left_keys, p, n,
+                                  est_rows=rows),
+                    P.ShuffleRead(right, node.right_keys, p, n,
+                                  est_rows=rows),
                     node.kind, list(node.left_keys), list(node.right_keys),
                     residual=node.residual, strategy="shuffle",
                 ))
@@ -369,13 +499,47 @@ def expand_shuffle_partitions(plan: P.PlanNode, config: dict,
         if isinstance(node, P.Aggregate) and node.grouping_sets is None:
             source = node.input
             if node.group_keys:
+                if elide:
+                    # co-partition elision: the input was already expanded
+                    # (post-order visit) — if it is the lane Union of a
+                    # shuffle join whose keys the group keys cover, reuse
+                    # those lanes and skip this aggregate's own shuffle hop.
+                    # A pruning Project between the aggregate and the join
+                    # is pushed into each lane (column projection is
+                    # per-row, so it commutes with the lane partition).
+                    inner, wrap = source, None
+                    if isinstance(inner, P.Project) and all(
+                            isinstance(e, A.Col) and e.qualified == name
+                            for e, name in inner.exprs):
+                        # identity pruning only: a renaming projection would
+                        # break the key-name coverage check below
+                        inner, wrap = inner.input, inner
+                    lanes = _copartition_lanes(node, inner)
+                    if lanes is not None:
+                        if events is not None:
+                            events.append({
+                                "kind": "elided_shuffle",
+                                "at": "compile",
+                                "lanes": len(lanes),
+                                "group_keys": list(node.group_keys),
+                                "join_keys": list(lanes[0].left_keys),
+                            })
+                        if wrap is not None:
+                            lanes = [P.Project(lane, list(wrap.exprs))
+                                     for lane in lanes]
+                        return P.Union(
+                            [P.Aggregate(lane, list(node.group_keys),
+                                         list(node.aggs))
+                             for lane in lanes],
+                            all=True)
                 # groups are disjoint across lanes: UNION ALL merges exactly
-                n = partitions_for(node)
+                n, rows = partitions_for(node)
                 if n <= 1:
                     return None
                 clones = [
                     P.Aggregate(
-                        P.ShuffleRead(source, node.group_keys, p, n),
+                        P.ShuffleRead(source, node.group_keys, p, n,
+                                      est_rows=rows),
                         list(node.group_keys), list(node.aggs))
                     for p in range(n)
                 ]
@@ -386,11 +550,12 @@ def expand_shuffle_partitions(plan: P.PlanNode, config: dict,
                 # global DISTINCT: partition on the DISTINCT argument so each
                 # lane owns a disjoint value range; per-lane partials fold in
                 # a global merging Aggregate (COUNT partials re-SUM)
-                n = partitions_for(node)
+                n, rows = partitions_for(node)
                 if n <= 1:
                     return None
                 clones = [
-                    P.Aggregate(P.ShuffleRead(source, [dcol], p, n),
+                    P.Aggregate(P.ShuffleRead(source, [dcol], p, n,
+                                              est_rows=rows),
                                 [], list(node.aggs))
                     for p in range(n)
                 ]

@@ -341,15 +341,19 @@ class Session:
                                        config or self.config)
 
     def _expand_shuffle(self, plan: P.PlanNode,
-                        config: Optional[dict] = None) -> P.PlanNode:
+                        config: Optional[dict] = None,
+                        events: Optional[list] = None) -> P.PlanNode:
         """Clone pipeline-breaker consumers per shuffle partition (compile
-        time, like split expansion — cached plans re-expand per execution)."""
+        time, like split expansion — cached plans re-expand per execution).
+        Compile-time adaptive decisions (co-partition shuffle elision) are
+        appended to ``events``."""
         from .optimizer.cost import CostModel
         from .runtime.shuffle import expand_shuffle_partitions
 
         cfg = config or self.config
         cm = CostModel(self.hms, handler_resolver=self.wh.resolve_handler)
-        return expand_shuffle_partitions(plan, cfg, cost_model=cm)
+        return expand_shuffle_partitions(plan, cfg, cost_model=cm,
+                                         events=events)
 
     def _expand_for_compile(self, plan: P.PlanNode,
                             config: Optional[dict] = None) -> P.PlanNode:
@@ -433,8 +437,15 @@ class Session:
         lines.append("stage timings:")
         for name, ms in q.info.get("stage_times_ms", {}).items():
             lines.append(f"  {name}: {ms:.3f} ms")
+        adaptive = q.info.get("adaptive")
+        if adaptive:
+            lines.append("adaptive decisions:")
+            for ev in adaptive:
+                rest = ", ".join(f"{k}={v}" for k, v in ev.items()
+                                 if k != "kind")
+                lines.append(f"  {ev.get('kind')}: {rest}")
         for k, v in q.info.items():
-            if k not in ("stage_times_ms",):
+            if k not in ("stage_times_ms", "adaptive"):
                 lines.append(f"{k}: {v}")
         return QueryResult(VectorBatch({"plan": np.array(lines)}), q.info)
 

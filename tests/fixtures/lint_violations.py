@@ -40,3 +40,10 @@ def bare_wait():
     with _cond:
         # REP004b: wait outside a predicate loop
         _cond.wait()
+
+
+def hijack_running_query(dag, vertex):
+    # REP005: structural mutation of a live DAG outside the validating
+    # adopt-helper (no check_dag, no rollback)
+    dag.vertices.pop("v3", None)
+    vertex.deps = ["v9"]

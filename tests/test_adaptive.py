@@ -1,0 +1,266 @@
+"""Adaptive execution: live-telemetry replanning (hot-lane split, payoff
+collapse, co-partition shuffle elision, straggler speculation).
+
+Every test runs with the structural DAG validator on (suite-wide autouse
+fixture), so each mid-query mutation the adaptive layer adopts is
+re-checked by ``repro.analysis.check_dag``.  Parity tests compare the
+adaptive run's rowset against a run with ``adaptive.enabled = False`` on
+the same warehouse.
+"""
+import tempfile
+
+import numpy as np
+import pytest
+
+import repro.api as db
+from repro.analysis import lockdep
+from repro.core.acid import AcidTable
+from repro.core.runtime.vector import VectorBatch
+from repro.core.session import Warehouse
+
+SKEW_N = 400_000
+UNIF_N = 300_000
+AUTO = {"shuffle.partitions": "auto", "result_cache": False}
+
+
+def _load(wh, name, cols):
+    tx = wh.hms.open_txn()
+    AcidTable(wh.hms.get_table(name), wh.hms).insert(tx, VectorBatch(cols))
+    wh.hms.commit_txn(tx)
+
+
+def rowset(r):
+    b = r.batch
+    return sorted(zip(*[b.cols[c].tolist() for c in b.column_names]))
+
+
+def kinds(r):
+    return [e["kind"] for e in (r.info.get("adaptive") or [])]
+
+
+@pytest.fixture(scope="module")
+def wh():
+    wh = Warehouse(tempfile.mkdtemp(prefix="adaptive_wh_"))
+    s = wh.session()
+    s.execute("CREATE TABLE skewed (k INT, v INT)")
+    s.execute("CREATE TABLE big (k INT, v INT)")
+    s.execute("CREATE TABLE dim (k INT, name INT)")
+    rng = np.random.default_rng(7)
+    k = rng.integers(0, 64, SKEW_N)
+    k[rng.random(SKEW_N) < 0.85] = 7  # one key owns ~85% of the rows
+    _load(wh, "skewed", {"k": k, "v": np.arange(SKEW_N) % 100})
+    _load(wh, "big", {"k": rng.integers(0, 64, UNIF_N),
+                      "v": np.arange(UNIF_N) % 100})
+    _load(wh, "dim", {"k": np.arange(64), "name": np.arange(64) * 10})
+    return wh
+
+
+def run_pair(wh, sql, on_cfg=None, off_cfg=None):
+    """(adaptive-on result, adaptive-off result) for the same query."""
+    s_on = wh.session(**{**AUTO, **(on_cfg or {})})
+    s_off = wh.session(**{**AUTO, "adaptive.enabled": False,
+                          **(off_cfg or {})})
+    return s_on.execute(sql), s_off.execute(sql)
+
+
+# ===========================================================================
+# hot-lane split
+# ===========================================================================
+class TestSkewSplit:
+    def test_skewed_agg_parity_and_split_event(self, wh):
+        r_on, r_off = run_pair(
+            wh, "SELECT k, SUM(v) AS sv, COUNT(*) AS c FROM skewed "
+                "GROUP BY k")
+        assert rowset(r_on) == rowset(r_off)
+        split = [e for e in r_on.info["adaptive"]
+                 if e["kind"] == "lane_split"]
+        assert split, r_on.info.get("adaptive")
+        ev = split[0]
+        assert ev["ways"] >= 2
+        assert ev["lane_rows"] > ev["lane_median"]
+
+    def test_skewed_min_max_parity(self, wh):
+        # all foldable agg functions through the merge-fold rewrite
+        r_on, r_off = run_pair(
+            wh, "SELECT k, MIN(v) AS lo, MAX(v) AS hi, COUNT(*) AS c "
+                "FROM skewed GROUP BY k")
+        assert rowset(r_on) == rowset(r_off)
+
+    def test_uniform_data_never_splits(self, wh):
+        r_on, r_off = run_pair(
+            wh, "SELECT k, SUM(v) AS sv FROM big GROUP BY k")
+        assert rowset(r_on) == rowset(r_off)
+        assert "lane_split" not in kinds(r_on)
+
+    def test_distinct_agg_not_split(self, wh):
+        # DISTINCT lanes own disjoint value ranges: round-robin sub-lanes
+        # would double-count, so the split must never trigger there
+        r_on, r_off = run_pair(
+            wh, "SELECT COUNT(DISTINCT k) AS dk FROM skewed")
+        assert rowset(r_on) == rowset(r_off)
+        assert "lane_split" not in kinds(r_on)
+
+
+# ===========================================================================
+# payoff-gated fan-out (collapse)
+# ===========================================================================
+class TestCollapseFanout:
+    # the residual predicate is opaque to the CBO (default selectivity), so
+    # the estimate keeps the 2-lane fan-out while the actual join output is
+    # a few thousand rows — the payoff gate must collapse the lanes
+    SQL = ("SELECT b.v, SUM(b.k) AS sv FROM big b JOIN dim d "
+           "ON b.k = d.k WHERE b.k + d.name < 20 GROUP BY b.v")
+    CFG = {"broadcast_threshold_rows": 0}
+
+    def test_collapse_parity_and_event(self, wh):
+        r_on, r_off = run_pair(wh, self.SQL, self.CFG, self.CFG)
+        assert rowset(r_on) == rowset(r_off)
+        ev = [e for e in r_on.info["adaptive"]
+              if e["kind"] == "collapsed_fanout"]
+        assert ev, r_on.info.get("adaptive")
+        assert ev[0]["rows"] < ev[0]["threshold"] <= ev[0]["est_rows"]
+
+    def test_high_volume_fanout_kept(self, wh):
+        r_on, r_off = run_pair(
+            wh, "SELECT b.v, SUM(b.k) AS sv FROM big b JOIN dim d "
+                "ON b.k = d.k GROUP BY b.v", self.CFG, self.CFG)
+        assert rowset(r_on) == rowset(r_off)
+        assert "collapsed_fanout" not in kinds(r_on)
+
+
+# ===========================================================================
+# co-partition shuffle elision
+# ===========================================================================
+class TestCopartitionElision:
+    CFG = {"broadcast_threshold_rows": 0}
+    SQL = ("SELECT b.k, SUM(b.v) AS sv FROM big b JOIN dim d "
+           "ON b.k = d.k GROUP BY b.k")
+
+    def test_elision_parity_and_event(self, wh):
+        r_on, r_off = run_pair(
+            wh, self.SQL, self.CFG,
+            {**self.CFG, "adaptive.elide_copartition": False})
+        assert rowset(r_on) == rowset(r_off)
+        ev = [e for e in r_on.info["adaptive"]
+              if e["kind"] == "elided_shuffle"]
+        assert ev and ev[0]["at"] == "compile"
+        assert set(ev[0]["join_keys"]) <= set(ev[0]["group_keys"])
+
+    def test_no_elision_when_keys_not_covered(self, wh):
+        # GROUP BY b.v does not cover the join keys: groups span lanes, so
+        # the aggregate must keep its own shuffle hop
+        r_on, _ = run_pair(
+            wh, "SELECT b.v, SUM(b.k) AS sv FROM big b JOIN dim d "
+                "ON b.k = d.k GROUP BY b.v", self.CFG, self.CFG)
+        assert "elided_shuffle" not in kinds(r_on)
+
+    def test_elision_config_off(self, wh):
+        s = wh.session(**{**AUTO, **self.CFG,
+                          "adaptive.elide_copartition": False})
+        r = s.execute(self.SQL)
+        assert "elided_shuffle" not in kinds(r)
+
+
+# ===========================================================================
+# straggler speculation
+# ===========================================================================
+@pytest.fixture()
+def lockdep_on(monkeypatch):
+    monkeypatch.setenv("REPRO_LOCKDEP", "1")
+    lockdep.reset()
+    yield
+    lockdep.reset()
+
+
+def _compile(wh, session, sql):
+    from repro.core.optimizer.rules import Optimizer
+    from repro.core.runtime.dag import compile_dag
+    from repro.core.sql.binder import Binder
+    from repro.core.sql.parser import parse
+
+    plan = Binder(wh.hms).bind(parse(sql))
+    plan = Optimizer(wh.hms).optimize(plan)
+    return compile_dag(session._expand_shuffle(plan, session.config))
+
+
+class TestSpeculation:
+    SQL = "SELECT k, SUM(v) AS sv FROM big GROUP BY k"
+
+    def _run(self, wh, delays, events):
+        from repro.core.runtime.adaptive import AdaptiveManager
+        from repro.core.runtime.dag import DAGScheduler
+
+        s = wh.session(**{"shuffle.partitions": 2})
+        dag = _compile(wh, s, self.SQL)
+        cfg = dict(s.config)
+        cfg.update({"adaptive.speculation": True,
+                    "adaptive.straggler_min_s": 0.1,
+                    "adaptive.straggler_factor": 2.0})
+        adaptive = AdaptiveManager(cfg, events=events)
+        clones = sorted(vid for vid, v in dag.vertices.items()
+                        if "Aggregate" in v.plan.describe() and v.deps)
+        sched = DAGScheduler(
+            adaptive=adaptive,
+            injected_delays={clones[i]: d for i, d in delays.items()})
+        ctx = s._make_ctx({**s.config, "result_cache": False})
+        return sched.execute(dag, ctx)
+
+    def test_straggler_swap_stress_under_lockdep(self, wh, lockdep_on):
+        """Repeated first-finisher swaps with the lock-order sanitizer on:
+        a lock-order inversion between the manager, the swappable source,
+        and the exchanges raises from lockdep and fails the test."""
+        s_ref = wh.session(**{"shuffle.partitions": 2,
+                              "result_cache": False})
+        expect = rowset(s_ref.execute(self.SQL))
+        swaps = 0
+        for round_ in range(3):
+            events = []
+            out = self._run(wh, {round_ % 2: 1.2}, events)
+            got = sorted(zip(*[out.cols[c].tolist()
+                               for c in out.column_names]))
+            assert got == expect, f"round {round_} parity"
+            ks = [e["kind"] for e in events]
+            assert "speculated" in ks, events
+            swaps += ks.count("speculation_swap")
+        assert swaps >= 1, "no clone ever won a swap across 3 rounds"
+
+    def test_speculation_off_by_default(self, wh):
+        r_on, _ = run_pair(
+            wh, self.SQL)
+        assert "speculated" not in kinds(r_on)
+
+
+# ===========================================================================
+# surfacing: poll() and EXPLAIN ANALYZE
+# ===========================================================================
+class TestSurfacing:
+    def test_explain_analyze_shows_adaptive_log(self, wh):
+        s = wh.session(**AUTO)
+        r = s.execute("EXPLAIN ANALYZE SELECT k, SUM(v) AS sv "
+                      "FROM skewed GROUP BY k")
+        text = "\n".join(str(x) for x in r.batch.cols["plan"])
+        assert "adaptive decisions:" in text
+        assert "lane_split" in text
+
+    def test_poll_surfaces_adaptive_events(self, wh):
+        conn = db.connect(warehouse=wh, **AUTO)
+        try:
+            h = conn.execute_async(
+                "SELECT k, SUM(v) AS sv FROM skewed GROUP BY k")
+            h.result(timeout=60)
+            events = h.poll().get("adaptive") or []
+            assert any(e["kind"] == "lane_split" for e in events), events
+        finally:
+            conn.close()
+
+
+# ===========================================================================
+# resilience: adaptive under spill pressure
+# ===========================================================================
+class TestUnderPressure:
+    def test_split_parity_with_tiny_buffers(self, wh):
+        # force lane spill while the hot lane splits mid-stream
+        cfg = {"exchange.buffer_rows": 4096}
+        r_on, r_off = run_pair(
+            wh, "SELECT k, SUM(v) AS sv FROM skewed GROUP BY k", cfg, cfg)
+        assert rowset(r_on) == rowset(r_off)

@@ -1,4 +1,4 @@
-"""Tests for the correctness toolkit: invariant lint (REP001..REP004),
+"""Tests for the correctness toolkit: invariant lint (REP001..REP005),
 lockdep sanitizer, structural plan validator, and the config-key registry
 they hang off."""
 import os
@@ -29,7 +29,8 @@ class TestLint:
     def test_fixture_seeds_every_checker(self):
         findings = lint.lint_file(FIXTURE)
         codes = sorted(f.code for f in findings)
-        assert codes == ["REP001", "REP002", "REP003", "REP004", "REP004"]
+        assert codes == ["REP001", "REP002", "REP003", "REP004", "REP004",
+                         "REP005", "REP005"]
 
     def test_rep001_declared_key_passes(self):
         src = 'def f(config):\n    return config.get("cbo", True)\n'
@@ -89,6 +90,39 @@ class TestLint:
                "    done.wait(60)\n")  # Event.wait: receiver not a cond
         assert lint.lint_source(src, "core/x.py") == []
 
+    def test_rep005_mutation_outside_adopt_fires(self):
+        src = ("def steal(dag):\n"
+               "    dag.vertices.pop('v1', None)\n"
+               "    dag.vertices['v9'] = object()\n")
+        fs = lint.lint_source(src, "src/repro/core/runtime/scheduler.py")
+        assert [f.code for f in fs] == ["REP005", "REP005"]
+
+    def test_rep005_reads_pass(self):
+        src = ("def peek(dag):\n"
+               "    v = dag.vertices['v1']\n"
+               "    return list(v.deps), dict(v.edge_types)\n")
+        assert lint.lint_source(src, "src/repro/core/runtime/x.py") == []
+
+    def test_rep005_apply_undo_closures_allowed_in_adaptive(self):
+        src = ("def _collapse(self, dag):\n"
+               "    def apply():\n"
+               "        dag.vertices.pop('v1', None)\n"
+               "    def undo():\n"
+               "        dag.vertices['v1'] = object()\n"
+               "    self._adopt(apply, undo, {})\n")
+        path = "src/repro/core/runtime/adaptive.py"
+        assert lint.lint_source(src, path) == []
+        # the same mutations outside apply/undo still fire in adaptive.py
+        bad = ("def _collapse(self, dag):\n"
+               "    dag.vertices.pop('v1', None)\n")
+        assert [f.code for f in lint.lint_source(bad, path)] == ["REP005"]
+
+    def test_rep005_dag_py_construction_allowed(self):
+        src = ("def compile_dag(plan):\n"
+               "    dag.vertices['v1'] = object()\n"
+               "    vertex.deps = ['v2']\n")
+        assert lint.lint_source(src, "src/repro/core/runtime/dag.py") == []
+
     def test_suppression_comment(self):
         src = ('def f(config):\n'
                '    return config.get("oops")  # repro-lint: REP001\n')
@@ -109,7 +143,7 @@ class TestLint:
             [sys.executable, "-m", "repro.analysis", FIXTURE],
             capture_output=True, text=True, env=env, cwd=REPO_ROOT)
         assert dirty.returncode == 1, dirty.stdout + dirty.stderr
-        for code in ("REP001", "REP002", "REP003", "REP004"):
+        for code in ("REP001", "REP002", "REP003", "REP004", "REP005"):
             assert code in dirty.stdout
 
 
