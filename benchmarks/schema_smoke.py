@@ -1,0 +1,51 @@
+"""Schema-contract smoke: the static checker must be clean on real plans.
+
+Compiles every SSB query and every skewed adaptive-benchmark query at small
+scale and asserts the schema-flow checker (SCH001..SCH006) reports zero
+findings on both the optimized plan and the compiled task DAG.  Any finding
+here is either genuine dtype drift in the engine or a checker false
+positive — both block the merge.
+
+Run: ``PYTHONPATH=src python -m benchmarks.schema_smoke``
+"""
+import sys
+import tempfile
+
+from benchmarks.ssb import SKEWED_QUERIES, SSB_QUERIES, load_skewed, load_ssb
+
+
+def main() -> int:
+    from repro.analysis.schema_check import (validate_dag_schemas,
+                                             validate_plan_schema)
+    from repro.core.runtime.dag import compile_dag
+    from repro.core.session import Warehouse
+
+    failures = []
+    suites = [
+        ("ssb", load_ssb, SSB_QUERIES, dict(scale_rows=2000)),
+        ("skewed", load_skewed, SKEWED_QUERIES,
+         dict(scale_rows=4000, n_keys=16)),
+    ]
+    for name, loader, queries, kwargs in suites:
+        wh = Warehouse(tempfile.mkdtemp(prefix=f"schema_smoke_{name}_"))
+        loader(wh, **kwargs)
+        s = wh.session()
+        for qid, sql in queries.items():
+            from repro.core.sql.parser import parse
+
+            plan, _info = s._plan_query(parse(sql))
+            for finding in validate_plan_schema(plan):
+                failures.append(f"{name}/{qid} (plan): {finding}")
+            expanded = s._expand_for_compile(plan)
+            for finding in validate_dag_schemas(compile_dag(expanded)):
+                failures.append(f"{name}/{qid} (dag): {finding}")
+            print(f"ok {name}/{qid}")
+    for f in failures:
+        print(f"FINDING {f}", file=sys.stderr)
+    n = sum(len(q) for _, _, q, _ in suites)
+    print(f"schema_smoke: {n} queries, {len(failures)} finding(s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

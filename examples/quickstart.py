@@ -301,6 +301,32 @@ def main():
           f"(every DAG this session compiles is structure-checked)")
     checked.close()
 
+    print("\n-- schema contract --")
+    # every bound plan node carries a typed output schema (name -> numpy
+    # dtype + nullability, inferred from catalog types through the same
+    # promotion rules the executor applies).  The schema-flow checker
+    # (`repro.analysis.schema_check`, rules SCH001..SCH006) re-verifies
+    # the contract on every compiled and adaptively mutated DAG under
+    # `debug.validate_plans`: column refs resolve, UNION/shuffle branches
+    # promote, aggregate merge folds preserve partial-state dtypes, join
+    # and partition keys hash in the same dtype family, federated
+    # residuals only touch surviving columns, and edge placeholders agree
+    # with their producers.  `debug.check_batches` (REPRO_CHECK_BATCHES)
+    # adds the runtime half: every exchange morsel is asserted against
+    # the edge's declared schema — zero overhead when off.  EXPLAIN shows
+    # the inferred contract inline:
+    schema_checked = db.connect(warehouse=conn.warehouse,
+                                **{"debug.validate_plans": True,
+                                   "debug.check_batches": True})
+    sc_cur = schema_checked.cursor()
+    sc_cur.execute(
+        "EXPLAIN SELECT i_category, COUNT(*) AS n FROM store_sales, item"
+        " WHERE ss_item_sk = i_item_sk GROUP BY i_category")
+    for (line,) in sc_cur.fetchall():
+        if "schema:" in line or "->" in line:
+            print(line)
+    schema_checked.close()
+
     print("\n== adaptive execution: live-telemetry replanning (PR 8) ==")
     # with `adaptive.enabled` (the default) the running DAG is replanned
     # from lane telemetry: a hot shuffle lane splits its remaining rows

@@ -26,6 +26,13 @@ REP005  a running query's DAG (``vertices`` / ``deps`` / ``edge_types``)
         the whole DAG with ``check_dag`` and rolls back on violation) —
         any other mid-query structural edit bypasses validation and can
         wedge the pipelined scheduler.
+REP006  streaming operators (generator functions) must derive output
+        columns from the input batch or the node's declared schema, never
+        from a hard-coded ``VectorBatch({...})`` dict literal — literal
+        column names drift silently when the schema contract
+        (``repro.core.schema``) evolves, and the static checker
+        (SCH001-006) cannot see them.  Hidden ``__``-prefixed columns
+        (ACID bookkeeping, dummy evaluation rows) are exempt.
 
 Findings can be suppressed per line with ``# repro-lint: REPnnn`` (comma
 separated, or ``all``).  The CLI (``python -m repro.analysis``) exits
@@ -45,6 +52,7 @@ CODES = {
     "REP003": "full materialization outside allowlist",
     "REP004": "lock/condition misuse",
     "REP005": "live-DAG mutation outside validated adoption",
+    "REP006": "operator builds VectorBatch from a dict literal",
 }
 
 # REP001 only polices the warehouse runtime; the modeling/training side of
@@ -235,6 +243,24 @@ class _Checker(ast.NodeVisitor):
             if attr is not None:
                 self._check_dag_mutation(node, attr,
                                          f".{node.func.attr}()")
+        # REP006: VectorBatch({...}) dict literal inside an operator
+        if (self._in_generator()
+                and _terminal_name(node.func) == "VectorBatch"
+                and node.args and isinstance(node.args[0], ast.Dict)):
+            literal_names = [
+                k.value for k in node.args[0].keys
+                if isinstance(k, ast.Constant) and isinstance(k.value, str)
+                and not k.value.startswith("__")
+            ]
+            if literal_names:
+                self._emit(
+                    "REP006", node.lineno,
+                    f"operator hard-codes output column(s) "
+                    f"{literal_names[:4]} in a VectorBatch dict literal — "
+                    f"derive names from the input batch or the node's "
+                    f"declared schema so the schema contract can check "
+                    f"them",
+                )
         self.generic_visit(node)
 
     # --------------------------------------------------------------- REP002

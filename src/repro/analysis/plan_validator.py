@@ -214,8 +214,18 @@ def _cached_plans(plan_cache):
 
 
 def check_dag(dag, plan_cache=None, staged=None) -> None:
-    """Raise :class:`PlanValidationError` if ``dag`` is malformed."""
+    """Raise :class:`PlanValidationError` if ``dag`` is malformed.
+
+    Runs the structural pass first, then (only on structurally sound DAGs,
+    so findings never cascade) the schema-flow pass from
+    :mod:`repro.analysis.schema_check` — every caller of this chokepoint
+    (the pipeline's compile/re-optimize hook, the adaptive ``_adopt``
+    helper) therefore gets the typed schema contract checked as well."""
     violations = validate_dag(dag, plan_cache, staged=staged)
+    if not violations:
+        from .schema_check import validate_dag_schemas
+
+        violations = validate_dag_schemas(dag)
     if violations:
         raise PlanValidationError(violations)
 

@@ -478,7 +478,9 @@ def _np_dtype(sql_type: str) -> np.dtype:
     t = sql_type.upper()
     if t.startswith(("INT", "BIGINT", "SMALLINT", "TINYINT")):
         return np.dtype(np.int64)
-    if t.startswith(("DECIMAL", "FLOAT", "DOUBLE", "REAL")):
+    if t.startswith("FLOAT"):
+        return np.dtype(np.float32)  # Hive FLOAT is single-precision
+    if t.startswith(("DECIMAL", "DOUBLE", "REAL")):
         return np.dtype(np.float64)
     if t.startswith(("VARCHAR", "CHAR", "STRING", "TEXT", "TIMESTAMP", "DATE")):
         return np.dtype("U64")

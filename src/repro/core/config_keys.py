@@ -142,6 +142,10 @@ _KEYS = (
     _k("debug.validate_plans", False, bool,
        doc="run the structural DAG validator on every compiled plan "
            "(also enabled process-wide by the REPRO_VALIDATE_PLANS env var)"),
+    _k("debug.check_batches", False, bool,
+       doc="runtime schema sanitizer: Exchange.put asserts every morsel "
+           "conforms to the edge's declared schema (also enabled "
+           "process-wide by the REPRO_CHECK_BATCHES env var)"),
 )
 
 CONFIG_KEYS: Dict[str, ConfigKey] = {k.name: k for k in _KEYS}

@@ -137,7 +137,8 @@ class MemTableHandler(StorageHandler):
         if batch is None:
             return None
         kinds = {"i": "BIGINT", "u": "BIGINT", "f": "DOUBLE", "b": "BOOLEAN"}
-        return [(c, kinds.get(v.dtype.kind, "STRING"))
+        return [(c, "FLOAT" if v.dtype == np.float32
+                 else kinds.get(v.dtype.kind, "STRING"))
                 for c, v in batch.cols.items()]
 
     def table_props(self, schema: str, table: str) -> Dict[str, str]:

@@ -20,6 +20,10 @@ from ..sql import ast as A
 
 class PlanNode:
     inputs: List["PlanNode"] = []
+    # inferred output schema (repro.core.schema.Schema), attached by the
+    # binder / pipeline via annotate_plan; None = not (re)inferred yet.
+    # Deliberately NOT part of key()/digest(): schema is derived metadata.
+    schema = None
 
     def output_names(self) -> List[str]:
         raise NotImplementedError
@@ -33,7 +37,10 @@ class PlanNode:
 
     def pretty(self, indent: int = 0) -> str:
         head = " " * indent + self.describe()
-        return "\n".join([head] + [c.pretty(indent + 2) for c in self.inputs])
+        lines = [head]
+        if self.schema is not None:
+            lines.append(" " * indent + "  schema: " + self.schema.describe())
+        return "\n".join(lines + [c.pretty(indent + 2) for c in self.inputs])
 
     def describe(self) -> str:
         return type(self).__name__

@@ -34,6 +34,7 @@ from .optimizer.shared_work import find_shared_subplans
 from ..analysis.lockdep import make_lock
 from ..analysis.plan_validator import maybe_validate_dag
 from .runtime.dag import DAGScheduler, compile_dag, describe_exchanges
+from .schema import annotate_plan
 from .runtime.exec import MemoryPressureError
 from .runtime.scheduler import stream_batch_rows
 from .runtime.vector import VectorBatch
@@ -400,6 +401,10 @@ class CompileStage(Stage):
         q.plan = s._expand_shuffle(q.plan, cfg, events=adaptive_events)
         if not adaptive_events:
             del q.info["adaptive"]
+        # (re)infer the typed schema contract on the expanded tree: EXPLAIN
+        # shows per-node schemas, compile copies them onto edge placeholders
+        # and the scheduler declares them on exchanges
+        annotate_plan(q.plan)
         q.plan_pretty = q.plan.pretty()  # before compile_dag mutates the tree
         q.dag = compile_dag(q.plan)
         # structural validation (debug.validate_plans / REPRO_VALIDATE_PLANS):
@@ -551,7 +556,9 @@ class ExecuteStage(Stage):
             plan2 = s._expand_federated(plan2, cfg2)
             if cfg2["shared_work"]:
                 ctx2.shared_keys = find_shared_subplans(plan2)
-            dag2 = compile_dag(s._expand_shuffle(plan2, cfg2))
+            plan2 = s._expand_shuffle(plan2, cfg2)
+            annotate_plan(plan2)
+            dag2 = compile_dag(plan2)
             # §4.2 re-optimized plans never came from the cache, but their
             # rewritten shuffle/split wiring is exactly where structural
             # bugs would hide — validate them like first compiles

@@ -491,6 +491,8 @@ class AdaptiveManager:
         edge.collapsed = True
         ex = Exchange(vid_new, self.excfg)
         ex.retain = False  # single consumer: the merge
+        ex.declare_schema(
+            getattr(self.dag.vertices[vid_new].plan, "schema", None))
         self.exchanges[vid_new] = ex
         for cvid in edge.clones.values():
             self._skip.add(cvid)
@@ -607,6 +609,8 @@ class AdaptiveManager:
         for svid in sub_vids:
             ex = Exchange(svid, self.excfg)
             ex.retain = False
+            ex.declare_schema(
+                getattr(self.dag.vertices[svid].plan, "schema", None))
             self.exchanges[svid] = ex
         writer.split_lane(p, ways)
         for svid in sub_vids:
@@ -663,6 +667,8 @@ class AdaptiveManager:
             self._staged.discard(svid)
             return
         ex = Exchange(svid, self.excfg)
+        ex.declare_schema(
+            getattr(self.dag.vertices[svid].plan, "schema", None))
         self.exchanges[svid] = ex
         self._spec_of[vid] = svid
         self._spec_clone_of[svid] = vid

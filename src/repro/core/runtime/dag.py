@@ -52,9 +52,13 @@ class MaterializedNode(P.PlanNode):
                  num_partitions: Optional[int] = None,
                  partition_keys: Optional[List[str]] = None,
                  sub_lane: Optional[int] = None,
-                 est_rows: Optional[float] = None):
+                 est_rows: Optional[float] = None,
+                 schema=None):
         self.names = names
         self.tag = tag
+        # the producer's inferred output schema (repro.core.schema.Schema),
+        # copied from the plan node this edge replaced at compile time
+        self.schema = schema
         self.partition = partition
         self.num_partitions = num_partitions
         self.partition_keys = partition_keys or []
@@ -77,7 +81,8 @@ class MaterializedNode(P.PlanNode):
             list(self.names), self.tag, partition=self.partition,
             num_partitions=self.num_partitions,
             partition_keys=list(self.partition_keys),
-            sub_lane=self.sub_lane, est_rows=self.est_rows)
+            sub_lane=self.sub_lane, est_rows=self.est_rows,
+            schema=self.schema)
         memo[id(self)] = clone
         return clone
 
@@ -150,6 +155,14 @@ def compile_dag(plan: P.PlanNode) -> TaskDAG:
     dimension subtree), so vertex construction is memoized per node object
     and boundary placeholders are filled by tag at run time.
     """
+    # (re-)infer output schemas on the final optimized tree: optimizer
+    # rewrites (projection pushdown, shuffle expansion) invalidate any
+    # bind-time annotation, and edge placeholders/exchange declarations
+    # below copy node.schema — a stale schema here would make the runtime
+    # sanitizer reject correct morsels
+    from ..schema import annotate_plan
+
+    annotate_plan(plan)
     vertices: Dict[str, Vertex] = {}
     built: Dict[int, str] = {}
     counter = [0]
@@ -210,13 +223,15 @@ def compile_dag(plan: P.PlanNode) -> TaskDAG:
                     num_partitions=child.num_partitions,
                     partition_keys=list(child.keys),
                     est_rows=child.est_rows,
+                    schema=child.schema,
                 )
                 node.inputs[i] = placeholder
                 vertex.edge_types[dep] = SHUFFLE
                 continue
             if isinstance(child, _BLOCKING) or isinstance(node, P.Join):
                 dep = build(child)
-                placeholder = MaterializedNode(child.output_names(), dep)
+                placeholder = MaterializedNode(child.output_names(), dep,
+                                               schema=child.schema)
                 node.inputs[i] = placeholder
                 vertex.edge_types[dep] = _edge_type(node, i)
             else:
@@ -273,6 +288,9 @@ def describe_exchanges(dag: TaskDAG) -> List[str]:
             if dep in lanes:
                 n, keys = lanes[dep]
                 extra = f" partitions={n} keys={keys}"
+            sch = getattr(dag.vertices[dep].plan, "schema", None)
+            if sch is not None:
+                extra += f" schema=[{sch.describe()}]"
             lines.append(f"  {dep} -> {vid}: {kind}{extra}")
     return lines
 
@@ -386,6 +404,12 @@ class DAGScheduler:
                                                   8192) or 8192))
             else:
                 exchanges[vid] = Exchange(vid, excfg)
+        # typed contract: every edge declares its producer's inferred output
+        # schema; under debug.check_batches/REPRO_CHECK_BATCHES the exchange
+        # asserts each morsel conforms (free when unset — declare_schema
+        # leaves the put() fast path untouched)
+        for vid, ex in exchanges.items():
+            ex.declare_schema(getattr(dag.vertices[vid].plan, "schema", None))
         # refcount readers per edge: a single-consumer FORWARD edge (and a
         # single-reader shuffle lane) frees chunks (and unlinks spill files)
         # as they are consumed instead of retaining them until query end;

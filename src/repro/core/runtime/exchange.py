@@ -52,6 +52,10 @@ class ExchangeConfig:
             or DEFAULT_BUFFER_BYTES
         )
         self.spill = bool(config.get("exchange.spill", True))
+        # runtime schema sanitizer (lockdep pattern: resolved once per query,
+        # zero overhead on put() unless enabled AND a schema is declared)
+        self.check_batches = bool(os.environ.get("REPRO_CHECK_BATCHES")
+                                  or config.get("debug.check_batches"))
         self.scratch_dir = scratch_dir
         self._own_scratch = False
 
@@ -138,9 +142,24 @@ class Exchange:
         self.spilled_chunks = 0
         self.peak_buffered_rows = 0
         self.freed_chunks = 0
+        # declared edge schema (repro.core.schema.Schema) — set by the DAG
+        # scheduler from the producer vertex's inferred plan schema.
+        # ``_verify`` is non-None only when cfg.check_batches is on AND a
+        # schema is known: the put() hot path pays one attribute test.
+        self.schema = None
+        self._verify = None
+
+    def declare_schema(self, schema) -> None:
+        """Declare the edge's column contract; under ``REPRO_CHECK_BATCHES``
+        / ``debug.check_batches`` every put() asserts conformance."""
+        self.schema = schema
+        self._verify = schema if (schema is not None
+                                  and self.cfg.check_batches) else None
 
     # ------------------------------------------------------------ producer
     def put(self, batch: VectorBatch) -> None:
+        if self._verify is not None:
+            self._verify.check_batch(batch, context=f"exchange {self.tag}")
         n = batch.num_rows
         nbytes = batch_nbytes(batch)
         with self._cond:
@@ -248,7 +267,12 @@ class Exchange:
 
     def read_all(self) -> VectorBatch:
         chunks = list(self.reader())
-        return VectorBatch.concat(chunks) if chunks else VectorBatch({})
+        if not chunks:
+            # keep the declared schema on zero-row results instead of
+            # collapsing to a columnless batch
+            return VectorBatch.empty(self.schema) if self.schema is not None \
+                else VectorBatch({})
+        return VectorBatch.concat(chunks, context=f"exchange {self.tag}")
 
     # ------------------------------------------------------------ teardown
     def stats(self) -> Dict[str, int]:

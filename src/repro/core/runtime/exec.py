@@ -300,7 +300,9 @@ def eval_expr(e: A.Expr, batch: VectorBatch, ctx: Optional[ExecContext] = None) 
         t = e.to_type.upper()
         if t.startswith(("INT", "BIGINT")):
             return v.astype(np.float64).astype(np.int64) if v.dtype.kind != "U" else np.array([int(float(x)) for x in v], dtype=np.int64)
-        if t.startswith(("DOUBLE", "FLOAT", "DECIMAL", "REAL")):
+        if t.startswith("FLOAT"):
+            return v.astype(np.float32)  # Hive FLOAT is single-precision
+        if t.startswith(("DOUBLE", "DECIMAL", "REAL")):
             return v.astype(np.float64)
         return v.astype(str)
     raise ExecError(f"cannot evaluate {type(e).__name__}")
@@ -706,16 +708,21 @@ class Executor:
 
     def _stream_union(self, node: P.Union):
         names = node.output_names()
+        # mixed-dtype branches (int64 UNION ALL float64, ...) must emit one
+        # consistent promoted dtype per column — numpy promotion, taken from
+        # the inferred schema — instead of flickering per source chunk
+        promote = _union_promotions(node)
         if node.all:
             # UNION ALL is streaming-safe: chunks pass through aligned
             for i in node.inputs:
                 for o in self.stream(i):
-                    yield VectorBatch(dict(zip(
-                        names, (o.cols[c] for c in o.column_names))))
+                    yield _promoted(VectorBatch(dict(zip(
+                        names, (o.cols[c] for c in o.column_names)))), promote)
             return
         # DISTINCT union stays a pipeline breaker (dedup needs the full set)
         aligned = [
-            VectorBatch(dict(zip(names, (o.cols[c] for c in o.column_names))))
+            _promoted(VectorBatch(dict(zip(
+                names, (o.cols[c] for c in o.column_names)))), promote)
             for i in node.inputs for o in self.stream(i)
         ]
         out = VectorBatch.concat(aligned)
@@ -774,11 +781,19 @@ class Executor:
                 yield out
             return
 
+        if node.kind in ("left", "full"):
+            # the padded side pads with NaN (float64): cast its numeric
+            # columns up front so matched and unmatched chunks agree on one
+            # dtype instead of flickering int64/float64 per morsel
+            rb = _null_extendable(rb)
+
         # probe side streams: each morsel joins against the build dictionary
         probe: Optional[_BuildTable] = None
         rmatched = np.zeros(rb.num_rows, dtype=bool)
         lproto: Optional[VectorBatch] = None
         for lb in self.stream(node.left):
+            if node.kind == "full":
+                lb = _null_extendable(lb)
             if probe is None:
                 lproto = lb
                 probe = _BuildTable(rb, node.right_keys, node.left_keys,
@@ -1089,6 +1104,43 @@ def _expand_matches(lo, counts, order):
     return li, ri
 
 
+def _null_extendable(b: VectorBatch) -> VectorBatch:
+    """Cast an outer join's padded side to its NULL-capable dtypes:
+    numeric/bool columns widen to float64 (NaN-null), strings unchanged."""
+    return VectorBatch({
+        k: v.astype(np.float64) if v.dtype.kind in ("i", "u", "b", "f")
+        and v.dtype != np.float64 else v
+        for k, v in b.cols.items()
+    })
+
+
+def _union_promotions(node: P.Union) -> Dict[str, np.dtype]:
+    """Per-output-column promoted numpy dtype for a Union's branches, from
+    the inferred schema when present (only widening casts; empty when the
+    schema is unknown or branches already agree)."""
+    schema = getattr(node, "schema", None)
+    if schema is None:
+        return {}
+    out: Dict[str, np.dtype] = {}
+    for name, ty in schema:
+        if ty.token in ("int64", "float64", "float32", "bool"):
+            out[name] = np.dtype(ty.token)
+    return out
+
+
+def _promoted(b: VectorBatch, promote: Dict[str, np.dtype]) -> VectorBatch:
+    if not promote:
+        return b
+    cols = {}
+    for k, v in b.cols.items():
+        want = promote.get(k)
+        if want is not None and v.dtype != want and v.dtype.kind in "iufb" \
+                and np.promote_types(v.dtype, want) == want:
+            v = v.astype(want)  # widening only; narrowing is real drift
+        cols[k] = v
+    return VectorBatch(cols)
+
+
 def _concat_sides(lb: VectorBatch, rb: VectorBatch) -> VectorBatch:
     cols = dict(lb.cols)
     for k, v in rb.cols.items():
@@ -1144,6 +1196,11 @@ def _agg_column(spec, vals, codes, ng) -> np.ndarray:
             init[np.isinf(init)] = np.nan
             if vals.dtype.kind in ("i", "u") and not np.isnan(init).any():
                 return init.astype(np.int64)
+            if vals.dtype == np.float32:
+                # MIN/MAX never create new values: a float32 input keeps its
+                # dtype through partial/merge folds (the float64 round-trip
+                # is value-exact, and NaN-null survives the cast)
+                return init.astype(np.float32)
             return init
         out = np.full(ng, _NULL_STR, dtype=vals.dtype if vals.dtype.itemsize else "U32")
         for g in range(ng):

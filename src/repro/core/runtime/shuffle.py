@@ -172,6 +172,16 @@ class ShuffleWriter:
         self._split: Dict[int, Tuple[int, int]] = {}  # lane -> (start, ways)
         self._rr: Dict[int, int] = {}
         self.on_progress = None  # callable(writer) | None, set by adaptive
+        # declared edge schema — shared by every lane (and propagated to
+        # adaptive sub-lane exchanges as they are created)
+        self.schema = None
+
+    def declare_schema(self, schema) -> None:
+        self.schema = schema
+        for lane in self.lanes:
+            lane.declare_schema(schema)
+        for ex in self._subs:
+            ex.declare_schema(schema)
 
     # ------------------------------------------------------------ producer
     def put(self, batch: VectorBatch) -> None:
@@ -232,6 +242,7 @@ class ShuffleWriter:
                           buffer_rows=self.cfg.buffer_rows,
                           buffer_bytes=self.cfg.buffer_bytes)
             ex.retain = False  # exactly one adaptive consumer per sub-lane
+            ex.declare_schema(self.schema)
             self._subs.append(ex)
         self._split[p] = (start, ways)
         self._rr[p] = 0

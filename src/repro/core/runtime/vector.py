@@ -31,16 +31,37 @@ class VectorBatch:
 
     # -- construction --------------------------------------------------------
     @classmethod
-    def empty(cls, schema: Sequence[tuple]) -> "VectorBatch":
-        return cls({name: np.empty(0, dtype=dtype) for name, dtype in schema})
+    def empty(cls, schema) -> "VectorBatch":
+        """Zero-row batch carrying a schema: either ``(name, dtype)`` pairs
+        or a :class:`repro.core.schema.Schema` — so empty results and empty
+        spill-replay morsels keep correct column names/dtypes instead of
+        collapsing to ``{}``."""
+        pairs = schema.to_pairs() if hasattr(schema, "to_pairs") else schema
+        return cls({name: np.empty(0, dtype=dtype) for name, dtype in pairs})
 
     @classmethod
-    def concat(cls, batches: Iterable["VectorBatch"]) -> "VectorBatch":
+    def concat(cls, batches: Iterable["VectorBatch"],
+               context: Optional[str] = None) -> "VectorBatch":
+        """Concatenate morsels.  Zero-row schemaless placeholders (``{}``)
+        are dropped when schema-carrying batches exist; a genuine column-set
+        mismatch raises :class:`~repro.core.schema.SchemaMismatchError`
+        naming the offending edge instead of a bare ``KeyError``."""
         batches = [b for b in batches if b is not None]
         if not batches:
             return cls({})
-        keys = batches[0].cols.keys()
-        return cls({k: np.concatenate([b.cols[k] for b in batches]) for k in keys})
+        typed = [b for b in batches if b.cols]
+        if not typed:
+            return batches[0]
+        keys = typed[0].cols.keys()
+        for b in typed[1:]:
+            if b.cols.keys() != keys:
+                from ..schema import SchemaMismatchError
+
+                raise SchemaMismatchError(
+                    f"cannot concat batches with mismatched columns: "
+                    f"{list(keys)[:12]} vs {list(b.cols)[:12]}", context)
+        return cls({k: np.concatenate([b.cols[k] for b in typed])
+                    for k in keys})
 
     # -- basic properties ----------------------------------------------------
     @property

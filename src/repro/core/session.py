@@ -50,6 +50,7 @@ from .pipeline import (
     plan_only_stages,
 )
 from .runtime.dag import compile_dag, describe_exchanges
+from .schema import annotate_plan
 from .runtime.exec import ExecContext, Executor, eval_expr
 from .runtime.llap import LlapDaemon, LlapIO
 from .runtime.scheduler import QueryScheduler, QueryTask
@@ -191,8 +192,11 @@ class Session:
         if isinstance(stmt, A.Explain):
             stmt = stmt.stmt
         plan, info = self._plan_query(stmt)
+        annotate_plan(plan)  # per-node schema: lines in the rendering
         pretty = plan.pretty()  # before DAG compilation mutates the tree
-        dag = compile_dag(self._expand_for_compile(plan))
+        expanded = self._expand_for_compile(plan)
+        annotate_plan(expanded)
+        dag = compile_dag(expanded)
         lines = [pretty, "", f"DAG edges: {dag.edge_summary()}",
                  "exchanges:"] + describe_exchanges(dag)
         for k, v in info.items():
@@ -299,8 +303,11 @@ class Session:
 
     def explain_stmt(self, stmt) -> str:
         plan, info = self._plan_query(stmt)
+        annotate_plan(plan)
         pretty = plan.pretty()
-        dag = compile_dag(self._expand_for_compile(plan))
+        expanded = self._expand_for_compile(plan)
+        annotate_plan(expanded)
+        dag = compile_dag(expanded)
         edge_lines = "\n".join(describe_exchanges(dag))
         return (pretty + f"\nDAG edges: {dag.edge_summary()}"
                 + f"\nexchanges:\n{edge_lines}\ninfo: {info}")

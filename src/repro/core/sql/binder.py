@@ -95,11 +95,16 @@ class Binder:
     def bind(self, stmt) -> P.PlanNode:
         if isinstance(stmt, A.Select):
             plan, _ = self.bind_select(stmt, None)
-            return plan
-        if isinstance(stmt, A.SetOp):
+        elif isinstance(stmt, A.SetOp):
             plan, _ = self.bind_setop(stmt, None)
-            return plan
-        raise BindError(f"cannot bind {type(stmt).__name__} as a query")
+        else:
+            raise BindError(f"cannot bind {type(stmt).__name__} as a query")
+        # attach the typed schema contract (tolerant: EXPLAIN/compile
+        # re-annotate after rewrites; the strict check is schema_check)
+        from ..schema import annotate_plan
+
+        annotate_plan(plan)
+        return plan
 
     def bind_setop(self, s: A.SetOp, outer: Optional[Scope]):
         lplan, lnames = self._bind_query(s.left, outer)

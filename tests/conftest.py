@@ -53,13 +53,16 @@ def _per_test_alarm(request):
 
 @pytest.fixture(autouse=True)
 def _validate_all_plans(monkeypatch):
-    """Run the structural DAG validator on every plan the suite compiles.
+    """Run the structural+schema DAG validator on every plan the suite
+    compiles, and the runtime batch sanitizer on every exchange put.
 
     ``repro.analysis.plan_validator`` checks the validation flag per compile
-    (not at import), so setting the env var here covers warehouses created
-    anywhere in a test — the whole tier-1 run doubles as validator coverage.
+    (not at import), so setting the env vars here covers warehouses created
+    anywhere in a test — the whole tier-1 run doubles as validator and
+    schema-contract coverage.
     """
     monkeypatch.setenv("REPRO_VALIDATE_PLANS", "1")
+    monkeypatch.setenv("REPRO_CHECK_BATCHES", "1")
 
 
 @pytest.fixture()

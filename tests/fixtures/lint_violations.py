@@ -47,3 +47,10 @@ def hijack_running_query(dag, vertex):
     # adopt-helper (no check_dag, no rollback)
     dag.vertices.pop("v3", None)
     vertex.deps = ["v9"]
+
+
+def conjure_columns(VectorBatch, np, inputs):
+    # REP006: operator invents output columns as a dict literal instead of
+    # deriving them from the input batch or the declared schema
+    for batch in inputs:
+        yield VectorBatch({"made_up": np.zeros(batch.num_rows)})

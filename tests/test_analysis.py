@@ -1,4 +1,4 @@
-"""Tests for the correctness toolkit: invariant lint (REP001..REP005),
+"""Tests for the correctness toolkit: invariant lint (REP001..REP006),
 lockdep sanitizer, structural plan validator, and the config-key registry
 they hang off."""
 import os
@@ -30,7 +30,7 @@ class TestLint:
         findings = lint.lint_file(FIXTURE)
         codes = sorted(f.code for f in findings)
         assert codes == ["REP001", "REP002", "REP003", "REP004", "REP004",
-                         "REP005", "REP005"]
+                         "REP005", "REP005", "REP006"]
 
     def test_rep001_declared_key_passes(self):
         src = 'def f(config):\n    return config.get("cbo", True)\n'
@@ -97,6 +97,29 @@ class TestLint:
         fs = lint.lint_source(src, "src/repro/core/runtime/scheduler.py")
         assert [f.code for f in fs] == ["REP005", "REP005"]
 
+    def test_rep006_dict_literal_in_operator_fires(self):
+        src = ("def _stream_x(self, node):\n"
+               "    for b in self.stream(node.input):\n"
+               "        yield VectorBatch({'v': b.cols['v'] * 2})\n")
+        fs = lint.lint_source(src, "src/repro/core/runtime/exec.py")
+        assert [f.code for f in fs] == ["REP006"]
+        assert "'v'" in fs[0].message
+
+    def test_rep006_derived_and_dunder_pass(self):
+        src = ("def _stream_x(self, node):\n"
+               "    for b in self.stream(node.input):\n"
+               "        yield VectorBatch({k: v for k, v in b.cols.items()})\n"
+               "        yield VectorBatch(dict(zip(node.names, b.cols.values())))\n"
+               "        yield VectorBatch({'__dummy__': b.cols['v']})\n")
+        assert lint.lint_source(src, "src/repro/core/runtime/exec.py") == []
+
+    def test_rep006_non_generator_passes(self):
+        # result assembly outside operators (EXPLAIN output, CLI tables)
+        # may hard-code columns: the rule is scoped to streaming operators
+        src = ("def explain(self, sql):\n"
+               "    return VectorBatch({'plan': lines})\n")
+        assert lint.lint_source(src, "src/repro/core/session.py") == []
+
     def test_rep005_reads_pass(self):
         src = ("def peek(dag):\n"
                "    v = dag.vertices['v1']\n"
@@ -143,7 +166,8 @@ class TestLint:
             [sys.executable, "-m", "repro.analysis", FIXTURE],
             capture_output=True, text=True, env=env, cwd=REPO_ROOT)
         assert dirty.returncode == 1, dirty.stdout + dirty.stderr
-        for code in ("REP001", "REP002", "REP003", "REP004", "REP005"):
+        for code in ("REP001", "REP002", "REP003", "REP004", "REP005",
+                     "REP006"):
             assert code in dirty.stdout
 
 
