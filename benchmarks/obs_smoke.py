@@ -1,0 +1,86 @@
+"""Observability smoke: a traced SSB join/agg must produce a valid trace.
+
+Runs two SSB representative queries (a join/aggregation and a single-dim
+filter flight) with ``obs.tracing`` on, then asserts the whole obs surface
+end to end:
+
+  * the trace has a span for every pipeline stage and a vertex record
+    (with compute / exchange-wait / spill-I/O split) for every DAG vertex;
+  * ``Connection.export_trace`` writes Chrome trace-event JSON that the
+    ``repro.analysis.trace_check`` validator accepts (ph/ts/pid/tid,
+    balanced B/E pairs, per-tid monotone timestamps);
+  * ``Connection.metrics()`` returns a non-empty registry snapshot and
+    ``Connection.query_log()`` recorded the runs.
+
+Any failure blocks the merge.  Run:
+``PYTHONPATH=src python -m benchmarks.obs_smoke``
+"""
+import json
+import os
+import sys
+import tempfile
+
+from benchmarks.ssb import SSB_QUERIES, load_ssb
+
+SMOKE_QUERIES = ("q1.1", "q3.1")  # filter flight + 3-table join/agg
+
+
+def main() -> int:
+    import repro.api as db
+    from repro.analysis.trace_check import validate_chrome_trace
+    from repro.core.session import Warehouse
+
+    failures = []
+    wh = Warehouse(tempfile.mkdtemp(prefix="obs_smoke_"))
+    load_ssb(wh, scale_rows=4000)
+    conn = db.connect(warehouse=wh, result_cache=False,
+                      **{"obs.tracing": True})
+    outdir = tempfile.mkdtemp(prefix="obs_smoke_traces_")
+    for qid in SMOKE_QUERIES:
+        h = conn.execute_async(SSB_QUERIES[qid])
+        h.result(120)
+        summ = h._task.trace.summary()
+        for stage in ("parse", "bind", "optimize", "compile", "execute"):
+            if stage not in summ["stages_ms"]:
+                failures.append(f"{qid}: no span for stage {stage!r}")
+        n_vertices = h.poll()["vertices_total"]
+        if len(summ["vertices"]) != n_vertices:
+            failures.append(
+                f"{qid}: {len(summ['vertices'])} vertex records for "
+                f"{n_vertices} DAG vertices")
+        for vid, v in summ["vertices"].items():
+            split = (v["compute_ms"] + v["exchange_wait_ms"]
+                     + v["spill_io_ms"])
+            if split > v["total_ms"] + 0.01:
+                failures.append(
+                    f"{qid}/{vid}: sub-phases {split}ms exceed total "
+                    f"{v['total_ms']}ms")
+        path = os.path.join(outdir, f"{qid.replace('.', '_')}.json")
+        conn.export_trace(h.query_id, path)
+        with open(path) as f:
+            problems = validate_chrome_trace(json.load(f))
+        failures.extend(f"{qid}: {p}" for p in problems)
+        print(f"obs_smoke: {qid} traced — {len(summ['vertices'])} "
+              f"vertices, {len(summ['events'])} events, export at {path}")
+
+    metrics = conn.metrics()
+    if not metrics["counters"]:
+        failures.append("metrics snapshot has no counters")
+    if metrics["counters"].get("query.succeeded", 0) < len(SMOKE_QUERIES):
+        failures.append("query.succeeded counter did not advance")
+    if len(conn.query_log()) < len(SMOKE_QUERIES):
+        failures.append("query log missing entries")
+    conn.close()
+
+    if failures:
+        print(f"obs_smoke: {len(failures)} failure(s)")
+        for f in failures:
+            print(" ", f)
+        return 1
+    print(f"obs_smoke: OK — {len(SMOKE_QUERIES)} traced queries validated, "
+          f"{len(metrics['counters'])} counters live")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

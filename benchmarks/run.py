@@ -32,10 +32,18 @@ Prints ``name,us_per_call,derived`` CSV rows plus per-section summaries.
                            zipf-skewed join/agg workload, plus a uniform
                            SSB Q1-Q4 no-regression check
                            -> BENCH_PR8.json
+  bench_pr10             : observability — tracing on vs off wall delta
+                           over SSB representatives (min-of-5; the span/
+                           event overhead a traced query pays), with each
+                           traced query's ``trace_summary`` (per-vertex
+                           compute/exchange-wait/spill-I/O) embedded
+                           -> BENCH_PR10.json
 
-``python -m benchmarks.run pr3|pr4|pr5|pr6|pr8 [--scale N] [--out PATH]`` runs
-only that PR's benchmark (the CI smoke invocations).  All wall-clock claims
-use min-of-5 timing (the ``timing`` field in each BENCH_PRn.json).
+``python -m benchmarks.run pr3|pr4|pr5|pr6|pr8|pr10 [--scale N] [--out PATH]``
+runs only that PR's benchmark (the CI smoke invocations).  All wall-clock
+claims use min-of-5 timing (the ``timing`` field in each BENCH_PRn.json).
+New BENCH reports embed a ``trace_summary`` where a traced run is part of
+the measurement (PR 10).
 """
 from __future__ import annotations
 
@@ -969,6 +977,98 @@ def bench_pr8(scale=400_000, out_path=None):
     return report
 
 
+def bench_pr10(scale=120_000, out_path=None):
+    """Observability (PR 10): what does tracing cost?
+
+    Runs SSB representatives Q1-Q4 with ``obs.tracing`` off and on
+    (min-of-5 wall after one warmup each), reports the per-query and
+    total deltas, and embeds each traced query's ``trace_summary``
+    (stage spans + per-vertex compute / exchange-wait / spill-I/O
+    breakdown) as the proof the trace actually covered the execution.
+    Writes BENCH_PR10.json.
+    """
+    import repro.api as db
+    from benchmarks.ssb import SSB_QUERIES, load_ssb
+    from repro.core.session import Warehouse
+
+    wh = Warehouse(tempfile.mkdtemp(prefix="bench_pr10_"))
+    load_ssb(wh, scale_rows=scale)
+    queries = ("q1.1", "q2.1", "q3.1", "q4.1")
+    modes = {"tracing_off": {}, "tracing_on": {"obs.tracing": True}}
+    common = {"result_cache": False}
+
+    def measure(conn, sql, reps=5):
+        """min-of-``reps`` wall after one warmup; keeps the best run's
+        handle so the traced mode can attach its trace summary."""
+        _pr3_measure(conn, sql)  # warm LLAP (paper reports warm cache)
+        best = None
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            h = conn.execute_async(sql)
+            n = sum(len(b) for b in h.fetch_stream(batch_rows=1024))
+            h.result(600)
+            wall = time.perf_counter() - t0
+            if best is None or wall < best["wall_s"]:
+                best = {"wall_s": wall, "rows": n, "handle": h}
+        return best
+
+    report = {
+        "scale_rows": scale,
+        "config": dict(common),
+        "timing": {"runs_per_cell": 5, "reduction": "min",
+                   "warmup_runs": 1},
+        "queries": {},
+    }
+    totals = {m: 0.0 for m in modes}
+    for name in queries:
+        cell = {}
+        for mode, overrides in modes.items():
+            conn = db.connect(warehouse=wh, **common, **overrides)
+            best = measure(conn, SSB_QUERIES[name])
+            conn.close()
+            totals[mode] += best["wall_s"]
+            cell[mode] = {"wall_ms": round(best["wall_s"] * 1e3, 3),
+                          "rows": best["rows"]}
+            if mode == "tracing_on":
+                # the trace is the evidence: stage spans + vertex split
+                summ = best["handle"]._task.trace.summary()
+                cell[mode]["trace_summary"] = {
+                    "stages_ms": summ["stages_ms"],
+                    "vertices": summ["vertices"],
+                    "n_events": len(summ["events"]),
+                }
+        cell["tracing_overhead_pct"] = round(
+            100.0 * (cell["tracing_on"]["wall_ms"]
+                     - cell["tracing_off"]["wall_ms"])
+            / max(cell["tracing_off"]["wall_ms"], 1e-3), 2)
+        emit(f"pr10.{name}.tracing_off",
+             cell["tracing_off"]["wall_ms"] * 1e3)
+        emit(f"pr10.{name}.tracing_on",
+             cell["tracing_on"]["wall_ms"] * 1e3,
+             f"overhead={cell['tracing_overhead_pct']}%")
+        report["queries"][name] = cell
+    wh.close()
+
+    report["summary"] = {
+        "total_wall_ms_tracing_off": round(totals["tracing_off"] * 1e3, 3),
+        "total_wall_ms_tracing_on": round(totals["tracing_on"] * 1e3, 3),
+        "total_tracing_overhead_pct": round(
+            100.0 * (totals["tracing_on"] - totals["tracing_off"])
+            / max(totals["tracing_off"], 1e-6), 2),
+        "per_query_overhead_pct": {
+            n: c["tracing_overhead_pct"]
+            for n, c in report["queries"].items()},
+    }
+    out_path = out_path or os.path.join(os.path.dirname(__file__),
+                                        "BENCH_PR10.json")
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    emit("pr10.total_tracing_overhead_pct",
+         report["summary"]["total_tracing_overhead_pct"] * 1e3)
+    return report
+
+
 def roofline_summary():
     d = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
     if not os.path.isdir(d):
@@ -1005,6 +1105,7 @@ def main() -> None:
     bench_pr5()
     bench_pr6()
     bench_pr8()
+    bench_pr10()
     roofline_summary()
     print()
     print(f"# paper-claims summary: v3-vs-v1 speedup {v1v3:.2f}x (paper: 4.6x avg),"
@@ -1018,7 +1119,8 @@ if __name__ == "__main__":
 
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("section", nargs="?", default="all",
-                        choices=["all", "pr3", "pr4", "pr5", "pr6", "pr8"])
+                        choices=["all", "pr3", "pr4", "pr5", "pr6", "pr8",
+                                 "pr10"])
     parser.add_argument("--scale", type=int, default=None,
                         help="row scale (pr3/pr5: SSB lineorder,"
                              " pr4: external); per-section default if unset")
@@ -1040,5 +1142,8 @@ if __name__ == "__main__":
     elif args.section == "pr8":
         print("name,us_per_call,derived")
         bench_pr8(scale=args.scale or 400_000, out_path=args.out)
+    elif args.section == "pr10":
+        print("name,us_per_call,derived")
+        bench_pr10(scale=args.scale or 120_000, out_path=args.out)
     else:
         main()

@@ -9,8 +9,10 @@ snapshot isolation, asynchronous query handles (``execute_async`` +
 execution over spill-aware exchanges (``exchange.*`` session config),
 federated catalogs (``CREATE CATALOG`` + three-part names with
 capability-negotiated pushdown, paper §6), EXPLAIN ANALYZE with per-stage
-pipeline timings, and adaptive execution (live-telemetry replanning: hot-
-lane splits, co-partition shuffle elision, payoff-gated fan-out).
+pipeline timings, adaptive execution (live-telemetry replanning: hot-
+lane splits, co-partition shuffle elision, payoff-gated fan-out), and the
+observability layer (per-query tracing with Perfetto-renderable export,
+the warehouse metrics registry, and the always-on query log).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -397,6 +399,50 @@ def main():
     for line in text[start:]:
         print(" ", line)
     adp2.close()
+
+    print("\n== observability: tracing, metrics, query log (PR 10) ==")
+    # `obs.tracing` (or REPRO_OBS_TRACING=1) records a structured
+    # QueryTrace per query: pipeline-stage spans, the WLM admission wait,
+    # every DAG vertex split into compute / exchange-wait / spill-I/O,
+    # shuffle lanes, federated split reads, kernel dispatches, and
+    # serving/adaptive events — all on one clock.  Tracing off costs one
+    # attribute test per site (the span helpers return a shared no-op).
+    traced = db.connect(warehouse=conn.warehouse, result_cache=False,
+                        **{"obs.tracing": True, "shuffle.partitions": 2})
+    ht = traced.execute_async(
+        "SELECT k, SUM(v) AS sv FROM skewed_sales GROUP BY k")
+    ht.result(60)
+    summ = ht._task.trace.summary()
+    print("traced stages:", sorted(summ["stages_ms"]))
+    for vid, v in summ["vertices"].items():
+        print(f"  vertex {vid}: total={v['total_ms']:.1f}ms "
+              f"compute={v['compute_ms']:.1f}ms "
+              f"exchange_wait={v['exchange_wait_ms']:.1f}ms "
+              f"spill_io={v['spill_io_ms']:.1f}ms rows={v['rows']}")
+    # export as Chrome trace-event JSON: open in Perfetto or
+    # chrome://tracing to see the query as a timeline
+    import os
+    trace_path = os.path.join(tempfile.gettempdir(), "quickstart_trace.json")
+    traced.export_trace(ht.query_id, trace_path)
+    print("Perfetto-renderable trace written to", trace_path)
+    # every counter/gauge/histogram flows through one MetricsRegistry;
+    # server_stats()/poll() keep their shapes but derive from it
+    m = conn.metrics()
+    print("metrics: query.succeeded =",
+          m["counters"].get("query.succeeded"),
+          "| result-cache hits =",
+          m["counters"].get("serving.result_cache.hits"),
+          "| kernel dispatches =",
+          {k.split(".", 2)[2]: v for k, v in m["counters"].items()
+           if k.startswith("kernels.dispatch.")} or "(engine=auto)")
+    print("query.wall_ms histogram:",
+          m["histograms"]["query.wall_ms"]["count"], "queries observed")
+    # the query log is an always-on bounded ring — no config needed
+    for entry in conn.query_log(limit=3):
+        print(f"  [{entry['status']}] {entry['qid'] or '-'} "
+              f"{entry['wall_ms']:.1f}ms rows={entry['rows']} "
+              f"cache_hit={entry['cache_hit']}: {entry['sql'][:48]}...")
+    traced.close()
 
     conn.close()
 

@@ -23,7 +23,7 @@ def _default_paths():
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="repo-specific invariant lint (REP001..REP006)",
+        description="repo-specific invariant lint (REP001..REP007)",
     )
     ap.add_argument("paths", nargs="*",
                     help="files or directories to lint "

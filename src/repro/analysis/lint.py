@@ -33,6 +33,15 @@ REP006  streaming operators (generator functions) must derive output
         (``repro.core.schema``) evolves, and the static checker
         (SCH001-006) cannot see them.  Hidden ``__``-prefixed columns
         (ACID bookkeeping, dummy evaluation rows) are exempt.
+REP007  traced subsystems (``core/runtime``, ``core/serving``,
+        ``core/federation``) must not read ``time.monotonic()`` /
+        ``time.perf_counter()`` directly — timing goes through
+        ``repro.core.obs.clock`` (or a trace span), so every duration a
+        trace, metric, or EXPLAIN ANALYZE reports comes off one clock.
+        Raw reads drift out of trace timelines silently (the tracer
+        timestamps spans on the obs clock).  The obs package itself and
+        two wait-timing sites (WLM admission deadlines, the exchange
+        stall detector) are allowlisted.
 
 Findings can be suppressed per line with ``# repro-lint: REPnnn`` (comma
 separated, or ``all``).  The CLI (``python -m repro.analysis``) exits
@@ -53,6 +62,7 @@ CODES = {
     "REP004": "lock/condition misuse",
     "REP005": "live-DAG mutation outside validated adoption",
     "REP006": "operator builds VectorBatch from a dict literal",
+    "REP007": "raw clock read in a traced subsystem (use obs clock)",
 }
 
 # REP001 only polices the warehouse runtime; the modeling/training side of
@@ -91,6 +101,34 @@ COLLECT_ALLOWLIST: Set[Tuple[str, str]] = {
     ("exec.py", "_aggregate_materialized"),
     ("exec.py", "_stream_windowop"),
 }
+
+# raw time.* attributes REP007 polices in traced subsystems
+_RAW_CLOCK_ATTRS = {"monotonic", "perf_counter"}
+
+# REP007 subtree gate: which path segments put a file in a traced subsystem
+_REP007_SUBSYSTEMS = {"runtime", "serving", "federation"}
+
+# (file basename, enclosing function) pairs allowed to read raw clocks
+# (REP007): these sites time *waiting*, not traced work — WLM admission
+# deadline math and the exchange stall detector — and must not perturb
+# the obs clock's span timeline semantics.
+REP007_ALLOWLIST: Set[Tuple[str, str]] = {
+    ("wlm.py", "wait_admit"),
+    ("scheduler.py", "_put"),
+}
+
+
+def _rep007_applies(path: str) -> bool:
+    """REP007 scope: inside the repro package only ``core/runtime``,
+    ``core/serving`` and ``core/federation`` (never the obs layer itself,
+    which aliases the raw clocks); outside the package (the lint fixture)
+    the check always applies."""
+    parts = path.replace(os.sep, "/").split("/")
+    if "obs" in parts:
+        return False
+    if "repro" in parts:
+        return "core" in parts and bool(_REP007_SUBSYSTEMS & set(parts))
+    return True
 
 _SUPPRESS_RE = re.compile(r"#\s*repro-lint:\s*([A-Za-z0-9_,\s]+)")
 
@@ -143,6 +181,7 @@ class _Checker(ast.NodeVisitor):
         self._gen_stack: List[bool] = []       # is that function a generator?
         self._while_depth = 0
         self.check_config = True               # REP001 scope gate
+        self.check_clock = _rep007_applies(path)  # REP007 scope gate
 
     # ------------------------------------------------------------- helpers
     def _emit(self, code: str, line: int, message: str) -> None:
@@ -243,6 +282,22 @@ class _Checker(ast.NodeVisitor):
             if attr is not None:
                 self._check_dag_mutation(node, attr,
                                          f".{node.func.attr}()")
+        # REP007: raw time.monotonic()/time.perf_counter() in a traced
+        # subsystem — timing there must come off the obs clock
+        if (self.check_clock
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in _RAW_CLOCK_ATTRS
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id == "time"):
+            fn = self._current_func_name() or "<module>"
+            if (self.base, fn) not in REP007_ALLOWLIST:
+                self._emit(
+                    "REP007", node.lineno,
+                    f"raw time.{node.func.attr}() in {fn}() — traced "
+                    f"subsystems time through repro.core.obs.clock (or a "
+                    f"span) so traces, metrics, and EXPLAIN ANALYZE share "
+                    f"one clock",
+                )
         # REP006: VectorBatch({...}) dict literal inside an operator
         if (self._in_generator()
                 and _terminal_name(node.func) == "VectorBatch"

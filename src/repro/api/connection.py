@@ -7,7 +7,7 @@ staged ``QueryPipeline``.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import List, Optional, Sequence
 
 from ..core.config_keys import DEFAULT_CONFIG, check_value
 from ..core.session import Warehouse, _VALID_ENGINES
@@ -99,6 +99,39 @@ class Connection:
         (every connection sees the same serving tier)."""
         self._check_open()
         return self._wh.serving_stats()
+
+    # ------------------------------------------------------------------
+    # observability (PR 10)
+    # ------------------------------------------------------------------
+    def metrics(self) -> dict:
+        """Snapshot of the warehouse :class:`MetricsRegistry` — every
+        counter/gauge/histogram the serving tier, WLM, exchanges, and
+        query driver report — plus per-``kernel[backend]`` dispatch counts
+        from the engine registry.  Shape:
+        ``{"counters": {...}, "gauges": {...}, "histograms": {...}}``."""
+        self._check_open()
+        from ..kernels.registry import dispatch_counts
+
+        out = self._wh.obs.metrics.snapshot()
+        for name, n in dispatch_counts().items():
+            out["counters"][f"kernels.dispatch.{name}"] = n
+        return out
+
+    def query_log(self, limit: Optional[int] = None) -> List[dict]:
+        """The warehouse's bounded ring of recently finished queries
+        (always on, newest last): qid, sql, status, wall/queue-wait ms,
+        rows, pool, cache_hit, error.  ``limit`` trims to the most recent
+        N entries."""
+        self._check_open()
+        return self._wh.obs.query_log.entries(limit)
+
+    def export_trace(self, query_id: str, path: str) -> str:
+        """Write the stored :class:`QueryTrace` for ``query_id`` as Chrome
+        trace-event JSON (open in Perfetto / ``chrome://tracing``).
+        Requires the query to have run with tracing on (``obs.tracing``
+        config or ``REPRO_OBS_TRACING=1``).  Returns ``path``."""
+        self._check_open()
+        return self._wh.obs.export_trace(query_id, path)
 
     def prepare(self, sql: str) -> PreparedStatement:
         """Parse + bind + optimize ``sql`` once; re-executions reuse the

@@ -67,6 +67,21 @@ class QueryHandle:
         res = self._task.result
         return dict(res.info) if res is not None else {}
 
+    def trace(self) -> dict:
+        """This query's Chrome trace-event JSON (paper-style EXPLAIN
+        ANALYZE's raw material): pipeline-stage spans, WLM admission wait,
+        per-vertex compute/exchange-wait/spill-I/O tracks, shuffle lanes,
+        and serving/adaptive instant events.  Requires ``obs.tracing``
+        (or ``REPRO_OBS_TRACING=1``) to have been on when the query was
+        submitted; dump to a file and open in Perfetto, or use
+        ``Connection.export_trace(handle.query_id, path)``."""
+        if self._task.trace is None:
+            raise RuntimeError(
+                "query ran with tracing off; submit with obs.tracing=True "
+                "(connect(..., **{'obs.tracing': True}) or "
+                "REPRO_OBS_TRACING=1) to record a trace")
+        return self._task.trace.to_chrome()
+
     # ------------------------------------------------------------- results
     def result(self, timeout: Optional[float] = None) -> Cursor:
         """Block until the query finishes; return a cursor over the result.

@@ -134,6 +134,24 @@ _KEYS = (
        doc="attach concurrent queries to in-flight identical scans"),
     _k("serving.result_cache", True, bool,
        doc="serve repeated queries from the byte-bounded cache pre-admission"),
+    # ------------------------------------------------- observability (PR 10)
+    _k("obs.tracing", False, bool,
+       doc="per-query structured tracing: spans for every pipeline stage, "
+           "WLM admission wait, DAG vertex (compute vs exchange-wait vs "
+           "spill-I/O), shuffle lane, federated split read, kernel "
+           "dispatch, serving and adaptive event; export Chrome trace "
+           "JSON via QueryHandle.trace() / Connection.export_trace(). "
+           "Off by default — hot paths then pay one attribute test and "
+           "allocate no span objects (also enabled process-wide by the "
+           "REPRO_OBS_TRACING env var)"),
+    _k("obs.query_log_size", 128, int,
+       doc="capacity of the warehouse's always-on completed-query ring "
+           "buffer (Connection.query_log()); read once at warehouse "
+           "creation from this declared default"),
+    _k("obs.trace_store_size", 32, int,
+       doc="how many completed traced queries the warehouse retains for "
+           "Connection.export_trace(query_id, path); oldest evict first; "
+           "read once at warehouse creation from this declared default"),
     # -------------------------------------------------------- internal/debug
     _k("keep_acid_cols", False, bool,
        doc="internal: scans keep __rowid__/__writeid__ columns (DML reads)"),

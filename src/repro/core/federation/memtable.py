@@ -26,6 +26,7 @@ import numpy as np
 
 from ...analysis.lockdep import make_lock
 from ..metastore import TableDesc
+from ..obs import clock
 from ..runtime.vector import DEFAULT_BATCH_ROWS, VectorBatch
 from ..sql import ast as A
 from .datasource import NONE, PARTIAL, ScanBuilder, Writer
@@ -91,7 +92,7 @@ class MemTableHandler(StorageHandler):
 
     def note_produced(self, rows: int) -> None:
         with self._lock:
-            self.produced.append((time.monotonic(), rows))
+            self.produced.append((clock.monotonic(), rows))
 
     def last_produced_at(self) -> Optional[float]:
         with self._lock:

@@ -33,6 +33,7 @@ from .optimizer.semijoin import SemijoinConfig, insert_semijoin_reducers
 from .optimizer.shared_work import find_shared_subplans
 from ..analysis.lockdep import make_lock
 from ..analysis.plan_validator import maybe_validate_dag
+from .obs.trace import QueryTrace, emit_event, make_span, tracing_enabled
 from .runtime.dag import DAGScheduler, compile_dag, describe_exchanges
 from .schema import annotate_plan
 from .runtime.exec import MemoryPressureError
@@ -224,6 +225,10 @@ class QueryContext:
     qid: str = ""                         # query id ("" -> allocate one)
     cancel_token: object = None           # runtime.cancel.CancelToken
 
+    # observability (PR 10): the query's QueryTrace, resolved once by
+    # QueryPipeline.run (None = tracing off)
+    trace: object = None
+
     # bookkeeping
     stage_times: Dict[str, float] = field(default_factory=dict)
     finished: bool = False                # short-circuits remaining stages
@@ -413,6 +418,12 @@ class CompileStage(Stage):
         maybe_validate_dag(q.dag, cfg, plan_cache=s.wh.plan_cache)
         q.info["dag_edges"] = q.dag.edge_summary()
         q.info["exchanges"] = [ln.strip() for ln in describe_exchanges(q.dag)]
+        # observability wiring, resolved once per query: the DAG scheduler
+        # propagates these onto every exchange; ExecContext.kernel and the
+        # federated streamer test them per call site
+        ctx.trace = q.trace
+        obs = getattr(s.wh, "obs", None)
+        ctx.metrics = obs.metrics if obs is not None else None
         q.exec_ctx = ctx
 
 
@@ -437,8 +448,9 @@ class ExecuteStage(Stage):
         own_slot = q.task is None
         try:
             if own_slot:
-                slot = s.wh.wlm.admit(qid, cfg.get("user"),
-                                      cfg.get("application"))
+                with make_span(q.trace, "wlm:admission_wait", "wlm"):
+                    slot = s.wh.wlm.admit(qid, cfg.get("user"),
+                                          cfg.get("application"))
             if slot is not None:
                 q.info["wlm_pool"] = slot.pool
             q.batch = self._run_dag(q, qid, slot)
@@ -474,7 +486,8 @@ class ExecuteStage(Stage):
             adaptive = AdaptiveManager(
                 cfg, events=events,
                 on_event=(q.task.note_adaptive if q.task is not None
-                          else None))
+                          else None),
+                trace=q.trace)
         sched = DAGScheduler(
             pool=s.wh.llap.executors if cfg["llap"] else None,
             speculative=cfg["speculative_execution"],
@@ -526,6 +539,7 @@ class ExecuteStage(Stage):
                 q.task.stream.abort_live(mem_err)
             q.info["reexecuted"] = True
             q.info["reopt_mode"] = mode
+            emit_event(q.trace, "reopt:reexecute", "adaptive", mode=mode)
             s._persist_runtime_stats(q.plan, ctx)
             # re-executions run with materialized (barrier) exchanges: the
             # pressure signal may have come from a spill-disabled exchange
@@ -553,6 +567,8 @@ class ExecuteStage(Stage):
                 )
             ctx2 = s._make_ctx(cfg2, params=q.params,
                                cancel_token=q.cancel_token)
+            ctx2.trace = q.trace
+            ctx2.metrics = ctx.metrics
             plan2 = s._expand_federated(plan2, cfg2)
             if cfg2["shared_work"]:
                 ctx2.shared_keys = find_shared_subplans(plan2)
@@ -603,13 +619,27 @@ class QueryPipeline:
         self.stages = stages
 
     def run(self, q: QueryContext) -> QueryContext:
+        # resolve the query's trace exactly once (lockdep factory pattern):
+        # the async scheduler already allocated one on the QueryTask when
+        # obs.tracing was on at submit; EXPLAIN ANALYZE and sync callers
+        # force/enable it via config, in which case the pipeline allocates
+        # (and hands the task the trace so the warehouse stores it)
+        if q.trace is None and q.task is not None:
+            q.trace = q.task.trace
+        if q.trace is None and tracing_enabled(q.config):
+            if not q.qid:
+                q.qid = f"q{next(self.session.wh._qid)}"
+            q.trace = QueryTrace(q.qid, q.sql)
+            if q.task is not None:
+                q.task.trace = q.trace
         t0 = time.perf_counter()
         try:
             for stage in self.stages:
                 if q.finished:
                     break
                 t = time.perf_counter()
-                stage.run(q)
+                with make_span(q.trace, f"stage:{stage.name}", "stage"):
+                    stage.run(q)
                 q.stage_times[stage.name] = (
                     q.stage_times.get(stage.name, 0.0)
                     + time.perf_counter() - t

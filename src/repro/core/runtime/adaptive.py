@@ -40,6 +40,8 @@ from typing import Dict, List, Optional
 
 from ...analysis.lockdep import make_condition
 from ...analysis.plan_validator import PlanValidationError, check_dag
+from ..obs import clock
+from ..obs.trace import emit_event
 from ..optimizer import plan as P
 from ..sql import ast as A
 from .dag import FORWARD, SHUFFLE, MaterializedNode, Vertex, \
@@ -159,10 +161,11 @@ class AdaptiveManager:
     the lock order is manager -> swap -> exchange, never reversed."""
 
     def __init__(self, config: dict, events: Optional[list] = None,
-                 on_event=None, plan_cache=None):
+                 on_event=None, plan_cache=None, trace=None):
         self.config = config
         self.events = events if events is not None else []
         self.on_event = on_event
+        self.trace = trace  # QueryTrace (None = tracing off, PR 10)
         self.plan_cache = plan_cache
         self.skew_ratio = float(config.get("adaptive.skew_ratio", 4.0))
         self.split_min_rows = int(config.get("adaptive.split_min_rows",
@@ -306,7 +309,7 @@ class AdaptiveManager:
         """Gate point: block while a replanning decision for ``vid`` is
         pending; ``skip`` means the vertex was replanned away."""
         with self._cond:
-            self._started[vid] = time.monotonic()
+            self._started[vid] = clock.monotonic()
             while vid in self._gated and not self._finished:
                 self._cond.wait(0.05)
                 if self.cancel_token is not None:
@@ -391,6 +394,8 @@ class AdaptiveManager:
     # ============================================================== internals
     def _record(self, event: dict) -> None:
         self.events.append(event)
+        emit_event(self.trace, f"adaptive:{event.get('kind')}", "adaptive",
+                   **event)
         if self.on_event is not None:
             try:
                 self.on_event(event)
@@ -624,7 +629,7 @@ class AdaptiveManager:
             with self._cond:
                 if self._finished:
                     return
-                now = time.monotonic()
+                now = clock.monotonic()
                 for group in self._spec_groups.values():
                     durations = [self._done[v] for v in group
                                  if v in self._done]
@@ -663,7 +668,7 @@ class AdaptiveManager:
         if not self._adopt(apply, undo, {
                 "kind": "speculated", "vertex": vid, "clone": svid,
                 "elapsed_s": round(
-                    time.monotonic() - self._started[vid], 3)}):
+                    clock.monotonic() - self._started[vid], 3)}):
             self._staged.discard(svid)
             return
         ex = Exchange(svid, self.excfg)

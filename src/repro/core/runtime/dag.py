@@ -23,6 +23,8 @@ from typing import Callable, Dict, List, Optional, Set
 import numpy as np
 
 from ...analysis.lockdep import make_lock
+from ..obs import clock
+from ..obs.trace import close_vertex_frame, emit_event, open_vertex_frame
 from ..optimizer import plan as P
 from .exec import ExecContext, Executor
 from .vector import VectorBatch
@@ -377,6 +379,11 @@ class DAGScheduler:
         cancel_token = getattr(ctx, "cancel_token", None)
         excfg = ExchangeConfig(ctx.config,
                                ctx.config.get("exchange.spill_dir"))
+        # observability: resolved once per query; every exchange built below
+        # inherits the query's trace (None = off) and metrics registry
+        trace = getattr(ctx, "trace", None)
+        excfg.trace = trace
+        excfg.metrics = getattr(ctx, "metrics", None)
         # partitioned SHUFFLE edges: a producer whose consumers all agree on
         # one (num_partitions, keys) spec writes through a ShuffleWriter lane
         # array; disagreeing specs (a subtree shared by differently-keyed
@@ -476,7 +483,8 @@ class DAGScheduler:
                     src = exchanges[mn.tag]
                     mn.source = (adaptive.source_for(vid, mn, src)
                                  if adaptive is not None else src)
-                t0 = time.perf_counter()
+                t0 = clock.perf_counter()
+                frame = open_vertex_frame() if trace is not None else None
                 rows: Optional[int] = None
                 if vid in shareable:
                     key, table = shareable[vid]
@@ -485,15 +493,21 @@ class DAGScheduler:
                         rows = stream_attached(handle, vid, out_ex)
                         if rows is None:
                             registry.note_fallback()
+                            emit_event(trace, f"serving:fallback:{vid}",
+                                       "serving", table=table)
                             with lock:
                                 self.shared_scan_stats["fallbacks"] += 1
                         else:
+                            emit_event(trace, f"serving:attached:{vid}",
+                                       "serving", table=table, rows=rows)
                             with lock:
                                 self.shared_scan_stats["attached"] += 1
                     elif registry.publish(key, table, out_ex):
                         # keep every chunk for late attachers; the registry
                         # owns discard once consumers are attached
                         out_ex.retain = True
+                        emit_event(trace, f"serving:published:{vid}",
+                                   "serving", table=table)
                         with lock:
                             published[vid] = key
                             self.shared_scan_stats["published"] += 1
@@ -506,8 +520,16 @@ class DAGScheduler:
                         if vid == dag.root and on_root_chunk is not None:
                             on_root_chunk(chunk)
                 out_ex.close()
-                dt = time.perf_counter() - t0
+                dt = clock.perf_counter() - t0
                 st = out_ex.stats()
+                if trace is not None:
+                    lanes = st.get("lanes")
+                    trace.add_vertex(
+                        vid, t0, dt, wait_s=frame.wait_s,
+                        spill_s=frame.spill_s, rows=rows,
+                        lanes=([{"partition": i, **ln}
+                                for i, ln in enumerate(lanes)]
+                               if lanes else None))
                 with lock:
                     self.metrics.append(VertexMetrics(
                         vid, rows, dt,
@@ -529,6 +551,8 @@ class DAGScheduler:
                 if cancel_token is not None and not cancel_token.is_set():
                     # wake sibling vertices blocked on other exchanges
                     cancel_token.cancel(f"vertex {vid} failed: {exc}")
+            finally:
+                close_vertex_frame()
 
         if adaptive is not None:
             adaptive.begin(dag, ctx, exchanges, lane_spec,
@@ -624,6 +648,7 @@ class DAGScheduler:
     def _execute_barrier(self, dag: TaskDAG, ctx: ExecContext, pool,
                          on_vertex_done, on_root_chunk) -> VectorBatch:
         cancel_token = getattr(ctx, "cancel_token", None)
+        trace = getattr(ctx, "trace", None)
         results: Dict[str, VectorBatch] = {}
         done: Set[str] = set()
         order = dag.topo_order()
@@ -644,10 +669,13 @@ class DAGScheduler:
             v = dag.vertices[vid]
             for mn in _walk_materialized(v.plan):
                 mn.batch = results[mn.tag]
-            t0 = time.perf_counter()
+            t0 = clock.perf_counter()
             ex = _VertexExecutor(ctx)
             out = ex.execute(v.plan)
-            dt = time.perf_counter() - t0
+            dt = clock.perf_counter() - t0
+            if trace is not None:
+                # barrier mode has no exchanges: the whole wall is compute
+                trace.add_vertex(vid, t0, dt, rows=out.num_rows)
             with lock:
                 durations.append(dt)
                 self.metrics.append(VertexMetrics(vid, out.num_rows, dt))

@@ -26,6 +26,8 @@ from typing import Dict, Iterator, List, Optional
 import numpy as np
 
 from ...analysis.lockdep import make_condition
+from ..obs import clock
+from ..obs.trace import note_exchange_wait, note_spill_io
 from .exec import MemoryPressureError
 from .vector import VectorBatch
 
@@ -58,6 +60,13 @@ class ExchangeConfig:
                                   or config.get("debug.check_batches"))
         self.scratch_dir = scratch_dir
         self._own_scratch = False
+        # observability (PR 10), resolved once per query like check_batches:
+        # ``trace`` is the query's QueryTrace (None = tracing off — every
+        # hot-path site pays one attribute test and allocates nothing),
+        # ``metrics`` the warehouse MetricsRegistry for spill counters.
+        # Both set by the execute stage / DAG scheduler, never from config.
+        self.trace = None
+        self.metrics = None
 
     def make_scratch(self) -> str:
         if self.scratch_dir is None:
@@ -187,11 +196,20 @@ class Exchange:
                     f"_{self._spill_seq:06d}.npz",
                 )
                 self._spill_seq += 1
-                _save_chunk(path, batch)
+                if self.cfg.trace is not None:
+                    t_io = clock.perf_counter()
+                    _save_chunk(path, batch)
+                    note_spill_io(clock.perf_counter() - t_io)
+                else:
+                    _save_chunk(path, batch)
                 self._slots.append(_DiskSlot(path))
                 self.spilled_rows += n
                 self.spilled_bytes += nbytes
                 self.spilled_chunks += 1
+                if self.cfg.metrics is not None:
+                    self.cfg.metrics.inc("exchange.spilled_chunks")
+                    self.cfg.metrics.inc("exchange.spilled_rows", n)
+                    self.cfg.metrics.inc("exchange.spilled_bytes", nbytes)
             else:
                 self._slots.append(_MemSlot(batch))
                 self._mem_rows += n
@@ -234,8 +252,17 @@ class Exchange:
         i = 0
         while True:
             with self._cond:
-                while i >= len(self._slots) and not self._closed:
-                    self._cond.wait(0.05)
+                if self.cfg.trace is not None and i >= len(self._slots) \
+                        and not self._closed:
+                    # blocking wait: charge it to the consuming vertex's
+                    # exchange-wait sub-phase (thread-local frame)
+                    t_wait = clock.perf_counter()
+                    while i >= len(self._slots) and not self._closed:
+                        self._cond.wait(0.05)
+                    note_exchange_wait(clock.perf_counter() - t_wait)
+                else:
+                    while i >= len(self._slots) and not self._closed:
+                        self._cond.wait(0.05)
                 if i < len(self._slots):
                     slot = self._slots[i]
                     if slot is None:
@@ -257,7 +284,12 @@ class Exchange:
             if isinstance(slot, _MemSlot):
                 yield slot.batch
             else:
-                batch = _load_chunk(slot.path)
+                if self.cfg.trace is not None:
+                    t_io = clock.perf_counter()
+                    batch = _load_chunk(slot.path)
+                    note_spill_io(clock.perf_counter() - t_io)
+                else:
+                    batch = _load_chunk(slot.path)
                 if not self.retain:
                     try:
                         os.unlink(slot.path)

@@ -23,6 +23,7 @@ import numpy as np
 from ..acid import AcidTable
 from ..bloomfilter import BloomFilter
 from ..metastore import Metastore, Snapshot, WriteIdList
+from ..obs.trace import make_span
 from ..optimizer import plan as P
 from ..sql import ast as A
 from ..storage import SargPredicate
@@ -57,6 +58,12 @@ class ExecContext:
         self.cancel_token = cancel_token  # CancelToken of an async handle
         # serving tier: SharedScanRegistry when serving.shared_scans is on
         self.shared_scans = None
+        # observability (PR 10), resolved once per query by the execute
+        # stage: the query's QueryTrace (None = tracing off) and the
+        # warehouse MetricsRegistry — instrumented paths pay one attribute
+        # test when off
+        self.trace = None
+        self.metrics = None
         self.engine = self.config.get("engine", "auto")  # auto | pallas | ref
         self.op_stats: Dict[str, int] = {}  # plan key digest -> actual rows
         self.shared_keys: set = set()  # filled by shared-work optimizer (§4.5)
@@ -76,6 +83,8 @@ class ExecContext:
         """Resolve a compute kernel for this query's engine selection."""
         from ...kernels.registry import resolve
 
+        if self.trace is not None:
+            self.trace.kernel_dispatch(name, self.engine)
         return resolve(name, self.engine)
 
 
@@ -649,26 +658,35 @@ class Executor:
             else (builder.to_splits() or [None])
         out_names = node.output_names()
         yielded = False
-        for split in splits:
-            for batch in builder.read_split(split):
-                # cancel point per connector batch: a filtered-out batch
-                # yields no chunk downstream, so without this a cancelled
-                # query keeps draining the remote split to its end
-                self._checkpoint()
-                if node.spec is not None:
-                    # connector outputs follow the spec's column order
-                    b = batch.rename(dict(zip(batch.column_names, out_names)))
-                else:
-                    b = batch.rename(
-                        {c: f"{node.alias}.{c}" for c in batch.column_names})
-                if b.num_rows == 0:
-                    if not yielded:
-                        yield b
+        trace = self.ctx.trace
+        for i, split in enumerate(splits):
+            # one span per federated split drain (tracing off: the shared
+            # no-op context manager — no allocation per split)
+            with make_span(trace, f"fed:{node.table.name}.split{i}",
+                           "federation", pinned=node.split is not None):
+                if self.ctx.metrics is not None:
+                    self.ctx.metrics.inc("federation.splits_read")
+                for batch in builder.read_split(split):
+                    # cancel point per connector batch: a filtered-out batch
+                    # yields no chunk downstream, so without this a cancelled
+                    # query keeps draining the remote split to its end
+                    self._checkpoint()
+                    if node.spec is not None:
+                        # connector outputs follow the spec's column order
+                        b = batch.rename(
+                            dict(zip(batch.column_names, out_names)))
+                    else:
+                        b = batch.rename(
+                            {c: f"{node.alias}.{c}"
+                             for c in batch.column_names})
+                    if b.num_rows == 0:
+                        if not yielded:
+                            yield b
+                            yielded = True
+                        continue
+                    for chunk in b.iter_chunks(self.batch_rows):
+                        yield chunk
                         yielded = True
-                    continue
-                for chunk in b.iter_chunks(self.batch_rows):
-                    yield chunk
-                    yielded = True
         if not yielded:
             empty = builder.empty_batch()
             yield empty.rename(dict(zip(empty.column_names, out_names)))

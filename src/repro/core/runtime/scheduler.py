@@ -26,6 +26,7 @@ from queue import Empty, Full, Queue
 from typing import Dict, Iterator, Optional, Tuple
 
 from ...analysis.lockdep import make_condition, make_lock
+from ..obs.trace import QueryTrace, emit_event, make_span, tracing_enabled
 from ..sql import ast as A
 from .cancel import CancelToken, QueryCancelledError
 from .vector import VectorBatch
@@ -200,6 +201,10 @@ class QueryTask:
         self.config = config
         self.cancel_token = CancelToken()
         self.stream = ResultStream()
+        # per-query structured trace (PR 10): None unless obs.tracing /
+        # REPRO_OBS_TRACING is on — every instrumented hot path then pays
+        # one attribute test and allocates no span objects
+        self.trace = QueryTrace(qid, sql) if tracing_enabled(config) else None
         self.submitted_at = time.time()
         self.admitted_at: Optional[float] = None
         self.wlm = None                        # set by QueryScheduler.submit
@@ -385,6 +390,7 @@ class QueryScheduler:
     def _run(self, session, task: QueryTask) -> None:
         wlm = self.wh.wlm
         admitted = False
+        cache_hit = False
         try:
             task.cancel_token.check()
             stmt = task.stmt
@@ -398,6 +404,7 @@ class QueryScheduler:
                 # taking a WLM slot or executing anything
                 result, pre = session._probe_result_cache(task)
                 if result is not None:
+                    cache_hit = True
                     task.admitted_at = time.time()
                     task._set_state(RUNNING)
                 else:
@@ -408,12 +415,14 @@ class QueryScheduler:
                     # while we hold a pending cache entry from the probe,
                     # release the waiters queued behind it.
                     try:
-                        slot = wlm.wait_admit(
-                            task.qid,
-                            task.config.get("user"),
-                            task.config.get("application"),
-                            cancel_token=task.cancel_token,
-                        )
+                        with make_span(task.trace, "wlm:admission_wait",
+                                       "wlm"):
+                            slot = wlm.wait_admit(
+                                task.qid,
+                                task.config.get("user"),
+                                task.config.get("application"),
+                                cancel_token=task.cancel_token,
+                            )
                     except BaseException:
                         if (pre is not None and pre.cacheable
                                 and pre.filling):
@@ -421,6 +430,9 @@ class QueryScheduler:
                                 pre.result_key)
                         raise
                     admitted = slot is not None
+                    if admitted:
+                        emit_event(task.trace, "wlm:admitted", "wlm",
+                                   pool=slot.pool)
                     task.admitted_at = time.time()
                     task.note_pool(slot.pool if slot is not None else None)
                     task._set_state(ADMITTED)
@@ -447,5 +459,40 @@ class QueryScheduler:
             if admitted:
                 wlm.release(task.qid)
             task.stream.close()
+            self._note_done(task, cache_hit)
             with self._lock:
                 self._tasks.pop(task.qid, None)
+
+    def _note_done(self, task: QueryTask, cache_hit: bool) -> None:
+        """Record the finished statement with the warehouse observability
+        tier: the always-on query-log ring, outcome metrics, and — when the
+        query was traced — the bounded trace store behind
+        ``Connection.export_trace``."""
+        obs = getattr(self.wh, "obs", None)
+        if obs is None:  # pragma: no cover - warehouse always wires obs
+            return
+        rows = None
+        result = task.result
+        if result is not None and getattr(result, "batch", None) is not None:
+            rows = int(result.batch.num_rows)
+        with task._cond:
+            pool = task._progress.get("pool")
+        entry = {
+            "qid": task.qid,
+            "sql": task.sql,
+            "status": task.state,
+            "wall_ms": round((time.time() - task.submitted_at) * 1e3, 3),
+            "queue_wait_ms": (
+                round((task.admitted_at - task.submitted_at) * 1e3, 3)
+                if task.admitted_at is not None else None
+            ),
+            "rows": rows,
+            "pool": pool,
+            "cache_hit": cache_hit,
+        }
+        if task.error is not None:
+            entry["error"] = str(task.error)
+        try:
+            obs.note_query_done(entry, trace=task.trace)
+        except Exception:  # pragma: no cover - observability must not fail
+            pass            # the query it observes

@@ -33,6 +33,7 @@ from typing import Deque, Dict, List, Optional
 
 from ...analysis.lockdep import make_condition, make_lock, make_rlock
 from ..metastore import Metastore
+from ..obs.metrics import MetricsRegistry
 
 
 class QueryKilledError(Exception):
@@ -119,9 +120,14 @@ class _PoolShard:
 
 
 class WorkloadManager:
-    def __init__(self, hms: Metastore, total_executors: int = 16):
+    def __init__(self, hms: Metastore, total_executors: int = 16,
+                 metrics: Optional[MetricsRegistry] = None):
         self.hms = hms
         self.total_executors = total_executors
+        # admission counters live in the warehouse MetricsRegistry (PR 10);
+        # a private registry keeps directly-constructed managers working
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.metrics.gauge("wlm.queue_depths", self.queue_depths)
         # cross-pool state: slot table, load counters, borrow rotation.
         # Held briefly; never while waiting.  Lock order: shard then _lock.
         self._lock = make_rlock("wlm.global")
@@ -267,6 +273,9 @@ class WorkloadManager:
             self._pool_load[pool_to_charge] = self._pool_load.get(pool_to_charge, 0) + 1
             slot.metrics["charged_pool"] = pool_to_charge
             self._running[query_id] = slot
+            self.metrics.inc("wlm.admitted")
+            if slot.borrowed_from is not None:
+                self.metrics.inc("wlm.borrowed")
             return slot, False
 
     def _borrow_turn(self, pool: str) -> bool:
@@ -337,6 +346,7 @@ class WorkloadManager:
                     if deadline is not None:
                         remaining = deadline - time.monotonic()
                         if remaining <= 0:
+                            self.metrics.inc("wlm.admission_timeouts")
                             raise QueryKilledError(
                                 f"query {query_id} timed out waiting for "
                                 f"admission"
@@ -386,8 +396,10 @@ class WorkloadManager:
                 if rule.action == "move" and rule.target_pool and slot.pool != rule.target_pool:
                     slot.moves.append(f"{slot.pool}->{rule.target_pool}")
                     slot.pool = rule.target_pool
+                    self.metrics.inc("wlm.moved")
                 elif rule.action == "kill":
                     slot.killed = True
+                    self.metrics.inc("wlm.killed")
         if slot.killed:
             # trip the handle's token first so sibling DAG vertices stop at
             # their next boundary, then surface the kill to the caller
@@ -401,6 +413,7 @@ class WorkloadManager:
         with self._lock:
             slot = self._running.pop(query_id, None)
             if slot is not None:
+                self.metrics.inc("wlm.released")
                 charged = slot.metrics.get("charged_pool", slot.pool)
                 if charged in self._pool_load and self._pool_load[charged] > 0:
                     self._pool_load[charged] -= 1

@@ -17,6 +17,7 @@ from typing import Dict, Optional, Tuple
 
 from ...analysis.lockdep import make_lock
 from ..metastore import Metastore
+from ..obs.metrics import MetricsRegistry
 from ..optimizer.result_cache import CacheEntry
 from ..runtime.exchange import batch_nbytes
 from ..runtime.lrfu import LRFUPolicy
@@ -24,10 +25,14 @@ from ..runtime.vector import VectorBatch
 
 DEFAULT_CACHE_BYTES = 64 << 20
 
+_STAT_NAMES = ("hits", "misses", "pending_waits", "evictions", "fills",
+               "invalidations")
+
 
 class ResultCacheServer:
     def __init__(self, max_bytes: int = DEFAULT_CACHE_BYTES,
-                 ttl_seconds: float = 3600.0, lrfu_lambda: float = 0.01):
+                 ttl_seconds: float = 3600.0, lrfu_lambda: float = 0.01,
+                 metrics: Optional[MetricsRegistry] = None):
         self.max_bytes = int(max_bytes)
         self.ttl = ttl_seconds
         self._lock = make_lock("serving.result_cache")
@@ -35,8 +40,16 @@ class ResultCacheServer:
         self._sizes: Dict[str, int] = {}
         self._used = 0
         self._policy = LRFUPolicy(lrfu_lambda)
-        self.stats = {"hits": 0, "misses": 0, "pending_waits": 0,
-                      "evictions": 0, "fills": 0, "invalidations": 0}
+        # counters live in the warehouse MetricsRegistry (PR 10): the
+        # legacy ``stats`` dict shape is *derived* from it (see property),
+        # so server_stats()/metrics() can never drift apart
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._c = {name: self.metrics.counter(f"serving.result_cache.{name}")
+                   for name in _STAT_NAMES}
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        return {name: c.value for name, c in self._c.items()}
 
     # -- snapshot helpers -----------------------------------------------------
     @staticmethod
@@ -55,29 +68,29 @@ class ResultCacheServer:
         with self._lock:
             entry = self._entries.get(key)
             if entry is None:
-                self.stats["misses"] += 1
+                self._c["misses"].inc()
                 return None
             pending = entry.pending
         if pending is not None:
-            self.stats["pending_waits"] += 1
+            self._c["pending_waits"].inc()
             pending.wait(timeout=60)
             with self._lock:
                 entry = self._entries.get(key)
                 if entry is None or entry.pending is not None:
-                    self.stats["misses"] += 1
+                    self._c["misses"].inc()
                     return None
         if time.time() - entry.created_at > self.ttl:
             self._drop(key)
-            self.stats["misses"] += 1
+            self._c["misses"].inc()
             return None
         # transactional validity: tables must not contain new/modified data
         if self._current_state(hms, entry.snapshot.keys()) != entry.snapshot:
             self._drop(key)
-            self.stats["misses"] += 1
+            self._c["misses"].inc()
             return None
         with self._lock:
             entry.hits += 1
-            self.stats["hits"] += 1
+            self._c["hits"].inc()
             self._policy.on_access(key)
         return entry.result
 
@@ -117,7 +130,7 @@ class ResultCacheServer:
                 self._sizes[key] = nbytes
                 self._used += nbytes
                 self._policy.on_access(key)
-                self.stats["fills"] += 1
+                self._c["fills"].inc()
         if ev is not None:
             ev.set()
 
@@ -139,7 +152,7 @@ class ResultCacheServer:
         entry = self._entries.pop(key, None)
         if entry is not None:
             self._used -= self._sizes.pop(key, 0)
-            self.stats["evictions"] += 1
+            self._c["evictions"].inc()
         self._policy.on_remove(key)
 
     def _drop(self, key: str) -> None:
@@ -157,7 +170,7 @@ class ResultCacheServer:
             self._sizes.clear()
             self._used = 0
             self._policy = LRFUPolicy(self._policy.lam)
-            self.stats["invalidations"] += 1
+            self._c["invalidations"].inc()
         for ev in pendings:
             ev.set()
 

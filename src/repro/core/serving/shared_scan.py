@@ -23,6 +23,10 @@ import threading
 from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
 from ...analysis.lockdep import make_lock
+from ..obs.metrics import MetricsRegistry
+
+_STAT_NAMES = ("published", "attached", "attach_misses", "fallbacks",
+               "invalidated")
 
 
 class _Entry:
@@ -66,16 +70,18 @@ class SharedScanRegistry:
     write-ID state — so only transactionally identical scans ever share.
     """
 
-    def __init__(self):
+    def __init__(self, metrics: Optional[MetricsRegistry] = None):
         self._lock = make_lock("serving.shared_scans")
         self._entries: Dict[object, _Entry] = {}
-        self.stats = {
-            "published": 0,
-            "attached": 0,
-            "attach_misses": 0,
-            "fallbacks": 0,
-            "invalidated": 0,
-        }
+        # counters live in the warehouse MetricsRegistry (PR 10): the
+        # legacy ``stats`` dict shape is *derived* from it (see property)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._c = {name: self.metrics.counter(f"serving.shared_scans.{name}")
+                   for name in _STAT_NAMES}
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        return {name: c.value for name, c in self._c.items()}
 
     # ------------------------------------------------------------- producer
     def publish(self, key, table: str, exchange) -> bool:
@@ -87,7 +93,7 @@ class SharedScanRegistry:
             if key in self._entries:
                 return False
             self._entries[key] = _Entry(key, table, exchange)
-            self.stats["published"] += 1
+            self._c["published"].inc()
             return True
 
     def retire(self, key, exchange,
@@ -118,15 +124,15 @@ class SharedScanRegistry:
         with self._lock:
             entry = self._entries.get(key)
             if entry is None or entry.retired:
-                self.stats["attach_misses"] += 1
+                self._c["attach_misses"].inc()
                 return None
             entry.refcount += 1
-            self.stats["attached"] += 1
+            self._c["attached"].inc()
             return SharedScanHandle(self, entry)
 
     def note_fallback(self) -> None:
         with self._lock:
-            self.stats["fallbacks"] += 1
+            self._c["fallbacks"].inc()
 
     def _release(self, entry: _Entry) -> None:
         with self._lock:
@@ -150,13 +156,13 @@ class SharedScanRegistry:
             for key in [k for k, e in self._entries.items()
                         if e.table == table]:
                 self._entries[key].retired = True
-                self.stats["invalidated"] += 1
+                self._c["invalidated"].inc()
 
     def invalidate_all(self) -> None:
         with self._lock:
             for e in self._entries.values():
                 e.retired = True
-                self.stats["invalidated"] += 1
+                self._c["invalidated"].inc()
 
     # ------------------------------------------------------------ stats
     def stats_snapshot(self) -> Dict[str, int]:

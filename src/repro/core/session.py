@@ -38,6 +38,8 @@ from .federation.handler import HandlerRegistry
 from .federation.jdbc import JdbcHandler
 from .federation.memtable import MemTableHandler
 from .metastore import Metastore, TxnAborted, WriteConflict
+from .obs import WarehouseObs
+from .obs.trace import emit_event
 from .optimizer import plan as P
 from .serving import ResultCacheServer, SharedScanRegistry
 from .pipeline import (
@@ -101,11 +103,16 @@ class Warehouse:
         # federated catalogs (§6): whole external systems mounted at once,
         # re-instantiated from metastore persistence on reopen
         self.catalogs = CatalogRegistry(self.hms)
+        # observability (PR 10): metrics registry + query log + trace store;
+        # created before the serving tier/WLM so they register counters on it
+        self.obs = WarehouseObs()
         # serving tier: byte-bounded LRFU result cache + shared-scan registry
-        self.result_cache = ResultCacheServer(max_bytes=result_cache_bytes)
-        self.shared_scans = SharedScanRegistry()
+        self.result_cache = ResultCacheServer(max_bytes=result_cache_bytes,
+                                              metrics=self.obs.metrics)
+        self.shared_scans = SharedScanRegistry(metrics=self.obs.metrics)
         self.plan_cache = PlanCache()
-        self.wlm = WorkloadManager(self.hms, total_executors=llap_executors)
+        self.wlm = WorkloadManager(self.hms, total_executors=llap_executors,
+                                   metrics=self.obs.metrics)
         self._qid = itertools.count()
         self.scheduler = QueryScheduler(self, max_workers=query_workers)
 
@@ -383,7 +390,27 @@ class Session:
                    params: Tuple = ()) -> QueryResult:
         q = self._run_pipeline(stmt, sql_text, params)
         self.last_info = q.info
+        self._note_sync_done(q)
         return QueryResult(q.batch, q.info)
+
+    def _note_sync_done(self, q: QueryContext) -> None:
+        """Record a synchronously executed query in the warehouse query log
+        (async queries are recorded by the scheduler's worker instead).
+        Observability must never fail the query it observes."""
+        try:
+            self.wh.obs.note_query_done({
+                "qid": q.qid,
+                "sql": q.sql,
+                "status": "SUCCEEDED",
+                "wall_ms": round(float(q.info.get("seconds", 0.0)) * 1e3, 3),
+                "queue_wait_ms": 0.0,
+                "rows": q.batch.num_rows if q.batch is not None else 0,
+                "pool": None,
+                "cache_hit": bool(q.info.get("cache_hit", False)),
+                "error": None,
+            }, trace=q.trace)
+        except Exception:
+            pass
 
     def _probe_result_cache(self, task: QueryTask):
         """Serving-tier pre-admission probe (run by the async scheduler).
@@ -405,6 +432,13 @@ class Session:
         if not q.finished:
             return None, q
         q.info["admission_skipped"] = True
+        # a cache-served result reports the same stage_times_ms keys as an
+        # executed one: the post-probe stages ran for 0 ms, not "not at all"
+        # (dashboards keying on stage names would otherwise KeyError on hits)
+        st = q.info.setdefault("stage_times_ms", {})
+        for stage in POST_PROBE_STAGES:
+            st.setdefault(stage.name, 0.0)
+        emit_event(q.trace, "serving:result_cache_hit", "serving")
         self.last_info = q.info
         return QueryResult(q.batch, q.info), q
 
@@ -432,9 +466,14 @@ class Session:
         """EXPLAIN ANALYZE: run the query, report plan + per-stage timings.
 
         The result cache is bypassed — ANALYZE means "actually execute and
-        measure"; a cache hit would short-circuit before the plan exists."""
+        measure"; a cache hit would short-circuit before the plan exists.
+        Tracing is forced on so the report is built from the query's own
+        :class:`~repro.core.obs.trace.QueryTrace` (per-vertex compute /
+        exchange-wait / spill-I/O breakdowns, lane skew, serving and
+        adaptive events) rather than ad-hoc timers."""
         q = self._run_pipeline(stmt, sql_text, params,
-                               config={**self.config, "result_cache": False},
+                               config={**self.config, "result_cache": False,
+                                       "obs.tracing": True},
                                task=task, slot=slot)
         self.last_info = q.info
         lines: List[str] = []
@@ -451,10 +490,52 @@ class Session:
                 rest = ", ".join(f"{k}={v}" for k, v in ev.items()
                                  if k != "kind")
                 lines.append(f"  {ev.get('kind')}: {rest}")
+        lines.extend(self._analyze_trace_lines(q))
         for k, v in q.info.items():
             if k not in ("stage_times_ms", "adaptive"):
                 lines.append(f"{k}: {v}")
         return QueryResult(VectorBatch({"plan": np.array(lines)}), q.info)
+
+    @staticmethod
+    def _analyze_trace_lines(q: QueryContext) -> List[str]:
+        """Trace-derived EXPLAIN ANALYZE sections: per-vertex wall split,
+        shuffle-lane skew, and the serving/kernel event log."""
+        if q.trace is None:
+            return []
+        summ = q.trace.summary()
+        lines: List[str] = []
+        verts = summ.get("vertices", {})
+        if verts:
+            lines.append("vertex breakdown:")
+            for vid, v in verts.items():
+                lines.append(
+                    f"  {vid}: total={v['total_ms']:.3f} ms"
+                    f" compute={v['compute_ms']:.3f} ms"
+                    f" exchange_wait={v['exchange_wait_ms']:.3f} ms"
+                    f" spill_io={v['spill_io_ms']:.3f} ms"
+                    f" rows={v['rows']}")
+                lanes = v.get("lanes")
+                if lanes:
+                    rows = [int(ln.get("rows", 0)) for ln in lanes]
+                    mean = sum(rows) / len(rows)
+                    skew = (max(rows) / mean) if mean else 1.0
+                    lines.append(
+                        f"    lanes={len(rows)}"
+                        f" rows/lane min={min(rows)} max={max(rows)}"
+                        f" skew={skew:.2f}x")
+        dispatches = summ.get("kernel_dispatches", {})
+        if dispatches:
+            lines.append("kernel dispatches:")
+            for name, n in sorted(dispatches.items()):
+                lines.append(f"  {name}: {n}")
+        events = [ev for ev in summ.get("events", [])
+                  if ev.get("cat") in ("serving", "adaptive", "wlm")]
+        if events:
+            lines.append("trace events:")
+            for ev in events:
+                lines.append(f"  +{ev['ts_ms']:.3f} ms [{ev['cat']}] "
+                             f"{ev['name']}")
+        return lines
 
     def _make_ctx(self, cfg, params: Tuple = (),
                   cancel_token=None) -> ExecContext:

@@ -23,6 +23,16 @@ VALID_ENGINES = ("auto", "pallas", "ref")
 
 _REGISTRY: Dict[str, Dict[str, Callable]] = {}
 
+# process-wide dispatch tally per "kernel[backend]" — plain int bumps under
+# the GIL (resolve is not a per-morsel path); surfaced through
+# ``Connection.metrics()`` gauges and dispatch_counts()
+_DISPATCHES: Dict[str, int] = {}
+
+
+def dispatch_counts() -> Dict[str, int]:
+    """Snapshot of per-(kernel, backend) resolve() counts this process."""
+    return dict(_DISPATCHES)
+
 
 def on_tpu() -> bool:
     """Single authority for the TPU check (was duplicated per ops.py)."""
@@ -77,6 +87,8 @@ def resolve(kernel: str, engine: str = "auto") -> Callable:
     if backend not in impls:
         raise KeyError(f"kernel {kernel!r} has no {backend!r} backend; "
                        f"have {backends(kernel)}")
+    key = f"{kernel}[{backend}]"
+    _DISPATCHES[key] = _DISPATCHES.get(key, 0) + 1
     return impls[backend]
 
 

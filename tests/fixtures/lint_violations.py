@@ -6,6 +6,7 @@ deliberate violation per code, nothing else — test_analysis.py asserts the
 exact finding set.
 """
 import threading
+import time
 
 
 def read_knob(config):
@@ -54,3 +55,9 @@ def conjure_columns(VectorBatch, np, inputs):
     # deriving them from the input batch or the declared schema
     for batch in inputs:
         yield VectorBatch({"made_up": np.zeros(batch.num_rows)})
+
+
+def stamp_split(split):
+    # REP007: raw clock read in a traced subsystem — timing must go through
+    # repro.core.obs.clock so traces/metrics share one clock
+    return (split, time.monotonic())

@@ -1,4 +1,4 @@
-"""Tests for the correctness toolkit: invariant lint (REP001..REP006),
+"""Tests for the correctness toolkit: invariant lint (REP001..REP007),
 lockdep sanitizer, structural plan validator, and the config-key registry
 they hang off."""
 import os
@@ -30,7 +30,7 @@ class TestLint:
         findings = lint.lint_file(FIXTURE)
         codes = sorted(f.code for f in findings)
         assert codes == ["REP001", "REP002", "REP003", "REP004", "REP004",
-                         "REP005", "REP005", "REP006"]
+                         "REP005", "REP005", "REP006", "REP007"]
 
     def test_rep001_declared_key_passes(self):
         src = 'def f(config):\n    return config.get("cbo", True)\n'
@@ -167,7 +167,7 @@ class TestLint:
             capture_output=True, text=True, env=env, cwd=REPO_ROOT)
         assert dirty.returncode == 1, dirty.stdout + dirty.stderr
         for code in ("REP001", "REP002", "REP003", "REP004", "REP005",
-                     "REP006"):
+                     "REP006", "REP007"):
             assert code in dirty.stdout
 
 

@@ -297,11 +297,16 @@ def test_explain_validates_param_count(conn):
 def test_cache_hit_short_circuits_stages(conn):
     cur = conn.cursor()
     sql = "SELECT COUNT(*) FROM events WHERE tag = 'red'"
-    cur.execute(sql)
+    miss = cur.execute(sql).info
     info = cur.execute(sql).info
     assert info["cache_hit"] is True
     st = info["stage_times_ms"]
-    assert "execute" not in st and "compile" not in st
+    # a served hit reports the same stage keys as an executed query
+    # (consumers key on stage names); the skipped post-probe stages are
+    # zeroed, not absent — 0 ms spent, not "never happened"
+    assert set(st) == set(miss["stage_times_ms"])
+    assert st["execute"] == 0.0 and st["compile"] == 0.0
+    assert st["cache_probe"] > 0.0
 
 
 def test_legacy_session_execute_shim(conn):
